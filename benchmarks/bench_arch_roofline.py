@@ -1,0 +1,106 @@
+"""The 40-cell (arch x shape) roofline table from the dry-run artifacts.
+
+Reads results/dryrun/*.json (produced by ``repro.launch.dryrun``) and emits
+the EXPERIMENTS.md §Roofline table: three terms, dominant bound,
+MODEL_FLOPS/HLO ratio, roofline fraction, and a what-would-move-it note.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import ALL_ARCHS
+from repro.models.common import SHAPES
+from .common import emit
+
+RESULTS = "results/dryrun"
+
+
+def load_cell(arch: str, shape: str, mesh: str) -> Optional[Dict]:
+    path = os.path.join(RESULTS, f"{arch}__{shape}__{mesh}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _fmt_ms(s: Optional[float]) -> str:
+    if s is None:
+        return "-"
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    return f"{s * 1e3:.1f}ms"
+
+
+def bottleneck_note(d: Dict) -> str:
+    dom = d.get("dominant")
+    scopes = d.get("scopes", {})
+    attn_b = scopes.get("fused_attention", {}).get("bytes", 0.0)
+    if dom == "memory" and attn_b > 0.4 * d.get("hbm_bytes_dev", 1):
+        return "attn scores dominate Q -> flash-attention kernel"
+    if dom == "memory":
+        return "activation/remat traffic -> fuse + recompute policy"
+    if dom == "ici":
+        return "TP/EP collectives -> reshard or overlap (collective matmul)"
+    if dom == "dcn":
+        return "cross-pod grads -> compress (bf16) / overlap with bwd"
+    return "compute-bound -> raise MXU occupancy (larger tiles)"
+
+
+def table(mesh: str = "pod") -> List[str]:
+    header = ("| arch | shape | compute | memory | ici | dcn | bound "
+              "| AI | useful | roofline% | bottleneck note |")
+    sep = "|" + "---|" * 11
+    lines = [header, sep]
+    for arch in ALL_ARCHS:
+        for shape in SHAPES:
+            d = load_cell(arch, shape, mesh)
+            if d is None:
+                continue
+            if d.get("status") == "skipped":
+                lines.append(
+                    f"| {arch} | {shape} | - | - | - | - | skipped | - | - "
+                    f"| - | {d.get('reason', '')} |")
+                continue
+            if d.get("status") != "ok":
+                lines.append(
+                    f"| {arch} | {shape} | - | - | - | - | ERROR | - | - "
+                    f"| - | {d.get('error', '')[:60]} |")
+                continue
+            ur = d.get("useful_ratio")
+            rf = d.get("roofline_fraction")
+            lines.append(
+                "| {a} | {s} | {c} | {m} | {i} | {d} | {b} | {ai:.1f} "
+                "| {ur} | {rf} | {note} |".format(
+                    a=arch, s=shape,
+                    c=_fmt_ms(d.get("compute_s")),
+                    m=_fmt_ms(d.get("memory_s")),
+                    i=_fmt_ms(d.get("ici_s")),
+                    d=_fmt_ms(d.get("dcn_s")),
+                    b=d.get("dominant"),
+                    ai=d.get("arithmetic_intensity", 0.0),
+                    ur=f"{ur:.2f}" if ur else "-",
+                    rf=f"{rf * 100:.2f}%" if rf else "-",
+                    note=bottleneck_note(d)))
+    return lines
+
+
+def main():
+    count_ok = 0
+    for mesh in ("pod", "multipod"):
+        lines = table(mesh)
+        print(f"\n### Roofline table — {mesh} mesh\n")
+        print("\n".join(lines))
+        os.makedirs("results", exist_ok=True)
+        with open(f"results/roofline_table_{mesh}.md", "w") as f:
+            f.write("\n".join(lines) + "\n")
+        count_ok += sum("| skipped |" not in l and "ERROR" not in l
+                        for l in lines[2:])
+    emit("arch_roofline.cells", 0.0, f"rows_emitted={count_ok}")
+
+
+if __name__ == "__main__":
+    main()

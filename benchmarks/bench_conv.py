@@ -1,0 +1,65 @@
+"""Paper Fig. 3-5: convolution rooflines — direct-naive vs direct-blocked
+vs Winograd, cold caches.
+
+On this host the 'scopes' rung of the paper (thread/socket/2-socket)
+collapses to one CPU core; the multi-chip scopes are covered analytically
+by the dry-run roofline table.  What this benchmark reproduces faithfully:
+
+* three convolution algorithms at the same shape,
+* Winograd's ~2.25x Work reduction measured via the W counter,
+* relative execution time (paper's ET%: NCHW direct = 100%),
+* utilization of the measured host roofline per kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from .common import characterize_and_time, emit, plot_points, time_fn
+
+
+def conv_nchw_naive(x, w):
+    """The paper's simple_nchw analogue: NCHW torn into per-channel 2D
+    convs with explicit loops over the kernel window (layout-hostile)."""
+    xn = x.transpose(0, 3, 1, 2)                  # NCHW
+    n, c, h, wd = xn.shape
+    kh, kw, cin, cout = w.shape
+    xp = jnp.pad(xn, ((0, 0), (0, 0), (1, 1), (1, 1)))
+    out = jnp.zeros((n, cout, h, wd), jnp.float32)
+    for dh in range(kh):
+        for dw in range(kw):
+            patch = xp[:, :, dh:dh + h, dw:dw + wd]       # (n, cin, h, w)
+            out = out + jnp.einsum("nchw,cf->nfhw",
+                                   patch.astype(jnp.float32),
+                                   w[dh, dw].astype(jnp.float32))
+    return out.transpose(0, 2, 3, 1).astype(x.dtype)
+
+
+def main():
+    n, hw, cin, cout = 4, 28, 128, 128
+    x = jax.random.normal(jax.random.key(0), (n, hw, hw, cin), jnp.float32)
+    w = jax.random.normal(jax.random.key(1), (3, 3, cin, cout),
+                          jnp.float32) * 0.05
+
+    points = []
+    points.append(characterize_and_time("conv.direct_nchw_naive",
+                                        conv_nchw_naive, x, w))
+    points.append(characterize_and_time("conv.direct_nhwc_blocked",
+                                        ref.conv2d, x, w))
+    points.append(characterize_and_time("conv.winograd",
+                                        ref.conv2d_winograd, x, w))
+    plot_points(points, "convolution roofline (paper fig. 3)")
+
+    base = points[0]["seconds"]
+    for p in points:
+        emit(f"{p['name']}.ET", p["seconds"] * 1e6,
+             f"ET_pct={p['seconds'] / base * 100:.1f}%")
+    # the paper's Winograd claim: less Work than direct
+    ratio = points[1]["W"] / max(points[2]["W"], 1.0)
+    emit("conv.winograd_work_reduction", 0.0, f"W_direct/W_wino={ratio:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper Fig. 8 + §3.4: GELU layout study.
+
+Reproduces: (a) element-wise op -> layout-independent AI when shapes are
+tile-friendly, (b) the forced-blocked C=3 case: padding to the tile width
+multiplies W and Q (the paper measured 2x FLOPs / 4x traffic for 3->8;
+on the TPU's 128-lane tiles the penalty is proportionally larger, which is
+why the framework's layout logic — like oneDNN's — must pick the layout
+per shape instead of forcing blocked everywhere).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import repro.kernels.gelu as gelu_mod
+from repro.kernels import ref
+from .common import characterize_and_time, emit, plot_points
+
+
+def main():
+    # tile-friendly shape: layouts equivalent
+    x = jax.random.normal(jax.random.key(0), (4096, 512), jnp.float32)
+    flat = characterize_and_time("gelu.flat", ref.gelu, x)
+    plot_points([flat], "GELU roofline (paper fig. 8)")
+
+    # the paper's [256, 3, 227, 227]-style shape: C=3, forced blocked
+    xc = jax.random.normal(jax.random.key(1), (256, 227, 3), jnp.float32)
+    natural = characterize_and_time("gelu.c3_natural", ref.gelu, xc)
+    padded8 = characterize_and_time(
+        "gelu.c3_padded8", lambda t: ref.gelu(gelu_mod.pad_channels(t, 8)), xc)
+    padded128 = characterize_and_time(
+        "gelu.c3_padded128",
+        lambda t: ref.gelu(gelu_mod.pad_channels(t, 128)), xc)
+    emit("gelu.forced_blocked_waste", 0.0,
+         f"W8/W={padded8['W'] / natural['W']:.2f};"
+         f"Q8/Q={padded8['Q'] / natural['Q']:.2f};"
+         f"W128/W={padded128['W'] / natural['W']:.1f};"
+         f"Q128/Q={padded128['Q'] / natural['Q']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

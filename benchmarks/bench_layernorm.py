@@ -1,0 +1,28 @@
+"""Paper appendix: layer-normalization roofline (memory-bound primitive)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from .common import characterize_and_time, emit, plot_points
+
+
+def main():
+    points = []
+    for d in (768, 4096):
+        x = jax.random.normal(jax.random.key(0), (8192, d), jnp.float32)
+        s = jnp.ones((d,))
+        b = jnp.zeros((d,))
+        points.append(characterize_and_time(
+            f"layernorm.d{d}", ref.layernorm, x, s, b))
+    plot_points(points, "layernorm roofline (paper appendix)")
+    for p in points:
+        # memory-bound check: AI far left of any ridge
+        emit(f"{p['name']}.bound", 0.0,
+             f"AI={p['AI']:.2f};memory_bound={p['AI'] < 10}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Paper §2.1/§2.2: peak compute and peak bandwidth of the live host,
+with the FMA-chain / streaming probes and warm-vs-cold protocol."""
+
+from __future__ import annotations
+
+from repro.core.roofline import microbench
+from .common import emit
+
+
+def main():
+    res = microbench.run_microbench(cache_path="results/microbench.json",
+                                    quick=True)
+    emit("microbench.fma_peak", 0.0, f"GFLOPs={res.fma_flops / 1e9:.2f}")
+    emit("microbench.matmul_peak", 0.0,
+         f"GFLOPs={res.matmul_flops / 1e9:.2f}")
+    for k, v in res.bandwidth.items():
+        emit(f"microbench.bw_{k}", 0.0, f"GBps={v / 1e9:.2f}")
+    wc = microbench.measure_warm_vs_cold(n=1 << 16, repeats=10)
+    emit("microbench.warm_vs_cold", wc["warm_s"] * 1e6,
+         f"cold_us={wc['cold_s'] * 1e6:.1f};"
+         f"ratio={wc['cold_s'] / max(wc['warm_s'], 1e-12):.2f}")
+    print(f"[microbench] host roofline: pi={res.peak_flops/1e9:.1f} GFLOP/s, "
+          f"beta={res.peak_bw/1e9:.1f} GB/s, "
+          f"ridge AI={res.peak_flops/res.peak_bw:.1f} F/B")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Shared benchmark plumbing: wall-clock timing (paper §2.5 protocol:
+warm-up executions then averaged repeats, with warm/cold cache variants),
+W/Q characterization, roofline placement, CSV rows."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analysis import kernel_character
+from repro.core.roofline import (HOST_CPU_FALLBACK, MicrobenchResult,
+                                 ascii_roofline, run_microbench)
+
+_ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    _ROWS.append(row)
+    print(row, flush=True)
+
+
+def rows() -> List[str]:
+    return list(_ROWS)
+
+
+def time_fn(fn: Callable[[], object], *, warmup: int = 2,
+            repeats: int = 5) -> float:
+    """Paper §2.5.2 warm protocol: run ``warmup`` times, average repeats."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / repeats
+
+
+def time_fn_cold(make_input: Callable[[int], object],
+                 fn: Callable[[object], object], *, repeats: int = 5) -> float:
+    """Paper §2.5.1 cold protocol: fresh (never-touched) input per run."""
+    pool = [make_input(i) for i in range(repeats + 1)]
+    for p in pool:
+        jax.block_until_ready(p)
+    jax.block_until_ready(fn(pool[-1]))  # compile once
+    t0 = time.perf_counter()
+    for i in range(repeats):
+        jax.block_until_ready(fn(pool[i]))
+    return (time.perf_counter() - t0) / repeats
+
+
+class HostRoofline:
+    """Measured host roofline (paper §2.1/2.2) — cached singleton."""
+
+    _inst: Optional["HostRoofline"] = None
+
+    def __init__(self):
+        self.result: MicrobenchResult = run_microbench(
+            cache_path="results/microbench.json", quick=True)
+
+    @classmethod
+    def get(cls) -> "HostRoofline":
+        if cls._inst is None:
+            cls._inst = cls()
+        return cls._inst
+
+    @property
+    def peak_flops(self) -> float:
+        return self.result.peak_flops
+
+    @property
+    def peak_bw(self) -> float:
+        return self.result.peak_bw
+
+    def utilization(self, flops: float, seconds: float) -> float:
+        return flops / seconds / self.peak_flops
+
+    def attainable(self, ai: float) -> float:
+        return min(self.peak_flops, ai * self.peak_bw)
+
+
+def characterize_and_time(name: str, fn, *args, repeats: int = 3) -> Dict:
+    """One kernel dot on the host roofline: W/Q from the HLO cost walk,
+    R from wall clock, utilization vs measured peaks."""
+    char = kernel_character(fn, *args)
+    jitted = jax.jit(fn)
+    dt = time_fn(lambda: jitted(*args), repeats=repeats)
+    host = HostRoofline.get()
+    achieved = char["W_flops"] / dt if dt > 0 else 0.0
+    attain = host.attainable(char["AI"]) or 1.0
+    out = {
+        "name": name,
+        "seconds": dt,
+        "W": char["W_flops"],
+        "Q": char["Q_bytes"],
+        "AI": char["AI"],
+        "achieved_flops": achieved,
+        "utilization_of_peak": achieved / host.peak_flops,
+        "utilization_of_roof": achieved / attain,
+    }
+    emit(name, dt * 1e6,
+         f"AI={out['AI']:.2f};util_peak={out['utilization_of_peak']*100:.1f}%;"
+         f"util_roof={out['utilization_of_roof']*100:.1f}%")
+    return out
+
+
+def plot_points(points, title: str):
+    host = HostRoofline.get()
+    print(f"\n--- {title} ---")
+    print(ascii_roofline(
+        [(p["name"], p["AI"], p["achieved_flops"]) for p in points],
+        peak_flops=host.peak_flops, mem_bw=host.peak_bw,
+        width=68, height=16))
+    print()

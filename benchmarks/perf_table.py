@@ -1,0 +1,84 @@
+"""§Perf hillclimb comparison table: baseline vs variants vs flash-modeled,
+for the three chosen cells.  Reads results/dryrun/*.json."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.core.roofline.substitute import substitute_flash
+from repro.models.common import SHAPES
+
+RESULTS = "results/dryrun"
+
+CELLS = [
+    ("qwen3-14b", "train_4k", "pod",
+     ["baseline", "tp_oproj", "remat_dots", "tp_oproj+remat_dots"]),
+    ("kimi-k2-1t-a32b", "train_4k", "pod",
+     ["baseline", "tp_oproj", "tp_oproj+remat_dots", "cf1.0", "localmoe",
+      "localmoe+remat_dots"]),
+    ("kimi-k2-1t-a32b", "train_4k", "multipod",
+     ["baseline", "compress", "localmoe+compress"]),
+    ("deepseek-v2-236b", "decode_32k", "pod",
+     ["baseline", "absorb", "absorb+localmoe"]),
+    ("deepseek-v2-236b", "train_4k", "pod", ["baseline", "localmoe"]),
+]
+
+
+def load(arch, shape, mesh, variant) -> Optional[Dict]:
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    path = os.path.join(RESULTS, f"{arch}__{shape}__{mesh}{suffix}.json")
+    if not os.path.exists(path):
+        return None
+    d = json.load(open(path))
+    return d if d.get("status") == "ok" else None
+
+
+def fmt(d: Dict) -> List[str]:
+    return [
+        d.get("variant", "baseline"),
+        f"{d['compute_s']:.2f}",
+        f"{d['memory_s']:.2f}",
+        f"{d['ici_s']:.2f}",
+        f"{d['dcn_s']:.2f}",
+        d["dominant"],
+        f"{d['t_lower_s']:.2f}",
+        f"{d['roofline_fraction'] * 100:.2f}%" if d.get("roofline_fraction")
+        else "-",
+    ]
+
+
+HEADER = ["variant", "compute_s", "memory_s", "ici_s", "dcn_s", "dominant",
+          "t_lower_s", "roofline%"]
+
+
+def main():
+    out_lines = []
+    for arch, shape, mesh, variants in CELLS:
+        rows = []
+        base = load(arch, shape, mesh, "baseline")
+        for v in variants:
+            d = load(arch, shape, mesh, v)
+            if d:
+                rows.append(fmt(d))
+                # flash-kernel substitution on top of each compiled variant
+                sub = substitute_flash(d, SHAPES[shape].seq_len)
+                if sub is not None and shape.startswith("train"):
+                    rows.append(fmt(sub))
+        if not rows:
+            continue
+        out_lines.append(f"\n#### {arch} / {shape} / {mesh}\n")
+        out_lines.append("| " + " | ".join(HEADER) + " |")
+        out_lines.append("|" + "---|" * len(HEADER))
+        for r in rows:
+            out_lines.append("| " + " | ".join(r) + " |")
+    text = "\n".join(out_lines)
+    print(text)
+    os.makedirs("results", exist_ok=True)
+    with open("results/perf_table.md", "w") as f:
+        f.write(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark harness entry: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows (and ASCII roofline plots).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (bench_arch_roofline, bench_conv, bench_gelu,
+               bench_inner_product, bench_layernorm, bench_microbench,
+               bench_pooling)
+from .common import rows
+
+ALL = {
+    "microbench": bench_microbench.main,       # paper §2.1-2.2
+    "conv": bench_conv.main,                   # paper fig. 3-5
+    "inner_product": bench_inner_product.main,  # paper fig. 6
+    "pooling": bench_pooling.main,             # paper fig. 7 + §3.5
+    "gelu": bench_gelu.main,                   # paper fig. 8 + §3.4
+    "layernorm": bench_layernorm.main,         # paper appendix
+    "arch_roofline": bench_arch_roofline.main,  # 40-cell §Roofline table
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=sorted(ALL), default=None)
+    args = ap.parse_args()
+    failed = []
+    names = [args.only] if args.only else list(ALL)
+    print("name,us_per_call,derived")
+    for name in names:
+        print(f"\n===== bench: {name} =====", flush=True)
+        try:
+            ALL[name]()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    print(f"\n===== {len(rows())} CSV rows; {len(failed)} failures =====")
+    if failed:
+        print("FAILED:", failed)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

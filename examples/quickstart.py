@@ -1,0 +1,62 @@
+"""Quickstart: build a model, characterize its training step on the
+roofline (the paper's methodology as a library), train a few steps, decode.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke
+from repro.core.analysis import analyze_step
+from repro.core.roofline.hardware import HOST_CPU_FALLBACK
+from repro.models import decode_step, init_cache, init_params, loss_fn
+from repro.models.common import model_flops
+from repro.parallel.mesh import make_host_mesh
+from repro.parallel.sharding import sharding_context
+from repro.serve import Engine, GenerateConfig
+from repro.train import OptConfig, TrainConfig, init_opt_state, make_train_step
+
+
+def main():
+    # 1. a reduced qwen3 (same family structure, CPU-scale)
+    cfg = smoke(get_config("qwen3-0.6b"))
+    params = init_params(cfg, jax.random.key(0))
+    print(f"model: {cfg.name}, "
+          f"{sum(x.size for x in jax.tree.leaves(params)) / 1e6:.2f}M params")
+
+    # 2. roofline-characterize the train step BEFORE running it
+    mesh = make_host_mesh(data=1, model=1)
+    B, S = 4, 64
+    state = {"params": params, "opt": init_opt_state(params)}
+    batch = {
+        "tokens": jnp.zeros((B, S), jnp.int32),
+        "labels": jnp.zeros((B, S), jnp.int32),
+    }
+    step = make_train_step(cfg, TrainConfig(opt=OptConfig(lr=1e-3)))
+    with sharding_context(mesh):
+        report, compiled = analyze_step(
+            step, args=(jax.eval_shape(lambda: state),
+                        jax.eval_shape(lambda: batch)),
+            mesh=mesh, label="quickstart train step",
+            chip=HOST_CPU_FALLBACK, dtype="float32",
+            model_flops=model_flops(cfg, S, B, "train"))
+    print(report.render())
+
+    # 3. train a few steps on synthetic data
+    from repro.train import SyntheticLMData
+    data = SyntheticLMData(cfg, B, S)
+    for i in range(5):
+        state, metrics = compiled(state, data.batch_at(i))
+        print(f"  step {i}: loss={float(metrics['loss']):.4f} "
+              f"lr={float(metrics['lr']):.2e}")
+
+    # 4. decode with the serving engine
+    engine = Engine(cfg, state["params"])
+    prompts = jnp.ones((2, 8), jnp.int32)
+    out = engine.generate(prompts, GenerateConfig(max_new_tokens=8))
+    print("decoded:", out["tokens"][0, 8:].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""The paper's contribution as a feature: automatic roofline construction
+for (a) the live host via microbenchmarks, (b) any jitted function, and
+(c) an assigned architecture cell from the archived dry-run.
+
+    PYTHONPATH=src python examples/roofline_analysis.py
+"""
+
+import glob
+import gzip
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analysis import kernel_character
+from repro.core.roofline import (ascii_roofline, run_microbench)
+from repro.kernels import ref
+
+
+def main():
+    # (a) measure the host's roofline (paper §2.1-2.2)
+    mb = run_microbench(cache_path="results/microbench.json", quick=True)
+    print(f"host: pi={mb.peak_flops / 1e9:.1f} GFLOP/s, "
+          f"beta={mb.peak_bw / 1e9:.1f} GB/s")
+
+    # (b) place kernels on it (paper §3)
+    pts = []
+    x = jax.random.normal(jax.random.key(0), (512, 512))
+    w = jax.random.normal(jax.random.key(1), (512, 512))
+    for name, fn, args in [
+        ("matmul", ref.inner_product, (x, w)),
+        ("gelu", ref.gelu, (x,)),
+        ("layernorm", ref.layernorm,
+         (x, jnp.ones((512,)), jnp.zeros((512,)))),
+    ]:
+        c = kernel_character(fn, *args)
+        import time
+        jitted = jax.jit(fn)
+        jax.block_until_ready(jitted(*args))
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(jitted(*args))
+        dt = (time.perf_counter() - t0) / 5
+        pts.append((name, c["AI"], c["W_flops"] / dt))
+    print(ascii_roofline(pts, peak_flops=mb.peak_flops, mem_bw=mb.peak_bw))
+
+    # (c) read an archived dry-run cell (TPU-target analysis)
+    cells = sorted(glob.glob("results/dryrun/qwen3-14b__train_4k__pod.json"))
+    if cells:
+        d = json.load(open(cells[0]))
+        if d.get("status") == "ok":
+            print(f"\nqwen3-14b/train_4k on a v5e pod: bound={d['bound']}, "
+                  f"t_lower={d['t_lower_s']:.3f}s, "
+                  f"roofline fraction={d['roofline_fraction'] * 100:.2f}%")
+
+
+if __name__ == "__main__":
+    main()

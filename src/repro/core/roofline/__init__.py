@@ -1,0 +1,58 @@
+"""Automatic roofline construction (the paper's core contribution, TPU-native).
+
+Public surface:
+
+    from repro.core.roofline import (
+        TPU_V5E, chip_scope, pod_scope, multipod_scope, scope_for_mesh,
+        characterize, terms_from_character, RooflineTerms,
+        render_report, ascii_roofline,
+    )
+"""
+
+from .hardware import (
+    ChipSpec,
+    ScopeSpec,
+    TPU_V5E,
+    HOST_CPU_FALLBACK,
+    chip_scope,
+    pod_scope,
+    multipod_scope,
+    scope_for_mesh,
+)
+from .hlo import (
+    CollectiveOp,
+    CollectiveSummary,
+    parse_collectives,
+    attribute_axes,
+    shape_bytes,
+)
+from .extract import (
+    StepCharacter,
+    MemoryFootprint,
+    characterize,
+    terms_from_character,
+    character_as_dict,
+)
+from .model import RooflineTerms, make_terms
+from .report import (
+    render_report,
+    ascii_roofline,
+    markdown_table,
+    text_table,
+    terms_row,
+    TERMS_HEADER,
+)
+from .microbench import run_microbench, MicrobenchResult
+
+__all__ = [
+    "ChipSpec", "ScopeSpec", "TPU_V5E", "HOST_CPU_FALLBACK",
+    "chip_scope", "pod_scope", "multipod_scope", "scope_for_mesh",
+    "CollectiveOp", "CollectiveSummary", "parse_collectives",
+    "attribute_axes", "shape_bytes",
+    "StepCharacter", "MemoryFootprint", "characterize",
+    "terms_from_character", "character_as_dict",
+    "RooflineTerms", "make_terms",
+    "render_report", "ascii_roofline", "markdown_table", "text_table",
+    "terms_row", "TERMS_HEADER",
+    "run_microbench", "MicrobenchResult",
+]

@@ -1,0 +1,169 @@
+"""Extract the paper's (W, Q, R) kernel character from XLA artifacts.
+
+Paper protocol -> XLA mapping:
+
+* Work W            : ``compiled.cost_analysis()["flops"]``  (per-device)
+* Traffic Q         : ``cost_analysis()["bytes accessed"]``  (per-device,
+                      post-fusion == cache-filtered DRAM traffic analogue)
+* Collective traffic: parsed from ``compiled.as_text()`` (hlo.py) — the
+                      "uncore counter" of the distributed machine
+* Overhead subtraction: the paper runs kernel / no-kernel pairs and subtracts
+                      PMU counts; ``subtract`` lets callers do the same with
+                      an empty-step compilation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+from . import hlo as hlo_mod
+from . import hlo_cost
+from .hardware import ScopeSpec
+from .model import RooflineTerms, make_terms
+
+
+@dataclasses.dataclass
+class MemoryFootprint:
+    argument_bytes: int = 0
+    output_bytes: int = 0
+    temp_bytes: int = 0
+    generated_code_bytes: int = 0
+
+    @property
+    def peak_bytes(self) -> int:
+        return self.argument_bytes + self.output_bytes + self.temp_bytes
+
+    @classmethod
+    def from_compiled(cls, compiled) -> "MemoryFootprint":
+        try:
+            ma = compiled.memory_analysis()
+        except Exception:
+            return cls()
+        if ma is None:
+            return cls()
+        return cls(
+            argument_bytes=int(getattr(ma, "argument_size_in_bytes", 0)),
+            output_bytes=int(getattr(ma, "output_size_in_bytes", 0)),
+            temp_bytes=int(getattr(ma, "temp_size_in_bytes", 0)),
+            generated_code_bytes=int(getattr(ma, "generated_code_size_in_bytes", 0)),
+        )
+
+
+@dataclasses.dataclass
+class StepCharacter:
+    """Everything measured about one compiled step (per-device units)."""
+
+    flops_dev: float
+    hbm_bytes_dev: float
+    transcendentals_dev: float
+    collectives: hlo_mod.CollectiveSummary
+    memory: MemoryFootprint
+    op_counts: Dict[str, int]
+    cost_raw: Dict[str, float]
+    scopes: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # named_scope tag -> {"flops": f, "bytes": b} (per-device)
+
+    def subtract(self, overhead: "StepCharacter") -> "StepCharacter":
+        """Paper's framework-overhead subtraction (run minus no-run)."""
+        return dataclasses.replace(
+            self,
+            flops_dev=max(self.flops_dev - overhead.flops_dev, 0.0),
+            hbm_bytes_dev=max(self.hbm_bytes_dev - overhead.hbm_bytes_dev, 0.0),
+            transcendentals_dev=max(
+                self.transcendentals_dev - overhead.transcendentals_dev, 0.0
+            ),
+        )
+
+
+_INTERESTING_OPS = (
+    "fusion", "sort", "gather", "scatter", "while", "convolution",
+    "dot", "transpose", "reshape", "copy",
+) + hlo_mod.COLLECTIVE_KINDS
+
+
+def characterize(compiled, mesh=None) -> StepCharacter:
+    """Build a StepCharacter from a ``jax.stages.Compiled`` object.
+
+    W/Q/collectives come from the full-module HLO cost walk
+    (:mod:`hlo_cost`) because ``cost_analysis()`` counts while-loop bodies
+    once (see hlo_cost docstring — the paper's §2.4 lesson).  The naive
+    counter is retained in ``cost_raw`` with a ``naive_`` prefix so both
+    channels are visible, exactly like the paper reports both the
+    LLC-derived and IMC-derived traffic.
+    """
+    cost = compiled.cost_analysis() or {}
+    # jax<0.5 returned [dict]; 0.8 returns dict
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    raw = {f"naive_{k.replace(' ', '_')}": float(v)
+           for k, v in cost.items() if isinstance(v, (int, float))}
+    return characterize_text(
+        compiled.as_text(), mesh,
+        memory=MemoryFootprint.from_compiled(compiled), cost_raw=raw)
+
+
+def characterize_text(text: str, mesh=None, *,
+                      memory: Optional[MemoryFootprint] = None,
+                      cost_raw: Optional[Dict[str, float]] = None
+                      ) -> StepCharacter:
+    """Characterize from saved partitioned-HLO text (re-analysis without
+    recompiling — the dry-run archives every cell's module)."""
+    mc = hlo_cost.module_cost(text)
+    n_dev = int(mesh.devices.size) if mesh is not None else None
+    ops = hlo_mod.collectives_from_cost(mc.collectives, total_devices=n_dev)
+    if mesh is not None:
+        hlo_mod.attribute_axes(ops, mesh)
+    summary = hlo_mod.CollectiveSummary.from_ops(ops)
+    return StepCharacter(
+        flops_dev=mc.flops,
+        hbm_bytes_dev=mc.bytes,
+        transcendentals_dev=mc.transcendentals,
+        collectives=summary,
+        memory=memory or MemoryFootprint(),
+        op_counts=hlo_mod.count_ops(text, _INTERESTING_OPS),
+        cost_raw=cost_raw or {},
+        scopes={k: {"flops": v[0], "bytes": v[1]}
+                for k, v in mc.scopes.items()},
+    )
+
+
+def terms_from_character(
+    char: StepCharacter,
+    scope: ScopeSpec,
+    *,
+    dtype: str = "bfloat16",
+    model_flops_total: Optional[float] = None,
+) -> RooflineTerms:
+    return make_terms(
+        scope=scope,
+        dtype=dtype,
+        flops_dev=char.flops_dev,
+        hbm_bytes_dev=char.hbm_bytes_dev,
+        ici_wire_bytes_dev=char.collectives.ici_wire_bytes,
+        dcn_wire_bytes_dev=char.collectives.dcn_wire_bytes,
+        transcendentals_dev=char.transcendentals_dev,
+        model_flops_total=model_flops_total,
+    )
+
+
+def character_as_dict(char: StepCharacter) -> Dict[str, Any]:
+    """JSON-serializable dump (feeds EXPERIMENTS.md §Dry-run)."""
+    return {
+        "flops_dev": char.flops_dev,
+        "hbm_bytes_dev": char.hbm_bytes_dev,
+        "transcendentals_dev": char.transcendentals_dev,
+        "collective_wire_bytes_dev": char.collectives.total_wire_bytes,
+        "collective_ici_bytes_dev": char.collectives.ici_wire_bytes,
+        "collective_dcn_bytes_dev": char.collectives.dcn_wire_bytes,
+        "collective_by_kind": dict(char.collectives.by_kind),
+        "collective_by_axes": {
+            "+".join(k) if k else "(unattributed)": v
+            for k, v in char.collectives.by_axes.items()
+        },
+        "n_collective_ops": char.collectives.n_ops,
+        "memory": dataclasses.asdict(char.memory),
+        "op_counts": char.op_counts,
+        "scopes": char.scopes,
+        "cost_raw": char.cost_raw,
+    }

@@ -1,0 +1,161 @@
+"""Hardware descriptions for roofline construction.
+
+The paper builds rooflines for three NUMA *scopes* of a 2-socket Xeon
+(single thread / single socket / two sockets), each with its own peak compute
+``pi`` and peak bandwidth ``beta``.  Our target is a TPU v5e fleet, whose
+analogous hierarchy is  chip -> pod (ICI-connected 16x16) -> multi-pod
+(DCN-connected).  Each scope carries the three roofline ceilings used by
+:mod:`repro.core.roofline.model`:
+
+* ``peak_flops``      -- aggregate compute ceiling of the scope [FLOP/s]
+* ``hbm_bw``          -- aggregate HBM bandwidth [B/s]
+* ``interconnect_bw`` -- aggregate bandwidth of the *slowest interconnect
+                         crossed inside the scope* [B/s] (ICI within a pod,
+                         DCN across pods).  This is the distributed analogue
+                         of the paper's cross-socket UPI concern.
+
+Constants per the assignment: 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.  DCN per-chip egress is an explicit, documented assumption
+(v5e-era multislice deployments budget ~12.5 GB/s/chip); it only affects the
+multi-pod scope, never the single-pod roofline table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    """Peak capabilities of one accelerator chip."""
+
+    name: str
+    peak_flops: float            # FLOP/s at the benchmark dtype
+    peak_flops_by_dtype: Mapping[str, float]
+    hbm_bw: float                # bytes/s
+    hbm_bytes: int               # capacity, bytes
+    ici_bw: float                # bytes/s per link
+    ici_links: int               # usable links per chip in a 2D torus
+    dcn_bw: float                # bytes/s per chip, cross-pod egress
+    vmem_bytes: int              # on-chip vector memory
+    mxu_dim: int = 128           # systolic array edge
+
+    def flops_for(self, dtype: str) -> float:
+        return float(self.peak_flops_by_dtype.get(dtype, self.peak_flops))
+
+
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_flops=197e12,
+    peak_flops_by_dtype={
+        "bfloat16": 197e12,
+        "float32": 98.5e12,   # bf16 inputs / f32 accumulate path, half rate for f32 ops
+        "int8": 394e12,
+        "float16": 197e12,
+    },
+    hbm_bw=819e9,
+    hbm_bytes=16 * 1024**3,
+    ici_bw=50e9,
+    ici_links=4,
+    dcn_bw=12.5e9,
+    vmem_bytes=128 * 1024**2,
+)
+
+
+# The host this container runs on.  ``microbench.py`` *measures* the real
+# numbers with the paper's protocol; these are fallbacks so analysis is
+# deterministic when the microbench hasn't been run.
+HOST_CPU_FALLBACK = ChipSpec(
+    name="host_cpu",
+    peak_flops=50e9,
+    peak_flops_by_dtype={"float32": 50e9},
+    hbm_bw=10e9,
+    hbm_bytes=32 * 1024**3,
+    ici_bw=10e9,
+    ici_links=1,
+    dcn_bw=1e9,
+    vmem_bytes=32 * 1024**2,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScopeSpec:
+    """A resource scope = the paper's thread/socket/two-socket rung.
+
+    ``n_chips`` chips act as one roofline platform.  ``interconnect_bw`` is
+    aggregate: chips x per-chip attainable bandwidth on the scope's weakest
+    crossed link class.
+    """
+
+    name: str
+    chip: ChipSpec
+    n_chips: int
+    interconnect: str            # "none" | "ici" | "dcn"
+
+    @property
+    def peak_flops(self) -> float:
+        return self.chip.peak_flops * self.n_chips
+
+    def peak_flops_for(self, dtype: str) -> float:
+        return self.chip.flops_for(dtype) * self.n_chips
+
+    @property
+    def hbm_bw(self) -> float:
+        return self.chip.hbm_bw * self.n_chips
+
+    @property
+    def hbm_bytes(self) -> int:
+        return self.chip.hbm_bytes * self.n_chips
+
+    @property
+    def interconnect_bw(self) -> float:
+        if self.interconnect == "none":
+            return float("inf")
+        if self.interconnect == "ici":
+            return self.chip.ici_bw * self.n_chips
+        if self.interconnect == "dcn":
+            return self.chip.dcn_bw * self.n_chips
+        raise ValueError(f"unknown interconnect {self.interconnect!r}")
+
+    def per_chip_link_bw(self, kind: str) -> float:
+        return self.chip.ici_bw if kind == "ici" else self.chip.dcn_bw
+
+
+def chip_scope(chip: ChipSpec = TPU_V5E) -> ScopeSpec:
+    """Single chip — the paper's 'single thread' rung."""
+    return ScopeSpec("chip", chip, 1, "none")
+
+
+def pod_scope(chip: ChipSpec = TPU_V5E, n_chips: int = 256) -> ScopeSpec:
+    """One ICI-connected pod — the paper's 'single socket' rung."""
+    return ScopeSpec("pod", chip, n_chips, "ici")
+
+
+def multipod_scope(chip: ChipSpec = TPU_V5E, n_pods: int = 2,
+                   chips_per_pod: int = 256) -> ScopeSpec:
+    """DCN-connected multislice — the paper's 'two sockets' rung."""
+    return ScopeSpec("multipod", chip, n_pods * chips_per_pod, "dcn")
+
+
+def scope_for_mesh(mesh_shape: Mapping[str, int], chip: ChipSpec = TPU_V5E) -> ScopeSpec:
+    """Pick the scope that matches a mesh: a ``pod`` axis implies DCN."""
+    n = 1
+    for v in mesh_shape.values():
+        n *= int(v)
+    if mesh_shape.get("pod", 1) > 1:
+        return ScopeSpec("multipod", chip, n, "dcn")
+    if n == 1:
+        return chip_scope(chip)
+    return ScopeSpec("pod", chip, n, "ici")
+
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3": 1, "f8e5m2": 1, "f8e4m3fn": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+    "token": 0, "opaque": 0,
+}

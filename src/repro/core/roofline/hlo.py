@@ -1,0 +1,298 @@
+"""Partitioned-HLO parsing: the distributed analogue of the paper's IMC
+uncore counters.
+
+The paper discovered that cache-level PMU counters under-count DRAM traffic
+(prefetchers bypass them) and had to drop to the memory-controller (uncore)
+counters to see the wire truth.  The XLA analogue: ``cost_analysis()`` does
+not report collective traffic at all, so we parse the SPMD-partitioned module
+text (``compiled.as_text()``) and account every collective op's bytes on the
+wire, with ring-algorithm factors, attributed to the mesh axes its replica
+groups span (ICI within a pod vs DCN across the ``pod`` axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .hardware import DTYPE_BYTES
+
+COLLECTIVE_KINDS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# one regex per HLO op line:   %name = <shape> <op>(<operands>), <attrs>
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*"
+    r"(?P<shape>\([^)]*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>[a-z0-9\-]+)"
+    r"(?:-start)?\(",
+)
+
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([0-9,\s]*)\]")
+
+_REPLICA_GROUPS_RE = re.compile(
+    r"replica_groups=(\{\{[^=]*?\}\}|\{\}|\[[\d,]+\]<=\[[\d,]+\](?:T\([\d,]+\))?)"
+)
+
+_SOURCE_TARGET_RE = re.compile(r"source_target_pairs=\{([^}]*)\}")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string (tuples summed)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in DTYPE_BYTES:
+            # f8e4m3fn etc. default to 1; unknown exotic types -> 4
+            nbytes = 1 if dtype.startswith(("f8", "s4", "u4")) else 4
+        else:
+            nbytes = DTYPE_BYTES[dtype]
+        n = 1
+        dims = dims.strip()
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * nbytes
+    return total
+
+
+def _parse_replica_groups(attr: str) -> Optional[List[List[int]]]:
+    """Parse both literal ``{{0,1},{2,3}}`` and iota ``[g,s]<=[dims]T(p)``."""
+    attr = attr.strip()
+    if attr == "{}":
+        return None
+    if attr.startswith("{{"):
+        groups = []
+        for grp in re.findall(r"\{([\d,\s]*)\}", attr):
+            grp = grp.strip()
+            if grp:
+                groups.append([int(x) for x in grp.split(",")])
+        return groups or None
+    m = re.match(r"\[([\d,]+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?", attr)
+    if m:
+        out_dims = [int(x) for x in m.group(1).split(",")]
+        in_dims = [int(x) for x in m.group(2).split(",")]
+        arr = np.arange(int(np.prod(in_dims))).reshape(in_dims)
+        if m.group(3):
+            perm = [int(x) for x in m.group(3).split(",")]
+            arr = arr.transpose(perm)
+        arr = arr.reshape(out_dims)
+        return [list(map(int, row)) for row in arr]
+    return None
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str                 # one of COLLECTIVE_KINDS
+    result_bytes: int         # per-device result shape bytes
+    operand_bytes: int        # per-device operand shape bytes
+    group_size: int           # participants in each replica group
+    groups: Optional[List[List[int]]]
+    axes: Tuple[str, ...] = ()    # mesh axes the groups span (filled by attribute_axes)
+    link: str = "ici"             # "ici" | "dcn"
+    line: str = ""
+    mult: float = 1.0             # enclosing-loop trip multiplier
+
+    @property
+    def payload_bytes(self) -> float:
+        return max(self.result_bytes, self.operand_bytes)
+
+    @property
+    def wire_bytes(self) -> float:
+        """Bytes each device puts on the wire (ring algorithm), x trips."""
+        n = max(self.group_size, 1)
+        if n == 1:
+            return 0.0
+        ring = (n - 1) / n
+        if self.kind == "all-reduce":
+            base = 2.0 * self.payload_bytes * ring
+        elif self.kind == "collective-permute":
+            base = float(self.payload_bytes)
+        else:  # all-gather / reduce-scatter / all-to-all
+            base = self.payload_bytes * ring
+        return base * self.mult
+
+
+def parse_collectives(hlo_text: str, total_devices: Optional[int] = None) -> List[CollectiveOp]:
+    """Extract every collective op from a partitioned HLO module text.
+
+    Async ``-start``/``-done`` pairs are counted once (on the ``-start``).
+    Shapes in the partitioned module are *per-device* shapes.
+    """
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if op.endswith("-done"):
+            continue
+        if op.endswith("-start"):
+            op = op[: -len("-start")]
+        if op not in COLLECTIVE_KINDS:
+            continue
+        result_shape = m.group("shape")
+        # async start ops wrap results in tuples that include the operand
+        # buffer; take the *last* element as the logical result when tupled.
+        result_bytes = shape_bytes(result_shape)
+        if op.endswith("start"):
+            result_bytes //= 2
+        # operand shapes: everything inside the call parens
+        paren = line[m.end() - 1 :]
+        operand_bytes = 0
+        depth = 0
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    operand_bytes = shape_bytes(paren[: i + 1])
+                    break
+        groups = None
+        gm = _REPLICA_GROUPS_RE.search(line)
+        if gm:
+            groups = _parse_replica_groups(gm.group(1))
+        if op == "collective-permute":
+            # pairs define a permutation; "group size" 2 for wire accounting
+            group_size = 2
+            pm = _SOURCE_TARGET_RE.search(line)
+            if pm and groups is None:
+                pairs = re.findall(r"\{(\d+),(\d+)\}", "{" + pm.group(1) + "}")
+                groups = [[int(a), int(b)] for a, b in pairs]
+        elif groups:
+            group_size = len(groups[0])
+        elif total_devices:
+            group_size = total_devices
+        else:
+            group_size = 1
+        ops.append(
+            CollectiveOp(
+                kind=op,
+                result_bytes=result_bytes,
+                operand_bytes=operand_bytes,
+                group_size=group_size,
+                groups=groups,
+                line=line.strip()[:400],
+            )
+        )
+    return ops
+
+
+def collectives_from_cost(cost_collectives, total_devices: Optional[int] = None
+                          ) -> List[CollectiveOp]:
+    """Build CollectiveOps from hlo_cost.ModuleCost.collectives tuples
+    (kind, result_bytes, operand_bytes, attrs, multiplier)."""
+    ops: List[CollectiveOp] = []
+    for kind, rb, ob, attrs, mult in cost_collectives:
+        groups = None
+        gm = _REPLICA_GROUPS_RE.search(attrs or "")
+        if gm:
+            groups = _parse_replica_groups(gm.group(1))
+        if kind == "collective-permute":
+            group_size = 2
+            pm = _SOURCE_TARGET_RE.search(attrs or "")
+            if pm and groups is None:
+                pairs = re.findall(r"\{(\d+),(\d+)\}", "{" + pm.group(1) + "}")
+                groups = [[int(a), int(b)] for a, b in pairs]
+        elif groups:
+            group_size = len(groups[0])
+        elif total_devices:
+            group_size = total_devices
+        else:
+            group_size = 1
+        ops.append(CollectiveOp(
+            kind=kind, result_bytes=int(rb), operand_bytes=int(ob),
+            group_size=group_size, groups=groups,
+            line=(attrs or "")[:400], mult=float(mult)))
+    return ops
+
+
+def attribute_axes(ops: Sequence[CollectiveOp], mesh) -> None:
+    """Mark which mesh axes each collective spans and whether it crosses DCN.
+
+    ``mesh`` is a ``jax.sharding.Mesh``; device ids in replica groups index
+    the flattened (row-major) mesh device array for SPMD modules.
+    """
+    shape = tuple(mesh.devices.shape)
+    names = tuple(mesh.axis_names)
+    id_to_coord: Dict[int, Tuple[int, ...]] = {}
+    flat = mesh.devices.reshape(-1)
+    for flat_idx, dev in enumerate(flat):
+        coord = np.unravel_index(flat_idx, shape)
+        id_to_coord[int(dev.id)] = tuple(int(c) for c in coord)
+
+    for op in ops:
+        if not op.groups:
+            op.axes = names  # conservatively assume it spans everything
+            op.link = "dcn" if "pod" in names and shape[names.index("pod")] > 1 else "ici"
+            continue
+        varying = set()
+        for grp in op.groups[:4]:  # groups are congruent; sample a few
+            coords = [id_to_coord.get(d) for d in grp if d in id_to_coord]
+            coords = [c for c in coords if c is not None]
+            if len(coords) < 2:
+                continue
+            base = coords[0]
+            for c in coords[1:]:
+                for ax_i, (a, b) in enumerate(zip(base, c)):
+                    if a != b:
+                        varying.add(names[ax_i])
+        op.axes = tuple(n for n in names if n in varying)
+        op.link = "dcn" if "pod" in op.axes else "ici"
+
+
+@dataclasses.dataclass
+class CollectiveSummary:
+    total_wire_bytes: float          # per-device, all links
+    ici_wire_bytes: float            # per-device, ICI-only
+    dcn_wire_bytes: float            # per-device, DCN (pod axis)
+    by_kind: Dict[str, float]
+    by_axes: Dict[Tuple[str, ...], float]
+    n_ops: int
+    top_ops: List[CollectiveOp]
+
+    @classmethod
+    def from_ops(cls, ops: Sequence[CollectiveOp]) -> "CollectiveSummary":
+        by_kind: Dict[str, float] = {}
+        by_axes: Dict[Tuple[str, ...], float] = {}
+        ici = dcn = 0.0
+        for op in ops:
+            w = op.wire_bytes
+            by_kind[op.kind] = by_kind.get(op.kind, 0.0) + w
+            by_axes[op.axes] = by_axes.get(op.axes, 0.0) + w
+            if op.link == "dcn":
+                dcn += w
+            else:
+                ici += w
+        top = sorted(ops, key=lambda o: -o.wire_bytes)[:12]
+        return cls(
+            total_wire_bytes=ici + dcn,
+            ici_wire_bytes=ici,
+            dcn_wire_bytes=dcn,
+            by_kind=by_kind,
+            by_axes=by_axes,
+            n_ops=len(ops),
+            top_ops=list(top),
+        )
+
+
+def count_ops(hlo_text: str, names: Sequence[str]) -> Dict[str, int]:
+    """Crude op-frequency counter (used to spot remat duplication, sorts...)."""
+    counts = {n: 0 for n in names}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if op in counts:
+            counts[op] += 1
+    return counts

@@ -1,0 +1,226 @@
+"""Peak-capability microbenchmarks — the paper's §2.1/§2.2 on the live host.
+
+The paper measures peak compute with runtime-generated FMA chains (Xbyak) so
+results are compiler-agnostic, and peak bandwidth as the max over several
+streaming probes (memset / memcpy / non-temporal stores), with warm and cold
+cache protocols.  Here the "runtime code generator" is XLA itself: we emit
+dependency-parallel FMA loops through jit (dead-code-safe because the loop
+carry is returned), and streaming copy / fill / triad probes for bandwidth.
+
+These numbers characterize the machine the container actually runs on; the
+TPU roofline table uses the v5e data-sheet constants (hardware.py) since no
+TPU is attached.  The protocol is identical, so pointing this module at a
+real TPU backend reproduces the paper's pipeline end to end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hardware import ChipSpec, HOST_CPU_FALLBACK
+
+
+def _time_best(fn: Callable[[], None], *, repeats: int = 5, warmup: int = 2) -> float:
+    """Best-of-N wall time; paper uses averages, best-of is stabler on a
+    shared 1-core container and strictly optimistic (upper-bounds the roof)."""
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        dt = time.perf_counter() - t0
+        best = min(best, dt)
+    return best
+
+
+# --------------------------------------------------------------------------
+# Peak compute: chained FMA sweeps (paper fig. 2 analogue)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _fma_loop(x: jax.Array, iters: int) -> jax.Array:
+    a = jnp.float32(1.000000119)    # keep values bounded, non-degenerate
+    b = jnp.float32(1e-7)
+
+    def body(_, v):
+        # 4 independent FMA streams per iteration (RAW-chain avoidance,
+        # mirroring the paper's zmm0..zmm7 rotation)
+        v0 = v * a + b
+        v1 = v0 * a + b
+        v2 = v1 * a + b
+        v3 = v2 * a + b
+        return v3
+
+    return jax.lax.fori_loop(0, iters, body, x)
+
+
+def measure_peak_flops(size: int = 1 << 20, iters: int = 512,
+                       repeats: int = 5) -> float:
+    """FLOP/s of an unrollable FMA stream resident in cache."""
+    x = jnp.ones((size,), jnp.float32)
+    _fma_loop(x, iters).block_until_ready()
+
+    def run():
+        _fma_loop(x, iters).block_until_ready()
+
+    dt = _time_best(run, repeats=repeats)
+    flops = 2.0 * 4.0 * size * iters     # 4 FMAs/iter, 2 FLOP each
+    return flops / dt
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _matmul_loop(x: jax.Array, y: jax.Array, iters: int) -> jax.Array:
+    def body(_, v):
+        return jnp.tanh(v @ y) * 0.5 + v * 0.5
+
+    return jax.lax.fori_loop(0, iters, body, x)
+
+
+def measure_peak_matmul_flops(n: int = 512, iters: int = 8,
+                              repeats: int = 5) -> float:
+    """FLOP/s through the dot path (MXU analogue); typically the real roof."""
+    k = jax.random.key(0)
+    x = jax.random.normal(k, (n, n), jnp.float32) * 0.01
+    y = jax.random.normal(jax.random.key(1), (n, n), jnp.float32) * 0.01
+    _matmul_loop(x, y, iters).block_until_ready()
+
+    def run():
+        _matmul_loop(x, y, iters).block_until_ready()
+
+    dt = _time_best(run, repeats=repeats)
+    return (2.0 * n ** 3 + 2 * n * n) * iters / dt
+
+
+# --------------------------------------------------------------------------
+# Peak bandwidth: copy / fill / triad probes (paper memset/memcpy/NT stores)
+# --------------------------------------------------------------------------
+
+@jax.jit
+def _copy(x):
+    return x + jnp.float32(0)      # forces a materialized copy
+
+
+@jax.jit
+def _fill(x):
+    return jnp.full_like(x, 1.5) + x * 0   # memset analogue keeping x live
+
+
+@jax.jit
+def _triad(a, b):
+    return a * jnp.float32(3.0) + b
+
+
+def measure_peak_bandwidth(nbytes: int = 1 << 29, repeats: int = 5) -> Dict[str, float]:
+    """Max over streaming probes, 0.5 GiB buffers as in the paper."""
+    n = nbytes // 4
+    x = jnp.arange(n, dtype=jnp.float32)
+    b = jnp.ones((n,), jnp.float32)
+    results = {}
+
+    _copy(x).block_until_ready()
+    results["copy"] = 2.0 * nbytes / _time_best(
+        lambda: _copy(x).block_until_ready(), repeats=repeats)
+
+    _fill(x).block_until_ready()
+    results["fill"] = 2.0 * nbytes / _time_best(
+        lambda: _fill(x).block_until_ready(), repeats=repeats)
+
+    _triad(x, b).block_until_ready()
+    results["triad"] = 3.0 * nbytes / _time_best(
+        lambda: _triad(x, b).block_until_ready(), repeats=repeats)
+
+    results["best"] = max(results.values())
+    return results
+
+
+def measure_warm_vs_cold(n: int = 1 << 16, repeats: int = 20) -> Dict[str, float]:
+    """Paper §2.5.1/2.5.2: same kernel, cache-resident vs evicted inputs.
+
+    Returns wall times; the cold run streams a fresh buffer each call (so the
+    input cannot be cache-resident), the warm run reuses one buffer.
+    """
+    y = jnp.ones((n,), jnp.float32)
+
+    @jax.jit
+    def kern(v):
+        return jnp.sum(v * 2.0 + 1.0)
+
+    kern(y).block_until_ready()
+    warm = _time_best(lambda: kern(y).block_until_ready(), repeats=repeats)
+
+    # cold: rotate through buffers larger than any cache level
+    pool = [jnp.ones((n,), jnp.float32) * i for i in range(16)]
+    for p in pool:
+        p.block_until_ready()
+    idx = [0]
+
+    def cold_run():
+        kern(pool[idx[0] % len(pool)]).block_until_ready()
+        idx[0] += 1
+
+    cold = _time_best(cold_run, repeats=repeats)
+    return {"warm_s": warm, "cold_s": cold}
+
+
+# --------------------------------------------------------------------------
+# Assembly into a measured ChipSpec (cached)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MicrobenchResult:
+    fma_flops: float
+    matmul_flops: float
+    bandwidth: Dict[str, float]
+
+    @property
+    def peak_flops(self) -> float:
+        return max(self.fma_flops, self.matmul_flops)
+
+    @property
+    def peak_bw(self) -> float:
+        return self.bandwidth["best"]
+
+    def to_chipspec(self) -> ChipSpec:
+        return ChipSpec(
+            name="host_cpu_measured",
+            peak_flops=self.peak_flops,
+            peak_flops_by_dtype={"float32": self.peak_flops},
+            hbm_bw=self.peak_bw,
+            hbm_bytes=HOST_CPU_FALLBACK.hbm_bytes,
+            ici_bw=self.peak_bw,
+            ici_links=1,
+            dcn_bw=HOST_CPU_FALLBACK.dcn_bw,
+            vmem_bytes=HOST_CPU_FALLBACK.vmem_bytes,
+        )
+
+
+def run_microbench(cache_path: Optional[str] = "results/microbench.json",
+                   quick: bool = False) -> MicrobenchResult:
+    if cache_path and os.path.exists(cache_path):
+        with open(cache_path) as f:
+            d = json.load(f)
+        return MicrobenchResult(d["fma_flops"], d["matmul_flops"], d["bandwidth"])
+    kwargs = dict(repeats=3) if quick else {}
+    res = MicrobenchResult(
+        fma_flops=measure_peak_flops(**({"size": 1 << 18, "iters": 64, "repeats": 3}
+                                        if quick else {})),
+        matmul_flops=measure_peak_matmul_flops(**({"n": 256, "iters": 4, "repeats": 3}
+                                                  if quick else {})),
+        bandwidth=measure_peak_bandwidth(**({"nbytes": 1 << 26, "repeats": 3}
+                                            if quick else {})),
+    )
+    if cache_path:
+        os.makedirs(os.path.dirname(cache_path), exist_ok=True)
+        with open(cache_path, "w") as f:
+            json.dump(dataclasses.asdict(res), f, indent=2)
+    return res

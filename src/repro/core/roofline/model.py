@@ -1,0 +1,179 @@
+"""Three-term roofline math.
+
+Classic roofline (paper eq. 1): ``P = min(pi, I * beta)`` with arithmetic
+intensity ``I = W / Q``.  For a distributed step we carry three time terms
+derived from the compiled per-device HLO (cost_analysis is per-device after
+SPMD partitioning — verified empirically, see DESIGN.md):
+
+    compute_s  = W_dev / pi_chip            (== W_total / (chips * pi_chip))
+    memory_s   = Q_dev / beta_hbm_chip
+    ici_s      = wire_dev_ici / beta_ici_chip
+    dcn_s      = wire_dev_dcn / beta_dcn_chip
+
+The *dominant* term is the bottleneck; ``t_lower = max(terms)`` is the step
+time under perfect compute/comm overlap, ``t_upper = sum(terms)`` with no
+overlap.  The score we report as "roofline fraction" is
+
+    useful_compute_time / t_lower,   useful_compute_time = model_flops_dev / pi
+
+i.e. the fraction of the bound step that is *irreducible model math* at peak —
+it punishes remat waste (W_dev >> model_flops_dev), memory-boundedness and
+collective-boundedness alike.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from .hardware import ChipSpec, ScopeSpec
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    scope: str
+    n_chips: int
+    dtype: str
+
+    # per-device quantities (as reported by the partitioned module)
+    flops_dev: float
+    hbm_bytes_dev: float
+    ici_wire_bytes_dev: float
+    dcn_wire_bytes_dev: float
+    transcendentals_dev: float = 0.0
+
+    # model-level accounting
+    model_flops_total: Optional[float] = None   # e.g. 6*N*D for training
+
+    # hardware
+    chip: Optional[ChipSpec] = None
+
+    # --- derived terms (seconds) -----------------------------------------
+    @property
+    def compute_s(self) -> float:
+        return self.flops_dev / self.chip.flops_for(self.dtype)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_dev / self.chip.hbm_bw
+
+    @property
+    def ici_s(self) -> float:
+        return self.ici_wire_bytes_dev / self.chip.ici_bw
+
+    @property
+    def dcn_s(self) -> float:
+        if self.dcn_wire_bytes_dev == 0:
+            return 0.0
+        return self.dcn_wire_bytes_dev / self.chip.dcn_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.ici_s + self.dcn_s
+
+    def terms(self) -> Dict[str, float]:
+        return {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "ici": self.ici_s,
+            "dcn": self.dcn_s,
+        }
+
+    @property
+    def dominant(self) -> str:
+        t = self.terms()
+        return max(t, key=t.get)
+
+    @property
+    def t_lower(self) -> float:
+        """Step time with perfect overlap of compute/memory/collectives."""
+        return max(self.terms().values())
+
+    @property
+    def t_upper(self) -> float:
+        """Step time with zero overlap."""
+        return sum(self.terms().values())
+
+    # --- classic roofline quantities --------------------------------------
+    @property
+    def arithmetic_intensity(self) -> float:
+        """FLOP per HBM byte (the paper's I = W/Q)."""
+        return self.flops_dev / max(self.hbm_bytes_dev, 1.0)
+
+    @property
+    def ridge_intensity(self) -> float:
+        """AI at the roofline ridge point for this chip/dtype."""
+        return self.chip.flops_for(self.dtype) / self.chip.hbm_bw
+
+    @property
+    def attainable_flops(self) -> float:
+        """P = min(pi, I*beta) per chip."""
+        return min(
+            self.chip.flops_for(self.dtype),
+            self.arithmetic_intensity * self.chip.hbm_bw,
+        )
+
+    # --- usefulness / score ------------------------------------------------
+    @property
+    def model_flops_dev(self) -> Optional[float]:
+        if self.model_flops_total is None:
+            return None
+        return self.model_flops_total / self.n_chips
+
+    @property
+    def useful_ratio(self) -> Optional[float]:
+        """model_flops / HLO flops — 1.0 means no remat/redundant compute.
+
+        Can exceed 1.0 when HLO does *less* work than the 6ND convention
+        assumes (e.g. MoE counted as active-only, or cost_analysis folding).
+        """
+        if self.model_flops_total is None or self.flops_dev == 0:
+            return None
+        return self.model_flops_dev / self.flops_dev
+
+    @property
+    def roofline_fraction(self) -> Optional[float]:
+        """useful compute time at peak / bound step time (the §Perf score)."""
+        if self.model_flops_total is None:
+            return None
+        useful_s = self.model_flops_dev / self.chip.flops_for(self.dtype)
+        return useful_s / max(self.t_lower, 1e-30)
+
+    @property
+    def hardware_fraction(self) -> float:
+        """compute term / bound time — fraction of the step the MXU is busy
+        (counts remat as useful; upper bound on MFU)."""
+        return self.compute_s / max(self.t_lower, 1e-30)
+
+    def bound_class(self) -> str:
+        d = self.dominant
+        if d == "compute":
+            return "compute-bound"
+        if d == "memory":
+            return "memory-bound"
+        return f"collective-bound({d})"
+
+
+def make_terms(
+    *,
+    scope: ScopeSpec,
+    dtype: str,
+    flops_dev: float,
+    hbm_bytes_dev: float,
+    ici_wire_bytes_dev: float,
+    dcn_wire_bytes_dev: float,
+    transcendentals_dev: float = 0.0,
+    model_flops_total: Optional[float] = None,
+) -> RooflineTerms:
+    return RooflineTerms(
+        scope=scope.name,
+        n_chips=scope.n_chips,
+        dtype=dtype,
+        flops_dev=flops_dev,
+        hbm_bytes_dev=hbm_bytes_dev,
+        ici_wire_bytes_dev=ici_wire_bytes_dev,
+        dcn_wire_bytes_dev=dcn_wire_bytes_dev,
+        transcendentals_dev=transcendentals_dev,
+        model_flops_total=model_flops_total,
+        chip=scope.chip,
+    )

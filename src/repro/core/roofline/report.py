@@ -1,0 +1,161 @@
+"""Roofline reporting: tables, ASCII roofline plots, markdown emitters.
+
+The paper communicates through roofline *plots* (kernel dots under a
+compute/memory roof).  Terminals get an ASCII log-log rendition; markdown
+tables feed EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from .model import RooflineTerms
+
+
+def _fmt_si(x: float, unit: str = "") -> str:
+    if x == 0:
+        return f"0{unit}"
+    if x != x or x in (float("inf"), float("-inf")):
+        return str(x)
+    for scale, suffix in ((1e15, "P"), (1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "K")):
+        if abs(x) >= scale:
+            return f"{x / scale:.3g}{suffix}{unit}"
+    if abs(x) >= 1:
+        return f"{x:.3g}{unit}"
+    for scale, suffix in ((1e-3, "m"), (1e-6, "u"), (1e-9, "n")):
+        if abs(x) >= scale:
+            return f"{x / scale:.3g}{suffix}{unit}"
+    return f"{x:.3g}{unit}"
+
+
+def _fmt_s(x: float) -> str:
+    return _fmt_si(x, "s")
+
+
+def terms_row(label: str, t: RooflineTerms) -> List[str]:
+    rf = t.roofline_fraction
+    ur = t.useful_ratio
+    return [
+        label,
+        t.scope,
+        _fmt_s(t.compute_s),
+        _fmt_s(t.memory_s),
+        _fmt_s(t.ici_s),
+        _fmt_s(t.dcn_s),
+        t.bound_class(),
+        f"{t.arithmetic_intensity:.1f}",
+        f"{ur:.2f}" if ur is not None else "-",
+        f"{rf * 100:.1f}%" if rf is not None else "-",
+    ]
+
+
+TERMS_HEADER = [
+    "cell", "scope", "compute", "memory", "ici", "dcn",
+    "bound", "AI(F/B)", "useful", "roofline%",
+]
+
+
+def markdown_table(rows: Sequence[Sequence[str]], header: Sequence[str]) -> str:
+    out = ["| " + " | ".join(header) + " |",
+           "|" + "|".join(["---"] * len(header)) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(c) for c in r) + " |")
+    return "\n".join(out)
+
+
+def text_table(rows: Sequence[Sequence[str]], header: Sequence[str]) -> str:
+    widths = [len(h) for h in header]
+    for r in rows:
+        for i, c in enumerate(r):
+            widths[i] = max(widths[i], len(str(c)))
+    def line(cells):
+        return "  ".join(str(c).ljust(w) for c, w in zip(cells, widths))
+    sep = "  ".join("-" * w for w in widths)
+    return "\n".join([line(header), sep] + [line(r) for r in rows])
+
+
+def ascii_roofline(
+    points: Sequence[Tuple[str, float, float]],
+    *,
+    peak_flops: float,
+    mem_bw: float,
+    width: int = 72,
+    height: int = 20,
+    achieved: Optional[dict] = None,
+) -> str:
+    """Log-log ASCII roofline.
+
+    ``points``: (label, arithmetic_intensity, attained_flops) triples —
+    attained is model-useful FLOP/s (``roofline_fraction * attainable`` for
+    analytic mode, measured FLOP/s for the microbench mode).
+    """
+    if not points:
+        return "(no points)"
+    ais = [max(p[1], 1e-6) for p in points]
+    xmin = min(min(ais) / 4, peak_flops / mem_bw / 16)
+    xmax = max(max(ais) * 4, peak_flops / mem_bw * 16)
+    ymax = peak_flops * 2
+    ymin = min(min(max(p[2], 1.0) for p in points) / 4, peak_flops / 1e5)
+
+    lx0, lx1 = math.log10(xmin), math.log10(xmax)
+    ly0, ly1 = math.log10(ymin), math.log10(ymax)
+
+    grid = [[" "] * width for _ in range(height)]
+
+    def to_col(x):
+        return int((math.log10(max(x, 1e-12)) - lx0) / (lx1 - lx0) * (width - 1))
+
+    def to_row(y):
+        r = int((math.log10(max(y, 1e-12)) - ly0) / (ly1 - ly0) * (height - 1))
+        return height - 1 - max(0, min(height - 1, r))
+
+    # roof: min(pi, I*beta)
+    for col in range(width):
+        x = 10 ** (lx0 + (lx1 - lx0) * col / (width - 1))
+        y = min(peak_flops, x * mem_bw)
+        r = to_row(y)
+        ch = "-" if y >= peak_flops * 0.999 else "/"
+        if 0 <= r < height:
+            grid[r][col] = ch
+
+    marks = "ABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789"
+    legend = []
+    for i, (label, ai, perf) in enumerate(points):
+        m = marks[i % len(marks)]
+        c = max(0, min(width - 1, to_col(ai)))
+        r = to_row(perf)
+        grid[r][c] = m
+        legend.append(
+            f"  {m} = {label}: AI={ai:.1f} F/B, attained={_fmt_si(perf, 'FLOP/s')}"
+            f" ({perf / min(peak_flops, ai * mem_bw) * 100:.1f}% of roof)"
+        )
+
+    lines = ["".join(row) for row in grid]
+    header = (
+        f"roofline: peak={_fmt_si(peak_flops, 'FLOP/s')}  "
+        f"bw={_fmt_si(mem_bw, 'B/s')}  ridge AI={peak_flops / mem_bw:.1f} F/B"
+    )
+    axis = f"AI: {xmin:.2g} .. {xmax:.2g} F/B (log)   perf: {ymin:.2g} .. {ymax:.2g} FLOP/s (log)"
+    return "\n".join([header] + lines + [axis] + legend)
+
+
+def render_report(label: str, t: RooflineTerms, extra: Iterable[str] = ()) -> str:
+    """One-cell human report (used by launch/train.py pre-flight)."""
+    lines = [
+        f"== roofline: {label} ==",
+        f"  scope={t.scope} chips={t.n_chips} dtype={t.dtype}",
+        f"  W   (flops/dev)      = {_fmt_si(t.flops_dev, 'F')}   -> compute {_fmt_s(t.compute_s)}",
+        f"  Q   (hbm bytes/dev)  = {_fmt_si(t.hbm_bytes_dev, 'B')}   -> memory  {_fmt_s(t.memory_s)}",
+        f"  C   (ici bytes/dev)  = {_fmt_si(t.ici_wire_bytes_dev, 'B')}   -> ici     {_fmt_s(t.ici_s)}",
+        f"  C   (dcn bytes/dev)  = {_fmt_si(t.dcn_wire_bytes_dev, 'B')}   -> dcn     {_fmt_s(t.dcn_s)}",
+        f"  bound: {t.bound_class()}  t_lower={_fmt_s(t.t_lower)}  t_upper={_fmt_s(t.t_upper)}",
+        f"  AI={t.arithmetic_intensity:.2f} F/B (ridge {t.ridge_intensity:.1f})",
+    ]
+    if t.useful_ratio is not None:
+        lines.append(
+            f"  model_flops/HLO_flops = {t.useful_ratio:.3f}"
+            f"   roofline fraction = {t.roofline_fraction * 100:.2f}%"
+        )
+    lines.extend(f"  {e}" for e in extra)
+    return "\n".join(lines)

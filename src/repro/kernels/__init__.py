@@ -1,0 +1,10 @@
+"""Pallas TPU kernel library.
+
+Import style: ``from repro.kernels import ops, ref`` — the jit'd public
+wrappers live in ops, the jnp oracles in ref.  (Function names are NOT
+re-exported at package level: they would shadow the kernel submodules.)
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

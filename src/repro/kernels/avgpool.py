@@ -1,0 +1,74 @@
+"""Average pooling — NHWC Pallas kernel, blocked vs naive layouts.
+
+Paper §3.3: avg-pool over NCHW hit 0.35% utilization (stride-1 spatial in
+the SIMD register) vs 14.8% for the blocked layout (channels contiguous).
+TPU analogue: the ``blocked`` kernel keeps C in the lane dimension — the
+window reduction is pure sublane arithmetic over full VREGs; the ``naive``
+kernel puts W in the lanes (spatial innermost, the NCHW analogue) so every
+window sum crosses lanes.  Both produce identical values; the benchmark
+contrasts their structural lane utilization.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_nhwc_kernel(x_ref, o_ref, *, window: int):
+    x = x_ref[...].astype(jnp.float32)          # (1, bh*win, Wo*win, C)
+    _, hw, ww, c = x.shape
+    bh, wo = hw // window, ww // window
+    x = x.reshape(bh, window, wo, window, c)
+    o_ref[...] = (jnp.mean(x, axis=(1, 3))[None]).astype(o_ref.dtype)
+
+
+def avg_pool_blocked(x: jax.Array, *, window: int = 2, bh: int = 8,
+                     interpret: bool = False) -> jax.Array:
+    """x NHWC, stride == window (non-overlapping), C in lanes."""
+    n, h, w, c = x.shape
+    ho, wo = h // window, w // window
+    x = x[:, : ho * window, : wo * window, :]
+    bh = min(bh, ho)
+    assert ho % bh == 0
+    return pl.pallas_call(
+        functools.partial(_pool_nhwc_kernel, window=window),
+        grid=(n, ho // bh),
+        in_specs=[pl.BlockSpec((1, bh * window, wo * window, c),
+                               lambda i, j: (i, j, 0, 0))],
+        out_specs=pl.BlockSpec((1, bh, wo, c), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, c), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def _pool_nchw_kernel(x_ref, o_ref, *, window: int):
+    x = x_ref[...].astype(jnp.float32)          # (1, bc, H, W) — W in lanes
+    _, bc, hh, ww = x.shape
+    ho, wo = hh // window, ww // window
+    x = x.reshape(bc, ho, window, wo, window)
+    o_ref[...] = (jnp.mean(x, axis=(2, 4))[None]).astype(o_ref.dtype)
+
+
+def avg_pool_naive(x: jax.Array, *, window: int = 2, bc: int = 8,
+                   interpret: bool = False) -> jax.Array:
+    """x NHWC; internally NCHW with spatial W in lanes (the simple_nchw
+    analogue: window sums cross lanes, utilization collapses)."""
+    n, h, w, c = x.shape
+    ho, wo = h // window, w // window
+    xc = x[:, : ho * window, : wo * window, :].transpose(0, 3, 1, 2)
+    bc = min(bc, c)
+    assert c % bc == 0
+    out = pl.pallas_call(
+        functools.partial(_pool_nchw_kernel, window=window),
+        grid=(n, c // bc),
+        in_specs=[pl.BlockSpec((1, bc, ho * window, wo * window),
+                               lambda i, j: (i, j, 0, 0))],
+        out_specs=pl.BlockSpec((1, bc, ho, wo), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c, ho, wo), x.dtype),
+        interpret=interpret,
+    )(xc)
+    return out.transpose(0, 2, 3, 1)

@@ -1,0 +1,73 @@
+"""Winograd F(2x2, 3x3) convolution — TPU-restructured.
+
+The paper's Winograd observation: fastest kernel yet lowest utilization
+(31%), because the transform stages are scalar FMA chains on CPU.  The TPU
+restructuring (DESIGN.md §6): input/output transforms are batched 4x4
+matmuls over all tiles at once (jnp — bandwidth-bound reshuffles XLA fuses
+well), and the elementwise stage — 16 independent (tiles x Cin) @
+(Cin x Cout) GEMMs holding 100% of the multiply reduction — runs in a
+Pallas kernel with the (16, tile-block, Cout-block) grid on the MXU.
+
+Multiply count per 2x2 output patch: 16 vs 36 direct = the 2.25x work
+reduction the roofline terms must reflect.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref as ref_mod
+
+
+def _wino_mm_kernel(v_ref, u_ref, o_ref):
+    # one (bt, Cin) @ (Cin, bc) GEMM for one of the 16 tile positions
+    o_ref[...] = jnp.dot(v_ref[0], u_ref[0],
+                         preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)[None]
+
+
+def winograd_elementwise_stage(v: jax.Array, u: jax.Array, *, bt: int = 256,
+                               bc: int = 128, interpret: bool = False
+                               ) -> jax.Array:
+    """v (16, T, Cin), u (16, Cin, Cout) -> m (16, T, Cout)."""
+    p16, t, cin = v.shape
+    _, _, cout = u.shape
+    bt = min(bt, t)
+    bc = min(bc, cout)
+    assert t % bt == 0 and cout % bc == 0, (v.shape, u.shape, bt, bc)
+    return pl.pallas_call(
+        _wino_mm_kernel,
+        grid=(p16, t // bt, cout // bc),
+        in_specs=[
+            pl.BlockSpec((1, bt, cin), lambda p, i, j: (p, i, 0)),
+            pl.BlockSpec((1, cin, bc), lambda p, i, j: (p, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, bc), lambda p, i, j: (p, i, j)),
+        out_shape=jax.ShapeDtypeStruct((p16, t, cout), jnp.float32),
+        interpret=interpret,
+    )(v, u)
+
+
+def conv2d_winograd(x: jax.Array, w: jax.Array, *, interpret: bool = False
+                    ) -> jax.Array:
+    """Full Winograd conv with the Pallas GEMM stage.  Stride 1, SAME."""
+    n, h, wdt, cin = x.shape
+    cout = w.shape[-1]
+    tiles, (nh, nw, _) = ref_mod.winograd_tiles(x)
+    tf = tiles.astype(jnp.float32)
+    v = jnp.einsum("ij,nhwjkc->nhwikc", ref_mod._B_T, tf)
+    v = jnp.einsum("nhwikc,lk->nhwilc", v, ref_mod._B_T)
+    t = n * nh * nw
+    v16 = v.reshape(t, 16, cin).transpose(1, 0, 2)            # (16, T, Cin)
+    u16 = ref_mod.winograd_kernel_transform(w).reshape(16, cin, cout)
+    m = winograd_elementwise_stage(v16, u16, interpret=interpret)
+    m = m.transpose(1, 0, 2).reshape(n, nh, nw, 4, 4, cout)
+    y = jnp.einsum("pi,nhwijf->nhwpjf", ref_mod._A_T, m)
+    y = jnp.einsum("nhwpjf,qj->nhwpqf", y, ref_mod._A_T)
+    y = y.transpose(0, 1, 3, 2, 4, 5).reshape(n, 2 * nh, 2 * nw, cout)
+    return y[:, :h, :wdt, :].astype(x.dtype)

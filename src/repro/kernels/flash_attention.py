@@ -1,0 +1,94 @@
+"""Flash attention — causal GQA Pallas kernel (online softmax).
+
+The LM hot-spot kernel: IO-aware attention whose scores never leave VMEM —
+the 'warm cache' regime the roofline analysis prices when substituting the
+jnp reference (which materializes (B,H,Sq,Sk) scores to HBM; see the
+``fused_attention`` scope accounting in core/roofline/hlo_cost.py).
+
+Grid (B, H, Sq/bq); per step the full K/V stream of the mapped KV head is
+resident (GQA index_map h -> h // group) and swept in bk-sized slabs with
+the standard (m, l, acc) online-softmax carry in VMEM scratch.  Causality
+prunes slabs past the query block.  VMEM budget ~ 2*Sk*hd*bytes + 3 blocks;
+hd=128, Sk<=8192 bf16 fits v5e's 128 MiB comfortably; longer sequences use
+the host-level q-chunk wrapper in ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, bq: int, bk: int, sk: int, scale: float, causal: bool):
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # (bq, hd)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+
+    n_kb = sk // bk
+
+    def body(j, _):
+        k = k_ref[0, 0, pl.ds(j * bk, bk), :].astype(jnp.float32)
+        v = v_ref[0, 0, pl.ds(j * bk, bk), :].astype(jnp.float32)
+        s = q @ k.T                                        # (bq, bk)
+        if causal:
+            k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + p @ v
+        m_ref[...] = m_new
+        return 0
+
+    if causal:
+        # slabs strictly after this q block contribute nothing
+        n_active = jnp.minimum(((qi + 1) * bq + bk - 1) // bk, n_kb)
+    else:
+        n_active = n_kb
+    jax.lax.fori_loop(0, n_active, body, 0)
+    o_ref[0, 0] = (acc_ref[...] /
+                   jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q (B, H, Sq, hd); k, v (B, KV, Sk, hd).  Returns (B, H, Sq, hd)."""
+    b, h, sq, hd = q.shape
+    _, kv, sk, _ = k.shape
+    g = h // kv
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    scale = 1.0 / (hd ** 0.5)
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, sk=sk, scale=scale, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, sq // bq),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, sk, hd), lambda bi, hi, qi: (bi, hi // g, 0, 0)),
+            pl.BlockSpec((1, 1, sk, hd), lambda bi, hi, qi: (bi, hi // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,66 @@
+"""GELU activation — elementwise Pallas kernel, blocked vs naive layouts.
+
+The paper's GELU study (§3.4): layout should not matter for an elementwise
+op *unless* the layout forces padding (C=3 -> blocked-8 doubled FLOPs and
+4x traffic).  The TPU analogue: ``blocked`` tiles are (8k, 128) —
+lane-dim-major, one VREG per load; ``naive`` tiles are (128k, 8) — the lane
+dimension is mostly empty, so each VREG carries 8/128 useful lanes (the
+NCHW-pooling-style utilization cliff, structurally encoded in the
+BlockSpec).  ``pad_channels`` reproduces the paper's C=3->8 experiment.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_C = 0.7978845608028654  # sqrt(2/pi)
+
+
+def _gelu_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    y = 0.5 * x * (1.0 + jnp.tanh(_C * (x + 0.044715 * x ** 3)))
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def gelu_2d(x: jax.Array, *, block=(256, 128), interpret: bool = False
+            ) -> jax.Array:
+    """x (R, C) with blocks dividing the shape."""
+    r, c = x.shape
+    br, bc = block
+    assert r % br == 0 and c % bc == 0, (x.shape, block)
+    return pl.pallas_call(
+        _gelu_kernel,
+        grid=(r // br, c // bc),
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def gelu_blocked(x: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """Lane-major tiles (TPU-native, the NCHW16C analogue)."""
+    flat = x.reshape(-1, x.shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
+    return gelu_2d(flat, block=(min(256, flat.shape[0]), 128),
+                   interpret=interpret).reshape(x.shape)
+
+
+def gelu_naive(x: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """Sublane-major tiles — 8/128 lane utilization (the naive layout)."""
+    flat = x.reshape(-1, x.shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
+    return gelu_2d(flat, block=(min(1024, flat.shape[0]), 8),
+                   interpret=interpret).reshape(x.shape)
+
+
+def pad_channels(x: jax.Array, to: int = 128) -> jax.Array:
+    """The paper's forced-blocked-layout experiment: pad C up to the tile."""
+    c = x.shape[-1]
+    pad = (-c) % to
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, widths)

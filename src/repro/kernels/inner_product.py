@@ -1,0 +1,63 @@
+"""Inner product (fully-connected) — tiled MXU matmul Pallas kernel.
+
+The paper's best-optimized primitive (>71% of single-thread peak); here it
+is the compute-roofline calibration kernel.  Blocking: (bm x bk) x (bk x bn)
+MXU tiles with an fp32 VMEM accumulator; K is the innermost grid dim so the
+accumulator lives across the K sweep (revisiting semantics).  All block
+dims default to 128 — the MXU edge — and must divide the operand shapes
+(the ops.py wrapper pads otherwise).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int, fuse: str):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        acc = acc_ref[...]
+        if fuse == "gelu":
+            c = 0.7978845608028654
+            acc = 0.5 * acc * (1.0 + jnp.tanh(c * (acc + 0.044715 * acc ** 3)))
+        elif fuse == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def inner_product(x: jax.Array, w: jax.Array, *, bm: int = 128,
+                  bn: int = 128, bk: int = 128, fuse: str = "none",
+                  interpret: bool = False) -> jax.Array:
+    """x (M, K) @ w (K, N); optional fused epilogue (the paper's 'warm
+    cache' case: the activation never re-reads HBM)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (x.shape, w.shape)
+    n_k = k // bk
+    kernel = functools.partial(_mm_kernel, n_k=n_k, fuse=fuse)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

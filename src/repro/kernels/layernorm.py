@@ -1,0 +1,49 @@
+"""Layer normalization — row-blocked Pallas kernel (paper appendix primitive).
+
+Each grid step normalizes a (br, D) row block entirely in VMEM: one HBM
+read + one write per element (the fused 'warm-cache' regime); mean/var in
+fp32 on the VPU.  D must fit VMEM (d_model <= ~16k at fp32 with default
+blocks — every assigned arch fits).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ln_kernel(x_ref, s_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * s_ref[...].astype(jnp.float32) + b_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              *, eps: float = 1e-5, br: int = 256,
+              interpret: bool = False) -> jax.Array:
+    """x (..., D); scale/bias (D,)."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    flat = x.reshape(-1, d)
+    r = flat.shape[0]
+    br = min(br, r)
+    assert r % br == 0, (r, br)
+    out = pl.pallas_call(
+        functools.partial(_ln_kernel, eps=eps),
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        interpret=interpret,
+    )(flat, scale.reshape(1, d), bias.reshape(1, d))
+    return out.reshape(orig_shape)

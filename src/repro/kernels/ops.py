@@ -1,0 +1,85 @@
+"""Public jit'd wrappers for the Pallas kernel library.
+
+``interpret`` defaults to True off-TPU so every kernel validates on this
+CPU container; on a TPU backend the same calls compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import avgpool as _avgpool
+from . import conv_direct as _conv_direct
+from . import conv_winograd as _conv_winograd
+from . import flash_attention as _flash
+from . import gelu as _gelu
+from . import inner_product as _ip
+from . import layernorm as _ln
+from . import ref
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("fuse",))
+def inner_product(x, w, fuse: str = "none"):
+    return _ip.inner_product(x, w, fuse=fuse, interpret=_interpret_default())
+
+
+@jax.jit
+def gelu(x):
+    return _gelu.gelu_blocked(x, interpret=_interpret_default())
+
+
+@jax.jit
+def gelu_naive(x):
+    return _gelu.gelu_naive(x, interpret=_interpret_default())
+
+
+@jax.jit
+def layernorm(x, scale, bias):
+    return _ln.layernorm(x, scale, bias, interpret=_interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def avg_pool(x, window: int = 2):
+    return _avgpool.avg_pool_blocked(x, window=window,
+                                     interpret=_interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def avg_pool_naive(x, window: int = 2):
+    return _avgpool.avg_pool_naive(x, window=window,
+                                   interpret=_interpret_default())
+
+
+@jax.jit
+def conv2d(x, w):
+    return _conv_direct.conv2d_direct(x, w, interpret=_interpret_default())
+
+
+@jax.jit
+def conv2d_winograd(x, w):
+    return _conv_winograd.conv2d_winograd(x, w,
+                                          interpret=_interpret_default())
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def flash_attention(q, k, v, causal: bool = True):
+    """q (B,Sq,H,hd), k/v (B,Sk,KV,hd) — model-layout wrapper."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = _flash.flash_attention(qt, kt, vt, causal=causal,
+                               interpret=_interpret_default())
+    return o.transpose(0, 2, 1, 3)
+
+
+# max_pool intentionally routes to the jnp reference: the paper's §3.5
+# caveat — its "work" is comparisons, invisible to FLOP counters.
+max_pool = jax.jit(ref.max_pool, static_argnames=("window", "stride"))

@@ -1,0 +1,145 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+These mirror the paper's evaluated oneDNN primitive set: GELU activation,
+convolution (direct + Winograd), inner product, pooling (average — and max,
+kept to reproduce the paper's §3.5 FLOP-blindness caveat), layer
+normalization; plus the LM hot-spot (flash attention) this framework adds.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    """tanh-approx GELU (the oneDNN flavor)."""
+    c = np.sqrt(2.0 / np.pi).astype(np.float32)
+    xf = x.astype(jnp.float32)
+    y = 0.5 * xf * (1.0 + jnp.tanh(c * (xf + 0.044715 * xf ** 3)))
+    return y.astype(x.dtype)
+
+
+def inner_product(x: jax.Array, w: jax.Array,
+                  b: Optional[jax.Array] = None) -> jax.Array:
+    """(M, K) @ (K, N) + b — oneDNN's fully-connected primitive."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+    return y.astype(x.dtype)
+
+
+def avg_pool(x: jax.Array, window: int = 2, stride: int = 2) -> jax.Array:
+    """NHWC average pooling (no padding)."""
+    y = jax.lax.reduce_window(
+        x.astype(jnp.float32), 0.0, jax.lax.add,
+        (1, window, window, 1), (1, stride, stride, 1), "VALID")
+    return (y / (window * window)).astype(x.dtype)
+
+
+def max_pool(x: jax.Array, window: int = 2, stride: int = 2) -> jax.Array:
+    """NHWC max pooling — zero FLOPs under the paper's §3.5 accounting."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf if x.dtype == jnp.float32 else jnp.finfo(x.dtype).min,
+        jax.lax.max, (1, window, window, 1), (1, stride, stride, 1), "VALID")
+
+
+def conv2d(x: jax.Array, w: jax.Array, padding: str = "SAME") -> jax.Array:
+    """NHWC direct convolution, stride 1.  w: (KH, KW, Cin, Cout)."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Winograd F(2x2, 3x3) — also serves as the jnp fallback implementation
+# --------------------------------------------------------------------------
+
+_B_T = np.array([[1, 0, -1, 0],
+                 [0, 1, 1, 0],
+                 [0, -1, 1, 0],
+                 [0, 1, 0, -1]], np.float32)
+_G = np.array([[1, 0, 0],
+               [0.5, 0.5, 0.5],
+               [0.5, -0.5, 0.5],
+               [0, 0, 1]], np.float32)
+_A_T = np.array([[1, 1, 1, 0],
+                 [0, 1, -1, -1]], np.float32)
+
+
+def winograd_kernel_transform(w: jax.Array) -> jax.Array:
+    """(3,3,Cin,Cout) -> (4,4,Cin,Cout):  U = G g G^T."""
+    g = w.astype(jnp.float32)
+    u = jnp.einsum("ij,jkcf->ikcf", _G, g)
+    return jnp.einsum("ikcf,lk->ilcf", u, _G)
+
+
+def winograd_tiles(x: jax.Array) -> Tuple[jax.Array, Tuple[int, int, int]]:
+    """Extract overlapping 4x4 tiles (stride 2) from SAME-padded NHWC input.
+
+    Returns tiles (N, nH, nW, 4, 4, C)."""
+    N, H, W, C = x.shape
+    nH, nW = -(-H // 2), -(-W // 2)
+    xp = jnp.pad(x, ((0, 0), (1, 2 * nH - H + 1), (1, 2 * nW - W + 1), (0, 0)))
+    idx_h = (2 * jnp.arange(nH))[:, None] + jnp.arange(4)[None, :]
+    idx_w = (2 * jnp.arange(nW))[:, None] + jnp.arange(4)[None, :]
+    t = xp[:, idx_h][:, :, :, idx_w]                # (N,nH,4,nW,4,C)
+    t = t.transpose(0, 1, 3, 2, 4, 5)               # (N,nH,nW,4,4,C)
+    return t, (nH, nW, C)
+
+
+def conv2d_winograd(x: jax.Array, w: jax.Array) -> jax.Array:
+    """F(2x2,3x3) Winograd conv, stride 1, SAME padding.
+
+    2.25x multiply reduction vs direct (16 vs 36 MACs per 4 outputs).
+    """
+    N, H, W, C = x.shape
+    Cout = w.shape[-1]
+    t, (nH, nW, _) = winograd_tiles(x)
+    tf = t.astype(jnp.float32)
+    # input transform V = B^T d B  over the 4x4 dims
+    v = jnp.einsum("ij,nhwjkc->nhwikc", _B_T, tf)
+    v = jnp.einsum("nhwikc,lk->nhwilc", v, _B_T)
+    u = winograd_kernel_transform(w)                 # (4,4,C,Cout)
+    # elementwise stage: batched matmul over (4,4) positions
+    m = jnp.einsum("nhwijc,ijcf->nhwijf", v, u)
+    # output transform Y = A^T M A
+    y = jnp.einsum("pi,nhwijf->nhwpjf", _A_T, m)
+    y = jnp.einsum("nhwpjf,qj->nhwpqf", y, _A_T)     # (N,nH,nW,2,2,Cout)
+    y = y.transpose(0, 1, 3, 2, 4, 5).reshape(N, 2 * nH, 2 * nW, Cout)
+    return y[:, :H, :W, :].astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Flash attention oracle (causal GQA)
+# --------------------------------------------------------------------------
+
+def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True
+        ) -> jax.Array:
+    """q (B,Sq,H,hd), k/v (B,Sk,KV,hd); GQA via head grouping."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    s = s / np.sqrt(hd)
+    if causal:
+        Sk = k.shape[1]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+    return o.reshape(B, Sq, H, hd)

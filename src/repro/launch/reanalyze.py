@@ -1,0 +1,73 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Re-run the roofline analysis over archived partitioned-HLO modules —
+no recompilation.  Used whenever the cost model improves (the paper's
+'better counter, same measurements' workflow).
+
+    PYTHONPATH=src python -m repro.launch.reanalyze
+"""
+
+import glob
+import gzip
+import json
+
+from repro.core.analysis import analyze_compiled  # noqa: F401 (docs)
+from repro.core.roofline import multipod_scope, pod_scope, terms_from_character
+from repro.core.roofline.extract import MemoryFootprint, characterize_text, character_as_dict
+from repro.launch.mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def reanalyze_cell(json_path: str, meshes) -> bool:
+    with open(json_path) as f:
+        d = json.load(f)
+    if d.get("status") != "ok":
+        return False
+    hlo_path = json_path.replace(".json", ".hlo.gz")
+    if not os.path.exists(hlo_path):
+        return False
+    with gzip.open(hlo_path, "rt") as zf:
+        text = zf.read()
+    is_multi = d["mesh_shape"].get("pod", 1) > 1
+    mesh = meshes["multipod" if is_multi else "pod"]
+    scope = multipod_scope() if is_multi else pod_scope()
+    mem = MemoryFootprint(**{k: int(v) for k, v in d.get("memory", {}).items()
+                             if k in ("argument_bytes", "output_bytes",
+                                      "temp_bytes", "generated_code_bytes")})
+    char = characterize_text(text, mesh, memory=mem,
+                             cost_raw=d.get("cost_raw", {}))
+    terms = terms_from_character(char, scope, dtype=d.get("dtype", "bfloat16"),
+                                 model_flops_total=d.get("model_flops_total"))
+    upd = character_as_dict(char)
+    upd.update(
+        compute_s=terms.compute_s, memory_s=terms.memory_s,
+        ici_s=terms.ici_s, dcn_s=terms.dcn_s, dominant=terms.dominant,
+        bound=terms.bound_class(), t_lower_s=terms.t_lower,
+        t_upper_s=terms.t_upper,
+        arithmetic_intensity=terms.arithmetic_intensity,
+        useful_ratio=terms.useful_ratio,
+        roofline_fraction=terms.roofline_fraction,
+        hardware_fraction=terms.hardware_fraction,
+    )
+    d.update(upd)
+    with open(json_path, "w") as f:
+        json.dump(d, f, indent=2, default=float)
+    return True
+
+
+def main():
+    meshes = {"pod": make_production_mesh(multi_pod=False),
+              "multipod": make_production_mesh(multi_pod=True)}
+    n = 0
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        if reanalyze_cell(path, meshes):
+            n += 1
+            print(f"[reanalyze] {os.path.basename(path)}")
+    print(f"[reanalyze] updated {n} cells")
+
+
+if __name__ == "__main__":
+    main()

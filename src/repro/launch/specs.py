@@ -1,0 +1,112 @@
+"""ShapeDtypeStruct input specs + shardings for every (arch x shape) cell.
+
+``input_specs(cfg, cell)`` returns stand-ins for every model input — the
+shannon/kernels pattern: weak-type-correct, shardable, no device allocation.
+The dry-run, the trainer pre-flight and the benchmarks all consume these.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import abstract_params, cache_param_defs, model_param_defs
+from repro.models.common import ModelConfig, ShapeCell, model_flops
+from repro.parallel import sharding as shd
+from repro.train.optimizer import abstract_opt_state, opt_state_shardings
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, B: int, S: int) -> Dict[str, Any]:
+    out = {
+        "tokens": _sds((B, S), "int32"),
+        "labels": _sds((B, S), "int32"),
+    }
+    if cfg.is_encoder_decoder:
+        out["enc_embeds"] = _sds((B, cfg.n_audio_frames, cfg.d_model), cfg.dtype)
+    if cfg.n_image_tokens:
+        out["img_embeds"] = _sds((B, cfg.n_image_tokens, cfg.d_model), cfg.dtype)
+    return out
+
+
+def batch_shardings(cfg: ModelConfig, B: int, S: int, mesh) -> Dict[str, Any]:
+    def ns(shape, *logical):
+        return NamedSharding(mesh, shd.resolve_spec(
+            list(logical), list(shape), shd.mesh_sizes(mesh)))
+
+    out = {
+        "tokens": ns((B, S), "batch", "seq"),
+        "labels": ns((B, S), "batch", "seq"),
+    }
+    if cfg.is_encoder_decoder:
+        out["enc_embeds"] = ns((B, cfg.n_audio_frames, cfg.d_model),
+                               "batch", "seq", "d_model")
+    if cfg.n_image_tokens:
+        out["img_embeds"] = ns((B, cfg.n_image_tokens, cfg.d_model),
+                               "batch", "seq", "d_model")
+    return out
+
+
+def train_specs(cfg: ModelConfig, cell: ShapeCell, mesh
+                ) -> Tuple[Tuple[Any, ...], Tuple[Any, ...], Any]:
+    """Returns (args, in_shardings, out_shardings) for train_step."""
+    defs = model_param_defs(cfg)
+    state = {"params": shd.tree_abstract(defs),
+             "opt": abstract_opt_state(defs)}
+    state_shardings = {
+        "params": shd.tree_shardings(defs, mesh),
+        "opt": opt_state_shardings(defs, mesh),
+    }
+    B, S = cell.global_batch, cell.seq_len
+    args = (state, batch_specs(cfg, B, S))
+    in_sh = (state_shardings, batch_shardings(cfg, B, S, mesh))
+    out_sh = (state_shardings, None)
+    return args, in_sh, out_sh
+
+
+def prefill_specs(cfg: ModelConfig, cell: ShapeCell, mesh):
+    defs = model_param_defs(cfg)
+    B, S = cell.global_batch, cell.seq_len
+    bs = batch_specs(cfg, B, S)
+    bsh = batch_shardings(cfg, B, S, mesh)
+    args = [shd.tree_abstract(defs), bs["tokens"]]
+    in_sh = [shd.tree_shardings(defs, mesh), bsh["tokens"]]
+    kwargs_extra = {}
+    if cfg.is_encoder_decoder:
+        args.append(bs["enc_embeds"])
+        in_sh.append(bsh["enc_embeds"])
+    elif cfg.n_image_tokens:
+        args.append(bs["img_embeds"])
+        in_sh.append(bsh["img_embeds"])
+    return tuple(args), tuple(in_sh), None
+
+
+def decode_specs(cfg: ModelConfig, cell: ShapeCell, mesh):
+    """serve_step: one new token against a seq_len-deep cache."""
+    defs = model_param_defs(cfg)
+    B, S = cell.global_batch, cell.seq_len
+    cdefs = cache_param_defs(cfg, B, S)
+    args = (
+        shd.tree_abstract(defs),
+        shd.tree_abstract(cdefs),
+        _sds((B, 1), "int32"),
+        _sds((), "int32"),
+    )
+    in_sh = (
+        shd.tree_shardings(defs, mesh),
+        shd.tree_shardings(cdefs, mesh),
+        NamedSharding(mesh, shd.resolve_spec(
+            ["batch", None], [B, 1], shd.mesh_sizes(mesh))),
+        NamedSharding(mesh, P()),
+    )
+    return args, in_sh, None
+
+
+def cell_flops(cfg: ModelConfig, cell: ShapeCell) -> float:
+    return model_flops(cfg, cell.seq_len, cell.global_batch, cell.kind)

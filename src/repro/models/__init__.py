@@ -1,0 +1,22 @@
+from .common import BlockDef, ModelConfig, SHAPES, ShapeCell, applicable_shapes
+from .model import (
+    abstract_params,
+    cache_param_defs,
+    cross_entropy,
+    decode_step,
+    init_cache,
+    init_params,
+    loss_fn,
+    model_param_defs,
+    param_bytes,
+    param_count,
+    param_shardings,
+    prefill,
+)
+
+__all__ = [
+    "BlockDef", "ModelConfig", "SHAPES", "ShapeCell", "applicable_shapes",
+    "abstract_params", "cache_param_defs", "cross_entropy", "decode_step",
+    "init_cache", "init_params", "loss_fn", "model_param_defs",
+    "param_bytes", "param_count", "param_shardings", "prefill",
+]

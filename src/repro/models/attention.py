@@ -1,0 +1,199 @@
+"""Attention mixers: GQA self-attention (+qk_norm, RoPE), cross-attention,
+KV-cache decode.  MLA lives in mla.py.
+
+Sharding strategy (resolved by the legalizer, see parallel/sharding.py):
+* heads divisible by the ``model`` axis  -> Megatron head-parallel attention
+* heads NOT divisible (40H/36H/24H/12H on a 16-way axis) -> the ``seq_fb``
+  logical axis picks up the freed ``model`` capacity and attention runs
+  sequence-parallel (context-parallel): q is sharded over its sequence dim,
+  K/V are gathered — the all-gather-KV flavor of ring attention.  This is why
+  every assigned head count compiles on the fixed 16x16 production mesh.
+
+Memory strategy: q-chunked attention (lax.map over query chunks) bounds the
+score matrix to (B, H, chunk, S) — the jnp analogue of flash attention's
+outer loop; the Pallas kernel (kernels/flash_attention.py) is the TPU-native
+inner loop.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ParamDef, constrain
+from .common import ModelConfig
+from .layers import apply_rope, rms_head_norm, rope_cos_sin
+
+NEG_INF = -1e30
+
+
+def attn_defs(cfg: ModelConfig, cross: bool = False) -> Dict[str, ParamDef]:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.dtype
+    defs = {
+        "wq": ParamDef((D, H, hd), ("d_model", "heads", "head_dim"), dt,
+                       fan_in_axes=(0,)),
+        "wk": ParamDef((D, KV, hd), ("d_model", "kv_heads", "head_dim"), dt,
+                       fan_in_axes=(0,)),
+        "wv": ParamDef((D, KV, hd), ("d_model", "kv_heads", "head_dim"), dt,
+                       fan_in_axes=(0,)),
+        "wo": ParamDef((H, hd, D), ("heads", "head_dim", "d_model"), dt,
+                       fan_in_axes=(0, 1)),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), ("head_dim",), "float32", init="ones")
+        defs["k_norm"] = ParamDef((hd,), ("head_dim",), "float32", init="ones")
+    if cross:
+        # tanh-gated residual (llama-3.2-vision style, init 0 = identity)
+        defs["gate"] = ParamDef((), (), "float32", init="zeros")
+    return defs
+
+
+def _project_qkv(p, x: jax.Array, kv_src: jax.Array, cfg: ModelConfig,
+                 q_pos: Optional[jax.Array], k_pos: Optional[jax.Array]):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"])
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_head_norm(p["k_norm"], k, cfg.norm_eps)
+    if cfg.pos_emb == "rope" and q_pos is not None:
+        cq, sq = rope_cos_sin(q_pos, cfg.hd, cfg.rope_theta)
+        q = apply_rope(q, cq, sq)
+    if cfg.pos_emb == "rope" and k_pos is not None:
+        ck, sk = rope_cos_sin(k_pos, cfg.hd, cfg.rope_theta)
+        k = apply_rope(k, ck, sk)
+    return q, k, v
+
+
+def _attn_core(q, k, v, q_pos, k_pos, *, causal: bool, scale: float,
+               soft_cap: float = 0.0) -> jax.Array:
+    """q (B,Sq,KV,G,hd)  k,v (B,Sk,KV,hd)  ->  (B,Sq,KV,G,hd).
+
+    KV heads stay un-repeated; the group dim G rides along so GQA does not
+    materialize repeated K/V.  The ``fused_attention`` scope marks the
+    region the Pallas flash kernel replaces on TPU — the roofline analysis
+    attributes its HBM traffic separately (hlo_cost.TRACKED_SCOPES).
+    """
+    with jax.named_scope("fused_attention"):
+        s = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32) * scale
+        if soft_cap > 0:
+            s = jnp.tanh(s / soft_cap) * soft_cap
+        if causal:
+            m = q_pos[:, :, None] >= k_pos[:, None, :]          # (B, Sq, Sk)
+            s = jnp.where(m[:, None, None, :, :], s, NEG_INF)
+        elif k_pos is not None and q_pos is not None:
+            m = k_pos[:, None, :] >= 0                           # padding mask
+            s = jnp.where(m[:, None, None, :, :], s, NEG_INF)
+        p_attn = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bkgqs,bskh->bqkgh", p_attn, v)
+
+
+def multihead_attention(
+    p, x: jax.Array, cfg: ModelConfig,
+    *,
+    kv_src: Optional[jax.Array] = None,     # cross-attn source
+    q_positions: Optional[jax.Array] = None,  # (B, Sq) int32
+    k_positions: Optional[jax.Array] = None,  # (B, Sk)
+    causal: Optional[bool] = None,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill / encoder)."""
+    B, Sq, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // KV
+    cross = kv_src is not None
+    src = kv_src if cross else x
+    causal = (cfg.causal and not cross) if causal is None else causal
+    rope_q = q_positions if not cross else None
+    rope_k = k_positions if not cross else None
+    q, k, v = _project_qkv(p, x, src, cfg, rope_q, rope_k)
+    q = constrain(q.reshape(B, Sq, KV, G, hd), "batch", "seq_fb", "kv_heads",
+                  "heads_q", "head_dim")
+    k = constrain(k, "batch", None, "kv_heads", "head_dim")
+    v = constrain(v, "batch", None, "kv_heads", "head_dim")
+    scale = 1.0 / (hd ** 0.5)
+
+    Sk = src.shape[1]
+    chunk = cfg.attn_chunk
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+    if k_positions is None:
+        k_positions = jnp.broadcast_to(jnp.arange(Sk, dtype=jnp.int32), (B, Sk))
+
+    if Sq > 2 * chunk and Sq % chunk == 0:
+        nq = Sq // chunk
+        qc = jnp.moveaxis(q.reshape(B, nq, chunk, KV, G, hd), 1, 0)
+        pc = jnp.moveaxis(q_positions.reshape(B, nq, chunk), 1, 0)
+        o = jax.lax.map(
+            lambda args: _attn_core(
+                args[0], k, v, args[1], k_positions,
+                causal=causal, scale=scale,
+                soft_cap=cfg.attn_logit_soft_cap),
+            (qc, pc),
+        )
+        o = jnp.moveaxis(o, 0, 1).reshape(B, Sq, KV, G, hd)
+    else:
+        o = _attn_core(q, k, v, q_positions, k_positions,
+                       causal=causal, scale=scale,
+                       soft_cap=cfg.attn_logit_soft_cap)
+    o = constrain(o, "batch", "seq_fb", "kv_heads", "heads_q", "head_dim")
+    if cfg.tp_attn_inner:
+        # row-parallel o-proj: flatten heads to the 128-aligned (H*hd) dim,
+        # shard it over `model`, contract -> partial sums + one all-reduce.
+        # Removes the model-axis-redundant o-proj the baseline HLO shows
+        # when the head count does not divide the axis (§Perf lever).
+        o_flat = constrain(o.reshape(B, Sq, H * hd), "batch", "seq",
+                           "attn_inner")
+        out = o_flat @ constrain(p["wo"].reshape(H * hd, D), "attn_inner",
+                                 "d_model")
+    else:
+        out = jnp.einsum("bqhx,hxd->bqd", o.reshape(B, Sq, H, hd), p["wo"])
+    if cross and "gate" in p:
+        out = jnp.tanh(p["gate"]).astype(out.dtype) * out
+    return constrain(out, "batch", "seq", "d_model")
+
+
+# --------------------------------------------------------------------------
+# KV cache (decode)
+# --------------------------------------------------------------------------
+
+def init_cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, ParamDef]:
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": ParamDef((batch, max_len, KV, hd),
+                      ("batch", "kv_seq", "kv_heads", "head_dim"), cfg.dtype,
+                      init="zeros"),
+        "v": ParamDef((batch, max_len, KV, hd),
+                      ("batch", "kv_seq", "kv_heads", "head_dim"), cfg.dtype,
+                      init="zeros"),
+    }
+
+
+def decode_attention(
+    p, x: jax.Array, cache: Dict[str, jax.Array], pos: jax.Array,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode. x (B,1,D); cache k/v (B,Smax,KV,hd); pos scalar."""
+    B, _, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // KV
+    posb = jnp.broadcast_to(pos.astype(jnp.int32), (B, 1))
+    q, k_new, v_new = _project_qkv(p, x, x, cfg, posb, posb)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    k = constrain(k, "batch", "kv_seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "kv_seq", "kv_heads", "head_dim")
+    q = q.reshape(B, 1, KV, G, hd)
+    with jax.named_scope("fused_attention"):
+        s = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32) / (hd ** 0.5)
+        if cfg.attn_logit_soft_cap > 0:
+            s = jnp.tanh(s / cfg.attn_logit_soft_cap) * cfg.attn_logit_soft_cap
+        Smax = k.shape[1]
+        valid = jnp.arange(Smax, dtype=jnp.int32)[None, :] <= pos
+        s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        o = jnp.einsum("bkgqs,bskh->bqkgh", w, v).reshape(B, 1, H, hd)
+    out = jnp.einsum("bqhx,hxd->bqd", o, p["wo"])
+    return constrain(out, "batch", "seq", "d_model"), {"k": k, "v": v}

@@ -1,0 +1,191 @@
+"""Shared layers: norms, activations, MLPs, embeddings, RoPE.
+
+Everything is a (param_defs, apply) pair built on
+:class:`repro.parallel.sharding.ParamDef` so shape, dtype, logical sharding
+axes and initializer live in one place.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ParamDef, constrain
+from .common import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def norm_defs(cfg: ModelConfig, dim: Optional[int] = None) -> Dict[str, ParamDef]:
+    d = dim or cfg.d_model
+    defs = {"scale": ParamDef((d,), ("d_model",), "float32", init="ones")}
+    if cfg.norm == "layer":
+        defs["bias"] = ParamDef((d,), ("d_model",), "float32", init="zeros")
+    return defs
+
+
+def apply_norm(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layer":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(scale: jax.Array, x: jax.Array, eps: float) -> jax.Array:
+    """qk-norm: RMS over the head_dim of (..., head_dim)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+def group_norm_heads(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head group norm used by xLSTM cells: x is (..., H, hd)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Activations
+# --------------------------------------------------------------------------
+
+def activate(h: jax.Array, g: Optional[jax.Array], act: str) -> jax.Array:
+    if act == "silu_glu":
+        return jax.nn.silu(g) * h
+    if act == "gelu_glu":
+        return jax.nn.gelu(g) * h
+    if act == "gelu":
+        return jax.nn.gelu(h)
+    if act == "relu2":
+        r = jax.nn.relu(h)
+        return r * r
+    if act == "silu":
+        return jax.nn.silu(h)
+    raise ValueError(act)
+
+
+def is_glu(act: str) -> bool:
+    return act.endswith("_glu")
+
+
+# --------------------------------------------------------------------------
+# Dense FFN
+# --------------------------------------------------------------------------
+
+def mlp_defs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, ParamDef]:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    dt = cfg.dtype
+    defs = {
+        "w_up": ParamDef((D, F), ("d_model", "d_ff"), dt),
+        "w_down": ParamDef((F, D), ("d_ff", "d_model"), dt, fan_in_axes=(0,)),
+    }
+    if is_glu(cfg.act):
+        defs["w_gate"] = ParamDef((D, F), ("d_model", "d_ff"), dt)
+    return defs
+
+
+def apply_mlp(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = x @ p["w_up"]
+    g = x @ p["w_gate"] if "w_gate" in p else None
+    h = activate(h, g, cfg.act)
+    if h.ndim == 3:
+        h = constrain(h, "batch", "seq", "d_ff")
+    else:  # (tokens, d_ff) — MoE shared-expert path
+        h = constrain(h, "batch", "d_ff")
+    return h @ p["w_down"]
+
+
+# --------------------------------------------------------------------------
+# Embeddings / logits
+# --------------------------------------------------------------------------
+
+def embed_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    V, D = cfg.vocab_size, cfg.d_model
+    defs = {
+        "tok": ParamDef((V, D), ("vocab", "d_model"), "float32", init="embed",
+                        scale=0.02),
+    }
+    if not cfg.tie_embeddings:
+        defs["head"] = ParamDef((D, V), ("d_model", "vocab"), cfg.dtype)
+    if cfg.pos_emb == "learned":
+        defs["pos"] = ParamDef((cfg.max_seq_len if cfg.max_seq_len < 65536
+                                else 65536, D),
+                               ("seq", "d_model"), "float32", init="embed",
+                               scale=0.02)
+    return defs
+
+
+def embed_tokens(p, tokens: jax.Array, cfg: ModelConfig,
+                 positions: Optional[jax.Array] = None) -> jax.Array:
+    x = jnp.take(p["tok"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.pos_emb == "learned":
+        assert positions is not None
+        x = x + jnp.take(p["pos"], positions, axis=0).astype(cfg.dtype)
+    return constrain(x, "batch", "seq", "d_model")
+
+
+def logits_from_hidden(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    with jax.named_scope("logits"):
+        if cfg.tie_embeddings:
+            w = p["tok"].astype(cfg.dtype).T
+        else:
+            w = p["head"]
+        out = x @ w
+        return constrain(out, "batch", "seq", "vocab")
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_cos_sin(positions: jax.Array, dim: int, theta: float,
+                 dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    """positions (...,) -> cos/sin (..., dim//2)."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, hd); cos/sin (..., S, hd//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Short causal depthwise conv (mamba / xlstm front conv)
+# --------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array, tail: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x (B, L, C), w (C, W).
+
+    Returns (y, new_tail) where tail (B, W-1, C) carries state across
+    prefill/decode boundaries (zeros if None).
+    """
+    B, L, C = x.shape
+    W = w.shape[-1]
+    if tail is None:
+        tail = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)          # (B, L+W-1, C)
+    y = jnp.zeros_like(x)
+    for k in range(W):
+        y = y + xp[:, k:k + L, :] * w[:, k]
+    new_tail = xp[:, L:, :] if W > 1 else tail
+    return y, new_tail

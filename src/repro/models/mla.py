@@ -1,0 +1,186 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV is compressed to a per-token latent ``c_kv`` of rank ``kv_lora_rank``
+plus one shared RoPE key of ``rope_head_dim``; per-head K/V are re-expanded
+through ``wk_b``/``wv_b``.  The decode cache stores only
+``(B, S, kv_lora + rope_hd)`` — 576 floats/token for DeepSeek-V2 vs
+2*128*128 = 32768 for the equivalent GQA cache.
+
+Two decode paths:
+* ``naive``    — re-expand K/V from the latent every step (paper-faithful
+  baseline; compute O(S * r * H * d) per token).
+* ``absorbed`` — fold ``wk_b`` into the query and ``wv_b`` into the output
+  so attention runs entirely in the latent space (compute O(S * r * H));
+  enabled by ``cfg.mla_absorb`` and measured in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ParamDef, constrain
+from .common import ModelConfig
+from .layers import rope_cos_sin
+from .attention import NEG_INF
+
+
+def _rope_pairs(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """RoPE over the last dim of x (..., S, [H,] r)."""
+    r = x.shape[-1]
+    cos, sin = rope_cos_sin(pos, r, theta)          # (B, S, r/2)
+    while cos.ndim < x.ndim:
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = x[..., : r // 2], x[..., r // 2:]
+    c, s = cos.astype(x.dtype), sin.astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def mla_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    D, H = cfg.d_model, cfg.n_heads
+    r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    dt = cfg.dtype
+    defs: Dict[str, ParamDef] = {}
+    if r_q:
+        defs["wq_a"] = ParamDef((D, r_q), ("d_model", "none"), dt)
+        defs["q_a_norm"] = ParamDef((r_q,), ("none",), "float32", init="ones")
+        defs["wq_b"] = ParamDef((r_q, H, dn + dr), ("none", "heads", "head_dim"), dt,
+                                fan_in_axes=(0,))
+    else:
+        defs["wq"] = ParamDef((D, H, dn + dr), ("d_model", "heads", "head_dim"), dt,
+                              fan_in_axes=(0,))
+    defs["wkv_a"] = ParamDef((D, r_kv + dr), ("d_model", "none"), dt)
+    defs["kv_a_norm"] = ParamDef((r_kv,), ("none",), "float32", init="ones")
+    defs["wk_b"] = ParamDef((r_kv, H, dn), ("none", "heads", "head_dim"), dt,
+                            fan_in_axes=(0,))
+    defs["wv_b"] = ParamDef((r_kv, H, dv), ("none", "heads", "head_dim"), dt,
+                            fan_in_axes=(0,))
+    defs["wo"] = ParamDef((H, dv, D), ("heads", "head_dim", "d_model"), dt,
+                          fan_in_axes=(0, 1))
+    return defs
+
+
+def _rms(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+def _queries(p, x: jax.Array, pos: jax.Array, cfg: ModelConfig):
+    dn, dr = cfg.nope_head_dim, cfg.rope_head_dim
+    if cfg.q_lora_rank:
+        cq = _rms(x @ p["wq_a"], p["q_a_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = _rope_pairs(q_rope, pos, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent_kv(p, x: jax.Array, pos: jax.Array, cfg: ModelConfig):
+    r_kv, dr = cfg.kv_lora_rank, cfg.rope_head_dim
+    ckv = x @ p["wkv_a"]                              # (B, S, r+dr)
+    c_kv = _rms(ckv[..., :r_kv], p["kv_a_norm"], cfg.norm_eps)
+    k_rope = _rope_pairs(ckv[..., r_kv:], pos, cfg.rope_theta)   # (B, S, dr)
+    return c_kv, k_rope
+
+
+def mla_attention(p, x: jax.Array, cfg: ModelConfig,
+                  q_positions: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence MLA (train / prefill): expand K,V per head."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q_nope, q_rope = _queries(p, x, q_positions, cfg)
+    c_kv, k_rope = _latent_kv(p, x, q_positions, cfg)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wv_b"])
+    q_nope = constrain(q_nope, "batch", "seq_fb", "heads", "head_dim")
+    k_nope = constrain(k_nope, "batch", None, "heads", "head_dim")
+
+    scale = 1.0 / ((dn + dr) ** 0.5)
+
+    def chunk_attn(args):
+        qn, qr, qp = args
+        with jax.named_scope("fused_attention"):
+            s = (jnp.einsum("bqhk,bshk->bhqs", qn, k_nope)
+                 + jnp.einsum("bqhk,bsk->bhqs", qr, k_rope))
+            s = s.astype(jnp.float32) * scale
+            m = qp[:, :, None] >= q_positions[:, None, :]
+            s = jnp.where(m[:, None, :, :], s, NEG_INF)
+            w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+            return jnp.einsum("bhqs,bshk->bqhk", w, v)
+
+    chunk = cfg.attn_chunk
+    if S > 2 * chunk and S % chunk == 0:
+        nq = S // chunk
+        qn = jnp.moveaxis(q_nope.reshape(B, nq, chunk, H, dn), 1, 0)
+        qr = jnp.moveaxis(q_rope.reshape(B, nq, chunk, H, dr), 1, 0)
+        qp = jnp.moveaxis(q_positions.reshape(B, nq, chunk), 1, 0)
+        o = jax.lax.map(chunk_attn, (qn, qr, qp))
+        o = jnp.moveaxis(o, 0, 1).reshape(B, S, H, dv)
+    else:
+        o = chunk_attn((q_nope, q_rope, q_positions))
+    out = jnp.einsum("bqhk,hkd->bqd", o, p["wo"])
+    return constrain(out, "batch", "seq", "d_model")
+
+
+# --------------------------------------------------------------------------
+# Decode with the latent cache
+# --------------------------------------------------------------------------
+
+def mla_cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, ParamDef]:
+    return {
+        "c_kv": ParamDef((batch, max_len, cfg.kv_lora_rank),
+                         ("batch", "kv_seq", "none"), cfg.dtype, init="zeros"),
+        "k_rope": ParamDef((batch, max_len, cfg.rope_head_dim),
+                           ("batch", "kv_seq", "none"), cfg.dtype, init="zeros"),
+    }
+
+
+def mla_decode(p, x: jax.Array, cache: Dict[str, jax.Array], pos: jax.Array,
+               cfg: ModelConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B, _, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    posb = jnp.broadcast_to(pos.astype(jnp.int32), (B, 1))
+    q_nope, q_rope = _queries(p, x, posb, cfg)                 # (B,1,H,*)
+    c_new, kr_new = _latent_kv(p, x, posb, cfg)                # (B,1,*)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1)
+    c_kv = constrain(c_kv, "batch", "kv_seq", None)
+    k_rope = constrain(k_rope, "batch", "kv_seq", None)
+    Smax = c_kv.shape[1]
+    scale = 1.0 / ((dn + dr) ** 0.5)
+    valid = jnp.arange(Smax, dtype=jnp.int32)[None, :] <= pos
+
+    if cfg.mla_absorb:
+        # fold wk_b into q, run attention in latent space, fold wv_b out
+        q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"])     # (B,1,H,r)
+        s = (jnp.einsum("bqhr,bsr->bhqs", q_lat, c_kv)
+             + jnp.einsum("bqhk,bsk->bhqs", q_rope, k_rope))
+        s = s.astype(jnp.float32) * scale
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(c_kv.dtype)
+        o_lat = jnp.einsum("bhqs,bsr->bqhr", w, c_kv)               # (B,1,H,r)
+        o = jnp.einsum("bqhr,rhk->bqhk", o_lat, p["wv_b"])          # (B,1,H,dv)
+    else:
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wk_b"])
+        v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wv_b"])
+        s = (jnp.einsum("bqhk,bshk->bhqs", q_nope, k_nope)
+             + jnp.einsum("bqhk,bsk->bhqs", q_rope, k_rope))
+        s = s.astype(jnp.float32) * scale
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        o = jnp.einsum("bhqs,bshk->bqhk", w, v)
+    out = jnp.einsum("bqhk,hkd->bqd", o, p["wo"])
+    out = constrain(out, "batch", "seq", "d_model")
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

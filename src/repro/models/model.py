@@ -1,0 +1,109 @@
+"""LanguageModel facade: defs, init, loss, prefill, decode — the public
+surface the trainer / server / dry-run all share.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import sharding as shd
+from .common import ModelConfig
+from . import transformer as tfm
+
+
+def model_param_defs(cfg: ModelConfig):
+    return tfm.model_defs(cfg)
+
+
+def abstract_params(cfg: ModelConfig):
+    return shd.tree_abstract(model_param_defs(cfg))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return shd.tree_instantiate(model_param_defs(cfg), key)
+
+
+def param_shardings(cfg: ModelConfig, mesh, rules=shd.DEFAULT):
+    return shd.tree_shardings(model_param_defs(cfg), mesh, rules)
+
+
+def cache_param_defs(cfg: ModelConfig, batch: int, max_len: int):
+    return tfm.cache_defs(cfg, batch, max_len)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, key=None):
+    key = key if key is not None else jax.random.key(0)
+    return shd.tree_instantiate(tfm.cache_defs(cfg, batch, max_len), key)
+
+
+# --------------------------------------------------------------------------
+# Loss
+# --------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token NLL.  logits (B,S,V) possibly vocab-sharded; labels (B,S)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)                       # (B, S)
+    ll = jnp.take_along_axis(lf, labels[..., None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ModelConfig
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """batch: tokens (B,S), labels (B,S); optional enc_embeds / img_embeds /
+    loss_mask.  Returns (loss, metrics)."""
+    logits, aux, _ = tfm.forward_full(
+        params, cfg, batch["tokens"],
+        enc_embeds=batch.get("enc_embeds"),
+        img_embeds=batch.get("img_embeds"),
+    )
+    nll = cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    loss = nll + aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# Serving entry points
+# --------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, tokens: jax.Array,
+            enc_embeds: Optional[jax.Array] = None,
+            img_embeds: Optional[jax.Array] = None):
+    """Full-context forward collecting decode state.
+
+    Returns (last_logits (B,V), states) — states have per-segment stacked
+    block shapes (reps, B, S, ...) ready for cache placement.
+    """
+    logits, _, states = tfm.forward_full(
+        params, cfg, tokens, enc_embeds=enc_embeds, img_embeds=img_embeds,
+        collect_state=True, remat=False)
+    return logits[:, -1, :], states
+
+
+def decode_step(params, cfg: ModelConfig, caches: List[Any],
+                token: jax.Array, pos: jax.Array):
+    """One token for every sequence in the batch.  token (B,1); pos scalar."""
+    logits, new_caches = tfm.decode_one(params, cfg, caches, token, pos)
+    return logits[:, 0, :], new_caches
+
+
+# --------------------------------------------------------------------------
+# Introspection helpers
+# --------------------------------------------------------------------------
+
+def param_count(cfg: ModelConfig) -> int:
+    return shd.tree_count(model_param_defs(cfg))
+
+
+def param_bytes(cfg: ModelConfig) -> int:
+    return shd.tree_nbytes(model_param_defs(cfg))

@@ -1,0 +1,367 @@
+"""Block assembly and the full model: scan-over-superblocks decoder,
+optional encoder (whisper), VLM cross-attention, caches for decode.
+
+HLO discipline: a model is a list of *segments*; each segment is a repeated
+superblock whose stacked parameters are consumed by one ``lax.scan``.  A
+100-layer model with a 5-block pattern lowers to one scan of length 20 over
+a 5-block body — module size is O(pattern), compile time is flat across the
+assigned archs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ParamDef, constrain, stack_defs
+from . import attention as attn
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from . import xlstm as xlstm_mod
+from .common import BlockDef, ModelConfig
+from .layers import (apply_mlp, apply_norm, embed_defs, embed_tokens,
+                     logits_from_hidden, mlp_defs, norm_defs)
+
+
+# --------------------------------------------------------------------------
+# Per-block param / cache defs
+# --------------------------------------------------------------------------
+
+def block_defs(cfg: ModelConfig, b: BlockDef) -> Dict[str, Any]:
+    defs: Dict[str, Any] = {"norm1": norm_defs(cfg)}
+    if b.mixer == "attn":
+        defs["mixer"] = attn.attn_defs(cfg)
+    elif b.mixer == "cross_attn":
+        defs["mixer"] = attn.attn_defs(cfg, cross=True)
+    elif b.mixer == "attn+cross":
+        defs["mixer"] = attn.attn_defs(cfg)
+        defs["norm_x"] = norm_defs(cfg)
+        defs["cross"] = attn.attn_defs(cfg, cross=True)
+    elif b.mixer == "mla":
+        defs["mixer"] = mla_mod.mla_defs(cfg)
+    elif b.mixer == "mamba":
+        defs["mixer"] = ssm_mod.mamba_defs(cfg)
+    elif b.mixer == "mlstm":
+        defs["mixer"] = xlstm_mod.mlstm_defs(cfg)
+    elif b.mixer == "slstm":
+        defs["mixer"] = xlstm_mod.slstm_defs(cfg)
+    else:
+        raise ValueError(b.mixer)
+    if b.ffn == "dense":
+        defs["norm2"] = norm_defs(cfg)
+        defs["ffn"] = mlp_defs(cfg)
+    elif b.ffn == "moe":
+        defs["norm2"] = norm_defs(cfg)
+        defs["ffn"] = moe_mod.moe_defs(cfg)
+    return defs
+
+
+def block_cache_defs(cfg: ModelConfig, b: BlockDef, batch: int,
+                     max_len: int) -> Dict[str, Any]:
+    """Decode-time cache/state defs for one block ({} if stateless)."""
+    if b.mixer == "attn":
+        return attn.init_cache_defs(cfg, batch, max_len)
+    if b.mixer == "cross_attn":
+        S = cfg.n_image_tokens or cfg.n_audio_frames
+        c = attn.init_cache_defs(cfg, batch, S)
+        return {"ck": c["k"], "cv": c["v"]}
+    if b.mixer == "attn+cross":
+        c = attn.init_cache_defs(cfg, batch, max_len)
+        cc = attn.init_cache_defs(cfg, batch, cfg.n_audio_frames)
+        return {"k": c["k"], "v": c["v"], "ck": cc["k"], "cv": cc["v"]}
+    if b.mixer == "mla":
+        return mla_mod.mla_cache_defs(cfg, batch, max_len)
+    if b.mixer == "mamba":
+        return ssm_mod.state_defs(cfg, batch)
+    if b.mixer == "mlstm":
+        return xlstm_mod.mlstm_state_defs(cfg, batch)
+    if b.mixer == "slstm":
+        return xlstm_mod.slstm_state_defs(cfg, batch)
+    raise ValueError(b.mixer)
+
+
+# --------------------------------------------------------------------------
+# Block application — full sequence
+# --------------------------------------------------------------------------
+
+def _cross_kv(p, src: jax.Array, cfg: ModelConfig):
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    return k, v
+
+
+def apply_block_full(p, b: BlockDef, x: jax.Array, cfg: ModelConfig,
+                     ctx: Dict[str, Any]) -> Tuple[jax.Array, jax.Array,
+                                                   Dict[str, Any]]:
+    """Returns (x, aux_loss, state) — state non-empty when ctx['collect']."""
+    aux = jnp.zeros((), jnp.float32)
+    state: Dict[str, Any] = {}
+    collect = ctx.get("collect", False)
+    h = apply_norm(p["norm1"], x, cfg)
+    pos = ctx.get("positions")
+    if b.mixer == "attn":
+        o = attn.multihead_attention(p["mixer"], h, cfg, q_positions=pos,
+                                     k_positions=pos)
+        if collect:
+            q, k, v = attn._project_qkv(p["mixer"], h, h, cfg, pos, pos)
+            state = {"k": k, "v": v}
+    elif b.mixer == "cross_attn":
+        o = attn.multihead_attention(p["mixer"], h, cfg, kv_src=ctx["cross_src"],
+                                     q_positions=pos, causal=False)
+        if collect:
+            ck, cv = _cross_kv(p["mixer"], ctx["cross_src"], cfg)
+            state = {"ck": ck, "cv": cv}
+    elif b.mixer == "attn+cross":
+        o = attn.multihead_attention(p["mixer"], h, cfg, q_positions=pos,
+                                     k_positions=pos)
+        x = x + cfg.residual_scale * o
+        h2 = apply_norm(p["norm_x"], x, cfg)
+        o = attn.multihead_attention(p["cross"], h2, cfg,
+                                     kv_src=ctx["cross_src"], causal=False)
+        if collect:
+            q, k, v = attn._project_qkv(p["mixer"], h, h, cfg, pos, pos)
+            ck, cv = _cross_kv(p["cross"], ctx["cross_src"], cfg)
+            state = {"k": k, "v": v, "ck": ck, "cv": cv}
+    elif b.mixer == "mla":
+        o = mla_mod.mla_attention(p["mixer"], h, cfg, q_positions=pos)
+        if collect:
+            c_kv, k_rope = mla_mod._latent_kv(p["mixer"], h, pos, cfg)
+            state = {"c_kv": c_kv, "k_rope": k_rope}
+    elif b.mixer == "mamba":
+        if collect:
+            o, state = ssm_mod.mamba_mixer(p["mixer"], h, cfg,
+                                           return_state=True)
+        else:
+            o = ssm_mod.mamba_mixer(p["mixer"], h, cfg)
+    elif b.mixer == "mlstm":
+        if collect:
+            o, state = xlstm_mod.mlstm_mixer(p["mixer"], h, cfg,
+                                             return_state=True)
+        else:
+            o = xlstm_mod.mlstm_mixer(p["mixer"], h, cfg)
+    elif b.mixer == "slstm":
+        if collect:
+            o, state = xlstm_mod.slstm_mixer(p["mixer"], h, cfg,
+                                             return_state=True)
+        else:
+            o = xlstm_mod.slstm_mixer(p["mixer"], h, cfg)
+    else:
+        raise ValueError(b.mixer)
+    x = x + cfg.residual_scale * o
+
+    if b.ffn != "none":
+        h = apply_norm(p["norm2"], x, cfg)
+        if b.ffn == "dense":
+            o = apply_mlp(p["ffn"], h, cfg)
+        else:
+            o, aux = moe_mod.moe_ffn(p["ffn"], h, cfg)
+        x = x + cfg.residual_scale * o
+    x = constrain(x, "batch", "seq", "d_model")
+    return x, aux, state
+
+
+# --------------------------------------------------------------------------
+# Block application — single-token decode
+# --------------------------------------------------------------------------
+
+def apply_block_decode(p, b: BlockDef, x: jax.Array, cache: Dict[str, Any],
+                       pos: jax.Array, cfg: ModelConfig
+                       ) -> Tuple[jax.Array, Dict[str, Any]]:
+    h = apply_norm(p["norm1"], x, cfg)
+    if b.mixer == "attn":
+        o, cache = attn.decode_attention(p["mixer"], h, cache, pos, cfg)
+    elif b.mixer == "cross_attn":
+        o = _cross_attend_cached(p["mixer"], h, cache["ck"], cache["cv"], cfg)
+    elif b.mixer == "attn+cross":
+        sc = {"k": cache["k"], "v": cache["v"]}
+        o, sc = attn.decode_attention(p["mixer"], h, sc, pos, cfg)
+        cache = {**cache, **sc}
+        x = x + cfg.residual_scale * o
+        h2 = apply_norm(p["norm_x"], x, cfg)
+        o = _cross_attend_cached(p["cross"], h2, cache["ck"], cache["cv"], cfg)
+    elif b.mixer == "mla":
+        o, cache = mla_mod.mla_decode(p["mixer"], h, cache, pos, cfg)
+    elif b.mixer == "mamba":
+        o, cache = ssm_mod.mamba_decode(p["mixer"], h, cache, cfg)
+    elif b.mixer == "mlstm":
+        o, cache = xlstm_mod.mlstm_mixer(p["mixer"], h, cfg, state=cache,
+                                         return_state=True)
+    elif b.mixer == "slstm":
+        o, cache = xlstm_mod.slstm_mixer(p["mixer"], h, cfg, state=cache,
+                                         return_state=True)
+    else:
+        raise ValueError(b.mixer)
+    x = x + cfg.residual_scale * o
+    if b.ffn != "none":
+        h = apply_norm(p["norm2"], x, cfg)
+        if b.ffn == "dense":
+            o = apply_mlp(p["ffn"], h, cfg)
+        else:
+            o, _ = moe_mod.moe_ffn(p["ffn"], h, cfg)
+        x = x + cfg.residual_scale * o
+    return x, cache
+
+
+def _cross_attend_cached(p, x, ck, cv, cfg: ModelConfig) -> jax.Array:
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // KV
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qk_norm:
+        from .layers import rms_head_norm
+        q = rms_head_norm(p["q_norm"], q, cfg.norm_eps)
+    q = q.reshape(B, S, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, ck).astype(jnp.float32) / (hd ** 0.5)
+    w = jax.nn.softmax(s, axis=-1).astype(cv.dtype)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", w, cv).reshape(B, S, H, hd)
+    out = jnp.einsum("bqhx,hxd->bqd", o, p["wo"])
+    if "gate" in p:
+        out = jnp.tanh(p["gate"]).astype(out.dtype) * out
+    return out
+
+
+# --------------------------------------------------------------------------
+# Model defs
+# --------------------------------------------------------------------------
+
+def model_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    defs: Dict[str, Any] = {"embed": embed_defs(cfg)}
+    segs = []
+    for unit, reps in cfg.segments():
+        unit_defs = {f"b{i}": block_defs(cfg, b) for i, b in enumerate(unit)}
+        segs.append(stack_defs(unit_defs, reps))
+    defs["segments"] = segs
+    defs["final_norm"] = norm_defs(cfg)
+    if cfg.is_encoder_decoder:
+        enc_unit = {"b0": block_defs(cfg, BlockDef("attn", "dense"))}
+        defs["encoder"] = {
+            "blocks": stack_defs(enc_unit, cfg.n_encoder_layers),
+            "final_norm": norm_defs(cfg),
+            "pos": ParamDef((cfg.n_audio_frames, cfg.d_model),
+                            ("seq", "d_model"), "float32", init="embed",
+                            scale=0.02),
+        }
+    return defs
+
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> List[Dict[str, Any]]:
+    segs = []
+    for unit, reps in cfg.segments():
+        unit_caches = {
+            f"b{i}": block_cache_defs(cfg, b, batch, max_len)
+            for i, b in enumerate(unit)
+        }
+        segs.append(stack_defs(unit_caches, reps))
+    return segs
+
+
+# --------------------------------------------------------------------------
+# Forward passes
+# --------------------------------------------------------------------------
+
+def _run_encoder(params, cfg: ModelConfig, enc_embeds: jax.Array) -> jax.Array:
+    """Whisper-style encoder over precomputed (STUB) frame embeddings."""
+    enc = params["encoder"]
+    x = enc_embeds + enc["pos"].astype(enc_embeds.dtype)[None, : enc_embeds.shape[1]]
+    x = constrain(x, "batch", "seq", "d_model")
+    b = BlockDef("attn", "dense")
+
+    def body(carry, layer_p):
+        y, _, _ = apply_block_full(layer_p["b0"], b, carry, cfg,
+                                   {"positions": None})
+        return y, None
+
+    body = jax.checkpoint(body) if cfg.remat == "full" else body
+    x, _ = jax.lax.scan(body, x, enc["blocks"])
+    return apply_norm(enc["final_norm"], x, cfg)
+
+
+def forward_full(params, cfg: ModelConfig, tokens: jax.Array,
+                 enc_embeds: Optional[jax.Array] = None,
+                 img_embeds: Optional[jax.Array] = None,
+                 collect_state: bool = False,
+                 remat: Optional[bool] = None):
+    """Full-sequence forward.  Returns (logits, aux, states).
+
+    ``tokens`` (B, S) int32.  For enc-dec, ``enc_embeds`` (B, frames, D);
+    for VLM, ``img_embeds`` (B, n_img, D).
+    """
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = embed_tokens(params["embed"], tokens, cfg, positions)
+    cross_src = None
+    if cfg.is_encoder_decoder:
+        assert enc_embeds is not None
+        cross_src = _run_encoder(params, cfg, enc_embeds)
+    elif cfg.n_image_tokens:
+        assert img_embeds is not None
+        cross_src = constrain(img_embeds, "batch", "seq", "d_model")
+
+    ctx = {"positions": positions, "cross_src": cross_src,
+           "collect": collect_state}
+    if remat is False:
+        remat_mode = "none"
+    elif remat is True:
+        remat_mode = "full"
+    else:
+        remat_mode = cfg.remat
+    aux_total = jnp.zeros((), jnp.float32)
+    states: List[Any] = []
+    for seg_params, (unit, reps) in zip(params["segments"], cfg.segments()):
+
+        def body(carry, layer_p):
+            y, aux = carry
+            st = {}
+            for i, b in enumerate(unit):
+                y, a, s = apply_block_full(layer_p[f"b{i}"], b, y, cfg, ctx)
+                aux = aux + a
+                if collect_state:
+                    st[f"b{i}"] = s
+            return (y, aux), st if collect_state else None
+
+        if remat_mode == "full":
+            scan_body = jax.checkpoint(body)
+        elif remat_mode == "dots":
+            # save matmul outputs, recompute the cheap elementwise glue —
+            # trades bwd recompute W for activation memory (§Perf lever)
+            scan_body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+        else:
+            scan_body = body
+        (x, aux_total), seg_state = jax.lax.scan(
+            scan_body, (x, aux_total), seg_params)
+        states.append(seg_state)
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = logits_from_hidden(params["embed"], x, cfg)
+    return logits, aux_total, (states if collect_state else None)
+
+
+def decode_one(params, cfg: ModelConfig, caches: List[Any], token: jax.Array,
+               pos: jax.Array) -> Tuple[jax.Array, List[Any]]:
+    """One decode step.  token (B, 1) int32; pos scalar int32."""
+    B = token.shape[0]
+    posb = jnp.broadcast_to(pos.astype(jnp.int32)[None, None], (B, 1))
+    x = embed_tokens(params["embed"], token, cfg, posb)
+    new_caches: List[Any] = []
+    for seg_params, seg_cache, (unit, reps) in zip(
+            params["segments"], caches, cfg.segments()):
+
+        def body(y, args):
+            layer_p, layer_c = args
+            new_c = {}
+            for i, b in enumerate(unit):
+                y, c = apply_block_decode(layer_p[f"b{i}"], b, y,
+                                          layer_c[f"b{i}"], pos, cfg)
+                new_c[f"b{i}"] = c
+            return y, new_c
+
+        x, upd = jax.lax.scan(body, x, (seg_params, seg_cache))
+        new_caches.append(upd)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = logits_from_hidden(params["embed"], x, cfg)
+    return logits, new_caches

@@ -1,0 +1,270 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, sequential recurrence).
+
+mLSTM uses exponential input gating with a running stabilizer ``m`` (the
+paper's eq. 15-18); the chunkwise form here is the standard linear-attention
+chunking: intra-chunk quadratic scores with log-decay weights + inter-chunk
+recurrent state (C, n, m), carried by ``lax.scan``.  ``mlstm_cell_naive`` is
+the step-by-step oracle the tests compare against.
+
+Block-internal projection factors follow the paper (mLSTM up-factor 2,
+conv4, per-head GroupNorm, learnable skip, gated output).  The assigned
+xlstm-350m has ``d_ff=0``: there are no separate FFN blocks, exactly as in
+the paper's residual-block-only stacking.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ParamDef, constrain
+from .common import ModelConfig
+from .layers import causal_conv1d, group_norm_heads
+
+
+# ==========================================================================
+# mLSTM
+# ==========================================================================
+
+def mlstm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    D, H = cfg.d_model, cfg.n_heads
+    di = 2 * D
+    W = cfg.mamba_conv_width
+    dt = cfg.dtype
+    return {
+        "w_up": ParamDef((D, di), ("d_model", "d_ff"), dt),
+        "w_z": ParamDef((D, di), ("d_model", "d_ff"), dt),
+        "conv_w": ParamDef((di, W), ("d_ff", "none"), "float32", init="normal"),
+        "wq": ParamDef((di, di), ("d_ff", "none"), dt),
+        "wk": ParamDef((di, di), ("d_ff", "none"), dt),
+        "wv": ParamDef((di, di), ("d_ff", "none"), dt),
+        "wi": ParamDef((di, H), ("d_ff", "heads"), "float32", init="normal"),
+        "bi": ParamDef((H,), ("heads",), "float32", init="zeros"),
+        "wf": ParamDef((di, H), ("d_ff", "heads"), "float32", init="normal"),
+        "bf": ParamDef((H,), ("heads",), "float32", init="ones", scale=3.0),
+        "skip": ParamDef((di,), ("d_ff",), "float32", init="ones"),
+        "w_down": ParamDef((di, D), ("d_ff", "d_model"), dt, fan_in_axes=(0,)),
+    }
+
+
+def mlstm_state_defs(cfg: ModelConfig, batch: int) -> Dict[str, ParamDef]:
+    H = cfg.n_heads
+    di = 2 * cfg.d_model
+    hd = di // H
+    W = cfg.mamba_conv_width
+    return {
+        "C": ParamDef((batch, H, hd, hd), ("batch", "heads", "head_dim", "none"),
+                      "float32", init="zeros"),
+        "n": ParamDef((batch, H, hd), ("batch", "heads", "head_dim"),
+                      "float32", init="zeros"),
+        "m": ParamDef((batch, H), ("batch", "heads"), "float32", init="zeros"),
+        "conv": ParamDef((batch, W - 1, di), ("batch", "none", "d_ff"),
+                         cfg.dtype, init="zeros"),
+    }
+
+
+def _mlstm_chunk(q, k, v, li, lf, C_in, n_in, m_in):
+    """One chunk of the stabilized chunkwise mLSTM.
+
+    q,k,v: (B, H, T, hd) — k pre-scaled by 1/sqrt(hd);
+    li, lf: (B, H, T) log input / log forget gate;
+    state: C (B,H,hd,hd), n (B,H,hd), m (B,H).
+    Returns h (B,H,T,hd) and new state.
+    """
+    with jax.named_scope("mlstm_chunk"):
+        return _mlstm_chunk_impl(q, k, v, li, lf, C_in, n_in, m_in)
+
+
+def _mlstm_chunk_impl(q, k, v, li, lf, C_in, n_in, m_in):
+    B, H, T, hd = q.shape
+    F = jnp.cumsum(lf, axis=-1)                                # (B,H,T)
+    u = jax.lax.cummax(li - F, axis=2)                         # (B,H,T)
+    m_t = F + jnp.maximum(u, m_in[..., None])                  # (B,H,T)
+    # intra-chunk decay matrix  log w[t,s] = F_t - F_s + li_s - m_t  (s<=t)
+    logw = (F[..., :, None] - F[..., None, :] + li[..., None, :]
+            - m_t[..., :, None])
+    causal = jnp.tril(jnp.ones((T, T), bool))
+    w = jnp.where(causal, jnp.exp(logw), 0.0)                  # (B,H,T,T)
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) * w
+    inter_scale = jnp.exp(F + m_in[..., None] - m_t)           # (B,H,T)
+    # C is stored (v_dim, k_dim): queries contract the k index
+    num = (jnp.einsum("bhts,bhsd->bhtd", scores, v)
+           + inter_scale[..., None] * jnp.einsum("bhte,bhde->bhtd", q, C_in))
+    den = (jnp.sum(scores, axis=-1)
+           + inter_scale * jnp.einsum("bhtd,bhd->bht", q, n_in))
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+    m_out = m_t[..., -1]                                       # (B,H)
+    decay_out = jnp.exp(F[..., -1][..., None] - F + li - m_out[..., None])  # (B,H,T)
+    C_out = (jnp.exp(F[..., -1] + m_in - m_out)[..., None, None] * C_in
+             + jnp.einsum("bht,bhtd,bhte->bhde", decay_out, v, k))
+    n_out = (jnp.exp(F[..., -1] + m_in - m_out)[..., None] * n_in
+             + jnp.einsum("bht,bhtd->bhd", decay_out, k))
+    return h, (C_out, n_out, m_out)
+
+
+def mlstm_mixer(p, x: jax.Array, cfg: ModelConfig,
+                state: Optional[Dict[str, jax.Array]] = None,
+                return_state: bool = False):
+    B, L, D = x.shape
+    H = cfg.n_heads
+    di = 2 * D
+    hd = di // H
+    xr = x @ p["w_up"]
+    z = x @ p["w_z"]
+    xr = constrain(xr, "batch", "seq", "d_ff")
+    conv_tail = state["conv"] if state else None
+    xc, new_tail = causal_conv1d(xr, p["conv_w"].astype(xr.dtype), conv_tail)
+    xc = jax.nn.silu(xc)
+
+    def heads(t, w):
+        return (t @ w).reshape(B, L, H, hd).transpose(0, 2, 1, 3)
+
+    q = heads(xc, p["wq"]).astype(jnp.float32)
+    k = heads(xc, p["wk"]).astype(jnp.float32) / (hd ** 0.5)
+    v = heads(xr, p["wv"]).astype(jnp.float32)
+    li = (xr.astype(jnp.float32) @ p["wi"] + p["bi"]).transpose(0, 2, 1)  # (B,H,L)
+    lf = jax.nn.log_sigmoid(
+        (xr.astype(jnp.float32) @ p["wf"] + p["bf"])).transpose(0, 2, 1)
+
+    if state:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+    else:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.zeros((B, H), jnp.float32)
+
+    ch = cfg.scan_chunk
+    if L % ch == 0 and L > ch:
+        nc = L // ch
+
+        def split(t):
+            return jnp.moveaxis(t.reshape(B, H, nc, ch, *t.shape[3:]), 2, 0)
+
+        def split_g(t):
+            return jnp.moveaxis(t.reshape(B, H, nc, ch), 2, 0)
+
+        def body(carry, args):
+            qc, kc, vc, lic, lfc = args
+            h, new = _mlstm_chunk(qc, kc, vc, lic, lfc, *carry)
+            return new, h
+
+        (Cf, nf, mf), hs = jax.lax.scan(
+            jax.checkpoint(body), (C0, n0, m0),
+            (split(q), split(k), split(v), split_g(li), split_g(lf)))
+        h = jnp.moveaxis(hs, 0, 2).reshape(B, H, L, hd)
+    else:
+        h, (Cf, nf, mf) = _mlstm_chunk(q, k, v, li, lf, C0, n0, m0)
+
+    h = group_norm_heads(h.transpose(0, 2, 1, 3)).reshape(B, L, di)
+    h = (h + p["skip"] * xc.astype(jnp.float32)).astype(x.dtype)
+    h = h * jax.nn.silu(z)
+    h = constrain(h, "batch", "seq", "d_ff")
+    out = h @ p["w_down"]
+    out = constrain(out, "batch", "seq", "d_model")
+    if return_state:
+        return out, {"C": Cf, "n": nf, "m": mf, "conv": new_tail}
+    return out
+
+
+def mlstm_cell_naive(q, k, v, li, lf, C0, n0, m0):
+    """Sequential oracle over (B,H,T,hd) inputs (k pre-scaled)."""
+    def step(carry, args):
+        C, n, m = carry
+        qt, kt, vt, lit, lft = args
+        m_new = jnp.maximum(lft + m, lit)
+        i_p = jnp.exp(lit - m_new)
+        f_p = jnp.exp(lft + m - m_new)
+        C = f_p[..., None, None] * C + i_p[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :])      # (v_dim, k_dim)
+        n = f_p[..., None] * n + i_p[..., None] * kt
+        num = jnp.einsum("bhde,bhe->bhd", C, qt)
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)), jnp.exp(-m_new))
+        return (C, n, m_new), num / den[..., None]
+
+    seq = lambda t: jnp.moveaxis(t, 2, 0)
+    (_, _, _), hs = jax.lax.scan(
+        step, (C0, n0, m0), (seq(q), seq(k), seq(v), seq(li), seq(lf)))
+    return jnp.moveaxis(hs, 0, 2)
+
+
+# ==========================================================================
+# sLSTM
+# ==========================================================================
+
+def slstm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    D, H = cfg.d_model, cfg.n_heads
+    hd = D // H
+    dt = cfg.dtype
+    defs = {}
+    for g in ("z", "i", "f", "o"):
+        defs[f"w_{g}"] = ParamDef((D, H, hd), ("d_model", "heads", "head_dim"),
+                                  dt)
+        defs[f"r_{g}"] = ParamDef((H, hd, hd), ("heads", "head_dim", "none"),
+                                  "float32", init="normal")
+        defs[f"b_{g}"] = ParamDef((H, hd), ("heads", "head_dim"), "float32",
+                                  init="ones" if g == "f" else "zeros",
+                                  scale=1.0)
+    defs["out_proj"] = ParamDef((D, D), ("d_model", "none"), dt)
+    return defs
+
+
+def slstm_state_defs(cfg: ModelConfig, batch: int) -> Dict[str, ParamDef]:
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    mk = lambda init: ParamDef((batch, H, hd), ("batch", "heads", "head_dim"),
+                               "float32", init=init)
+    return {"c": mk("zeros"), "n": mk("zeros"), "h": mk("zeros"),
+            "m": mk("zeros")}
+
+
+def _slstm_scan(p, xg: Dict[str, jax.Array], state):
+    """xg[g]: (B, L, H, hd) pre-computed input projections."""
+    def step(carry, args):
+        c, n, h, m = carry
+        xz, xi, xf, xo = args
+
+        def rec(g, hh):
+            return jnp.einsum("bhd,hde->bhe", hh, p[f"r_{g}"]) + p[f"b_{g}"]
+
+        zt = jnp.tanh(xz + rec("z", h))
+        it = xi + rec("i", h)
+        ft = xf + rec("f", h)
+        ot = jax.nn.sigmoid(xo + rec("o", h))
+        m_new = jnp.maximum(jax.nn.log_sigmoid(ft) + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(jax.nn.log_sigmoid(ft) + m - m_new)
+        c = f_p * c + i_p * zt
+        n = f_p * n + i_p
+        h = ot * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    seq = lambda t: jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+    carry, hs = jax.lax.scan(
+        step, state, (seq(xg["z"]), seq(xg["i"]), seq(xg["f"]), seq(xg["o"])))
+    return jnp.moveaxis(hs, 0, 1), carry               # (B, L, H, hd)
+
+
+def slstm_mixer(p, x: jax.Array, cfg: ModelConfig,
+                state: Optional[Dict[str, jax.Array]] = None,
+                return_state: bool = False):
+    B, L, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    if state is None:
+        z = jnp.zeros((B, H, hd), jnp.float32)
+        st = (z, z, z, z)
+    else:
+        st = (state["c"], state["n"], state["h"], state["m"])
+    xg = {g: jnp.einsum("bld,dhe->blhe", x, p[f"w_{g}"]) for g in "zifo"}
+    hs, (c, n, h, m) = _slstm_scan(p, xg, st)
+    y = group_norm_heads(hs).reshape(B, L, D).astype(x.dtype)
+    out = y @ p["out_proj"]
+    out = constrain(out, "batch", "seq", "d_model")
+    if return_state:
+        return out, {"c": c, "n": n, "h": h, "m": m}
+    return out

@@ -1,0 +1,38 @@
+from .mesh import (
+    BATCH_AXES,
+    DATA_AXIS,
+    MODEL_AXIS,
+    POD_AXIS,
+    batch_shards,
+    make_host_mesh,
+    make_mesh,
+    mesh_axis_sizes,
+    single_device_mesh,
+)
+from .sharding import (
+    DEFAULT,
+    ParamDef,
+    ShardingRules,
+    constrain,
+    resolve_spec,
+    sharding_context,
+    sharding_for,
+    spec_for,
+    stack_defs,
+    tree_abstract,
+    tree_instantiate,
+    tree_logical,
+    tree_nbytes,
+    tree_shardings,
+    tree_specs,
+)
+
+__all__ = [
+    "BATCH_AXES", "DATA_AXIS", "MODEL_AXIS", "POD_AXIS",
+    "batch_shards", "make_host_mesh", "make_mesh", "mesh_axis_sizes",
+    "single_device_mesh",
+    "DEFAULT", "ParamDef", "ShardingRules", "constrain", "resolve_spec",
+    "sharding_context", "sharding_for", "spec_for", "stack_defs",
+    "tree_abstract", "tree_instantiate", "tree_logical", "tree_nbytes",
+    "tree_shardings", "tree_specs",
+]

@@ -1,0 +1,58 @@
+"""Mesh construction and axis conventions.
+
+Axes:
+  pod   -- data-parallel over DCN (multislice); gradient all-reduce only
+  data  -- data-parallel over ICI; also sequence-parallel for long context
+  model -- tensor/expert parallel over ICI
+
+``("pod", "data")`` together form the batch axis; sharding rules refer to the
+logical axis names below and are legalized against the concrete mesh by
+:mod:`repro.parallel.sharding`.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+BATCH_AXES: Tuple[str, ...] = ("pod", "data")
+MODEL_AXIS = "model"
+DATA_AXIS = "data"
+POD_AXIS = "pod"
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> jax.sharding.Mesh:
+    """Build a mesh without tripping the jax-0.9 axis_types deprecation."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes),
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / smoke runs)."""
+    n = pod * data * model
+    devs = jax.devices()
+    if len(devs) < n:
+        raise ValueError(f"need {n} devices, have {len(devs)}")
+    if pod > 1:
+        return make_mesh((pod, data, model), ("pod", "data", "model"))
+    return make_mesh((data, model), ("data", "model"))
+
+
+def single_device_mesh() -> jax.sharding.Mesh:
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh: jax.sharding.Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def batch_shards(mesh: jax.sharding.Mesh) -> int:
+    sizes = mesh_axis_sizes(mesh)
+    n = 1
+    for a in BATCH_AXES:
+        n *= sizes.get(a, 1)
+    return n

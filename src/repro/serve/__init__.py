@@ -1,0 +1,3 @@
+from .engine import Engine, GenerateConfig
+
+__all__ = ["Engine", "GenerateConfig"]

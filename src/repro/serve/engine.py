@@ -1,0 +1,90 @@
+"""Batched serving engine: prefill -> cache placement -> decode loop.
+
+The decode step is the exact function the ``decode_32k``/``long_500k``
+dry-run cells lower; here it runs for real on CPU-scale models (the
+examples) with greedy or temperature sampling and per-sequence stop
+handling.  Prefill states are collected by the model's scan and placed
+into max_len-deep cache buffers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, init_cache, prefill
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass
+class GenerateConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0          # 0 = greedy
+    stop_token: Optional[int] = None
+
+
+def _place_prefill_states(cfg: ModelConfig, caches, states, prompt_len: int):
+    """Copy collected per-layer states into the cache buffers.
+
+    Attention k/v (reps, B, S, KV, hd) go into (reps, B, max_len, KV, hd)
+    at offset 0; recurrent states replace the zeros outright.
+    """
+    out = []
+    for seg_cache, seg_state in zip(caches, states):
+        def merge(c, s):
+            if c.shape == s.shape:
+                return s.astype(c.dtype)
+            # sequence-extended buffers: write the prefix
+            return jax.lax.dynamic_update_slice(
+                c, s.astype(c.dtype), (0,) * c.ndim)
+        out.append(jax.tree.map(merge, seg_cache, seg_state))
+    return out
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params):
+        self.cfg = cfg
+        self.params = params
+        self._decode = jax.jit(
+            lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
+
+    def generate(self, prompts: jax.Array, gen: GenerateConfig,
+                 enc_embeds=None, img_embeds=None,
+                 rng: Optional[jax.Array] = None) -> Dict[str, Any]:
+        """prompts (B, S) int32 -> dict with tokens (B, S+new)."""
+        cfg = self.cfg
+        B, S = prompts.shape
+        max_len = S + gen.max_new_tokens
+        caches = init_cache(cfg, B, max_len)
+        last_logits, states = prefill(self.params, cfg, prompts,
+                                      enc_embeds=enc_embeds,
+                                      img_embeds=img_embeds)
+        caches = _place_prefill_states(cfg, caches, states, S)
+
+        tokens = [prompts]
+        cur = self._sample(last_logits, rng, 0, gen)
+        finished = jnp.zeros((B,), bool)
+        for i in range(gen.max_new_tokens):
+            tokens.append(cur[:, None])
+            if gen.stop_token is not None:
+                finished = finished | (cur == gen.stop_token)
+                if bool(finished.all()):
+                    break
+            if i == gen.max_new_tokens - 1:
+                break
+            logits, caches = self._decode(self.params, caches, cur[:, None],
+                                          jnp.int32(S + i))
+            cur = self._sample(logits, rng, i + 1, gen)
+        return {"tokens": jnp.concatenate(tokens, axis=1),
+                "finished": finished}
+
+    def _sample(self, logits: jax.Array, rng, i: int,
+                gen: GenerateConfig) -> jax.Array:
+        if gen.temperature <= 0.0 or rng is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        k = jax.random.fold_in(rng, i)
+        return jax.random.categorical(
+            k, logits / gen.temperature, axis=-1).astype(jnp.int32)

@@ -1,0 +1,174 @@
+"""The training loop: resumable, failure-tolerant, straggler-aware.
+
+Fleet behaviors implemented (and unit-tested on CPU):
+* deterministic resume — state + data position restored so a restarted job
+  replays bitwise (tests assert equal losses after a mid-run kill),
+* bounded retry on step failure (transient-fault policy), emergency
+  checkpoint on SIGTERM (preemption),
+* straggler watchdog — per-step wall-time EMA/variance; outlier steps are
+  recorded and surfaced to the (pluggable) mitigation hook, which on a real
+  fleet triggers hot-spare swap / pod re-slicing,
+* async checkpoint every N steps with keep-K retention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import signal
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from repro.models.common import ModelConfig
+from .checkpoint import CheckpointManager
+from .data import SyntheticLMData
+from .optimizer import init_opt_state
+from .step import TrainConfig, make_train_step
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    dt: float
+    mean: float
+    threshold: float
+
+
+class StragglerWatchdog:
+    """EMA mean/variance of step time; flags dt > mean + k*std (and > min
+    floor so warm-up jitter doesn't alarm)."""
+
+    def __init__(self, k: float = 3.0, decay: float = 0.95,
+                 warmup: int = 5, floor_s: float = 1e-4,
+                 rel_floor: float = 1.5):
+        self.k, self.decay, self.warmup, self.floor = k, decay, warmup, floor_s
+        self.rel_floor = rel_floor       # never flag below mean * rel_floor
+        self.mean = 0.0
+        self.var = 0.0
+        self.n = 0
+        self.events: List[StragglerEvent] = []
+
+    def update(self, step: int, dt: float) -> Optional[StragglerEvent]:
+        self.n += 1
+        if self.n <= self.warmup:
+            if self.n == 1:
+                self.mean = dt
+            else:
+                d = dt - self.mean
+                self.mean += (1 - self.decay) * d
+                self.var = self.decay * (self.var + (1 - self.decay) * d * d)
+            return None
+        thresh = max(self.mean + self.k * math.sqrt(max(self.var, 1e-12)),
+                     self.mean * self.rel_floor,
+                     self.floor)
+        event = None
+        if dt > thresh:
+            event = StragglerEvent(step, dt, self.mean, thresh)
+            self.events.append(event)
+        else:
+            # only non-outlier steps update the stats (else stragglers
+            # poison their own detector)
+            d = dt - self.mean
+            self.mean += (1 - self.decay) * d
+            self.var = self.decay * (self.var + (1 - self.decay) * d * d)
+        return event
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    log_every: int = 10
+    max_retries: int = 2
+    train: TrainConfig = dataclasses.field(default_factory=TrainConfig)
+
+
+class TrainLoop:
+    def __init__(self, cfg: ModelConfig, loop_cfg: LoopConfig,
+                 data: SyntheticLMData, ckpt: CheckpointManager,
+                 init_state_fn: Callable[[], Dict[str, Any]],
+                 step_fn: Optional[Callable] = None,
+                 failure_injector: Optional[Callable[[int], None]] = None,
+                 on_straggler: Optional[Callable[[StragglerEvent], None]] = None):
+        self.cfg = cfg
+        self.loop_cfg = loop_cfg
+        self.data = data
+        self.ckpt = ckpt
+        self.init_state_fn = init_state_fn
+        self.step_fn = step_fn or jax.jit(make_train_step(cfg, loop_cfg.train))
+        self.failure_injector = failure_injector
+        self.on_straggler = on_straggler
+        self.watchdog = StragglerWatchdog()
+        self.history: List[Dict[str, float]] = []
+        self._sigterm = False
+
+    # -- lifecycle ----------------------------------------------------------
+    def _state_and_start(self):
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            abstract = jax.eval_shape(self.init_state_fn)
+            state, manifest = self.ckpt.restore(abstract, latest)
+            return state, int(manifest["step"])
+        return self.init_state_fn(), 0
+
+    def _install_sigterm(self):
+        def handler(signum, frame):
+            self._sigterm = True
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass  # non-main thread (tests)
+
+    def run(self) -> Dict[str, Any]:
+        self._install_sigterm()
+        state, start = self._state_and_start()
+        step = start
+        while step < self.loop_cfg.total_steps:
+            if self._sigterm:
+                self.ckpt.save(state, step, {"reason": "sigterm"})
+                return {"state": state, "step": step, "preempted": True}
+            batch = self.data.batch_at(step)
+            t0 = time.perf_counter()
+            for attempt in range(self.loop_cfg.max_retries + 1):
+                try:
+                    if self.failure_injector is not None:
+                        self.failure_injector(step)
+                    state, metrics = self.step_fn(state, batch)
+                    jax.block_until_ready(metrics["loss"])
+                    break
+                except _TransientError:
+                    if attempt == self.loop_cfg.max_retries:
+                        # persistent failure: checkpoint and abort (the
+                        # scheduler restarts us; resume is deterministic)
+                        self.ckpt.save(state, step, {"reason": "failure"})
+                        raise
+            dt = time.perf_counter() - t0
+            event = self.watchdog.update(step, dt)
+            if event and self.on_straggler:
+                self.on_straggler(event)
+            step += 1
+            if step % self.loop_cfg.log_every == 0 or step == 1:
+                self.history.append(
+                    {"step": step, "loss": float(metrics["loss"]),
+                     "dt": dt})
+            if step % self.loop_cfg.ckpt_every == 0:
+                self.ckpt.save_async(state, step)
+        self.ckpt.wait()
+        self.ckpt.save(state, step, {"reason": "final"})
+        return {"state": state, "step": step, "preempted": False}
+
+
+class _TransientError(RuntimeError):
+    """Raised by failure injectors to simulate recoverable node faults."""
+
+
+def make_initial_state(cfg: ModelConfig, seed: int = 0):
+    from repro.models import init_params
+
+    def init():
+        params = init_params(cfg, jax.random.key(seed))
+        return {"params": params, "opt": init_opt_state(params)}
+
+    return init

@@ -1,0 +1,129 @@
+"""Distributed-pipeline tests in a subprocess with 8 forced host devices:
+real SPMD lowering + collective attribution + elastic checkpoint restore
+across different mesh shapes.  (Subprocess because the main test process
+must keep its single-device view.)"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, env=env, timeout=420)
+
+
+def test_mini_dryrun_with_collective_attribution():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json, jax
+        from repro.configs import get_config, smoke
+        from repro.core.analysis import analyze_step
+        from repro.launch import specs as specs_mod
+        from repro.models.common import ShapeCell
+        from repro.parallel.mesh import make_mesh
+        from repro.parallel.sharding import sharding_context
+        from repro.train.step import TrainConfig, make_train_step
+
+        cfg = smoke(get_config("qwen3-0.6b"))
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        cell = ShapeCell("t", 32, 8, "train")
+        with sharding_context(mesh):
+            args, in_sh, out_sh = specs_mod.train_specs(cfg, cell, mesh)
+            step = make_train_step(cfg, TrainConfig())
+            report, compiled = analyze_step(
+                step, args=args, mesh=mesh, in_shardings=in_sh,
+                out_shardings=out_sh, label="mini")
+        d = report.as_dict()
+        assert d["flops_dev"] > 0
+        assert d["n_collective_ops"] > 0, "SPMD must produce collectives"
+        axes = d["collective_by_axes"]
+        assert any("model" in k for k in axes), axes
+        # the pod axis carries the DP gradient reduce -> DCN bytes > 0
+        assert d["collective_dcn_bytes_dev"] > 0, axes
+        print("RESULT " + json.dumps({"ok": True, "axes": list(axes)}))
+    """)
+    r = run_py(code)
+    assert "RESULT" in r.stdout, (r.stdout[-2000:], r.stderr[-3000:])
+
+
+def test_elastic_restore_across_mesh_shapes(tmp_path):
+    """Save on a (4 data, 2 model) mesh, restore onto (2, 4) — the ZeRO-1
+    moment shards and every param land correctly on the new topology."""
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, numpy as np
+        from repro.configs import get_config, smoke
+        from repro.models import init_params, model_param_defs
+        from repro.parallel.mesh import make_mesh
+        from repro.parallel import sharding as shd
+        from repro.train import CheckpointManager, init_opt_state
+        from repro.train.optimizer import opt_state_shardings
+
+        cfg = smoke(get_config("qwen3-0.6b"))
+        defs = model_param_defs(cfg)
+
+        mesh_a = make_mesh((4, 2), ("data", "model"))
+        sh_a = {{"params": shd.tree_shardings(defs, mesh_a),
+                "opt": opt_state_shardings(defs, mesh_a)}}
+        params = init_params(cfg, jax.random.key(0))
+        state = {{"params": params, "opt": init_opt_state(params)}}
+        state = jax.tree.map(jax.device_put, state, sh_a)
+
+        mgr = CheckpointManager(r"{tmp_path}", keep=2)
+        mgr.save(state, 5)
+
+        mesh_b = make_mesh((2, 4), ("data", "model"))
+        sh_b = {{"params": shd.tree_shardings(defs, mesh_b),
+                "opt": opt_state_shardings(defs, mesh_b)}}
+        abstract = jax.eval_shape(lambda: state)
+        restored, manifest = mgr.restore(abstract, 5, shardings=sh_b)
+        assert manifest["step"] == 5
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # restored arrays actually live on the new mesh
+        leaf = jax.tree.leaves(restored)[0]
+        assert leaf.sharding.mesh.shape == {{"data": 2, "model": 4}}
+        print("RESULT ok")
+    """)
+    r = run_py(code)
+    assert "RESULT ok" in r.stdout, (r.stdout[-2000:], r.stderr[-3000:])
+
+
+def test_kv_fallback_compiles_on_asymmetric_mesh():
+    """8 KV heads on a 16-way model axis must compile via the kv_seq
+    fallback (here scaled down: 2 KV heads on a 4-way axis)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses, jax
+        from repro.configs import get_config, smoke
+        from repro.launch import specs as specs_mod
+        from repro.models import decode_step
+        from repro.models.common import ShapeCell
+        from repro.parallel.mesh import make_mesh
+        from repro.parallel.sharding import sharding_context
+
+        cfg = smoke(get_config("qwen3-0.6b"))  # kv=2 < model axis 4
+        mesh = make_mesh((2, 4), ("data", "model"))
+        cell = ShapeCell("d", 64, 4, "decode")
+        with sharding_context(mesh):
+            args, in_sh, _ = specs_mod.decode_specs(cfg, cell, mesh)
+            fn = jax.jit(lambda p, c, t, pos: decode_step(p, cfg, c, t, pos),
+                         in_shardings=in_sh)
+            with jax.set_mesh(mesh):
+                compiled = fn.lower(*args).compile()
+        print("RESULT ok")
+    """)
+    r = run_py(code)
+    assert "RESULT ok" in r.stdout, (r.stdout[-2000:], r.stderr[-3000:])

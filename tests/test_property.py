@@ -1,0 +1,166 @@
+"""Hypothesis property tests on system invariants."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from jax.sharding import PartitionSpec as P
+
+from repro.core.roofline.hardware import TPU_V5E, ScopeSpec
+from repro.core.roofline.model import make_terms
+from repro.kernels import ref
+import repro.kernels.gelu as gelu_mod
+import repro.kernels.layernorm as ln_mod
+from repro.parallel.sharding import DEFAULT_RULES, resolve_spec
+
+COMMON = settings(max_examples=25, deadline=None)
+
+
+# --------------------------------------------------------------------------
+# Sharding legalizer invariants
+# --------------------------------------------------------------------------
+
+logical_names = st.sampled_from(sorted(DEFAULT_RULES.keys()))
+dim_sizes = st.sampled_from([1, 2, 3, 8, 16, 24, 40, 128, 256, 4096, 122753])
+
+
+@COMMON
+@given(st.lists(st.tuples(logical_names, dim_sizes), min_size=1, max_size=5),
+       st.sampled_from([{"data": 16, "model": 16},
+                        {"pod": 2, "data": 16, "model": 16},
+                        {"data": 4, "model": 2},
+                        {"data": 1, "model": 1}]))
+def test_resolve_spec_always_legal(dims, mesh):
+    """For ANY logical/shape combination: every assigned mesh axis divides
+    its dim and no axis is used twice — the compile-legality invariant."""
+    logical = [d[0] for d in dims]
+    shape = [d[1] for d in dims]
+    spec = resolve_spec(logical, shape, mesh)
+    used = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = 1
+        for ax in axes:
+            assert ax in mesh, (spec, mesh)
+            prod *= mesh[ax]
+            used.append(ax)
+        assert shape[i] % prod == 0, (logical, shape, spec)
+    assert len(used) == len(set(used)), (logical, shape, spec)
+
+
+# --------------------------------------------------------------------------
+# Roofline math invariants
+# --------------------------------------------------------------------------
+
+pos = st.floats(min_value=1e3, max_value=1e18, allow_nan=False,
+                allow_infinity=False)
+
+
+@COMMON
+@given(pos, pos, pos, pos)
+def test_roofline_terms_invariants(flops, nbytes, ici, dcn):
+    scope = ScopeSpec("pod", TPU_V5E, 256, "ici")
+    t = make_terms(scope=scope, dtype="bfloat16", flops_dev=flops,
+                   hbm_bytes_dev=nbytes, ici_wire_bytes_dev=ici,
+                   dcn_wire_bytes_dev=dcn, model_flops_total=flops * 128)
+    terms = t.terms()
+    assert t.t_lower == max(terms.values())
+    assert t.t_upper >= t.t_lower
+    assert abs(t.t_upper - sum(terms.values())) < 1e-9 * t.t_upper + 1e-12
+    assert t.dominant in terms
+    assert terms[t.dominant] == t.t_lower
+    assert 0 <= t.hardware_fraction <= 1.0 + 1e-9
+    assert t.attainable_flops <= t.chip.flops_for("bfloat16") * (1 + 1e-9)
+
+
+# --------------------------------------------------------------------------
+# Kernel invariants
+# --------------------------------------------------------------------------
+
+@COMMON
+@given(st.integers(1, 8), st.integers(1, 4))
+def test_layernorm_output_standardized(r8, d128):
+    r, d = r8 * 8, d128 * 128
+    x = jax.random.normal(jax.random.key(r * 31 + d), (r, d)) * 5 + 2
+    out = ln_mod.layernorm(x, jnp.ones((d,)), jnp.zeros((d,)),
+                           interpret=True, br=min(8, r))
+    mu = np.asarray(jnp.mean(out, axis=-1))
+    sd = np.asarray(jnp.std(out, axis=-1))
+    np.testing.assert_allclose(mu, 0.0, atol=1e-4)
+    np.testing.assert_allclose(sd, 1.0, atol=1e-2)
+
+
+@COMMON
+@given(st.integers(0, 1000))
+def test_gelu_matches_and_bounded(seed):
+    x = jax.random.normal(jax.random.key(seed), (64, 128)) * 4
+    y = np.asarray(gelu_mod.gelu_blocked(x, interpret=True))
+    expect = np.asarray(ref.gelu(x))
+    np.testing.assert_allclose(y, expect, rtol=2e-5, atol=2e-5)
+    # GELU invariants: y >= min bound, y ~ x for large x, y ~ 0 for very neg
+    assert (y >= -0.2).all()
+    big = np.asarray(x) > 4
+    np.testing.assert_allclose(y[big], np.asarray(x)[big], rtol=1e-2)
+
+
+@COMMON
+@given(st.integers(0, 500))
+def test_avgpool_of_constant_is_constant(seed):
+    c = float(seed % 17) - 8.0
+    x = jnp.full((1, 8, 8, 128), c)
+    import repro.kernels.avgpool as ap
+    out = np.asarray(ap.avg_pool_blocked(x, interpret=True))
+    np.testing.assert_allclose(out, c, atol=1e-6)
+
+
+@COMMON
+@given(st.integers(0, 200))
+def test_flash_attention_rows_are_convex(seed):
+    """Attention output rows lie in the convex hull of V rows: componentwise
+    min(V) <= out <= max(V)."""
+    import repro.kernels.flash_attention as fa
+    B, S, H, hd = 1, 128, 2, 64
+    q = jax.random.normal(jax.random.key(seed), (B, H, S, hd))
+    k = jax.random.normal(jax.random.key(seed + 1), (B, H, S, hd))
+    v = jax.random.normal(jax.random.key(seed + 2), (B, H, S, hd))
+    out = np.asarray(fa.flash_attention(q, k, v, causal=False, bq=64, bk=64,
+                                        interpret=True))
+    vmin = np.asarray(v).min(axis=2, keepdims=True)
+    vmax = np.asarray(v).max(axis=2, keepdims=True)
+    assert (out >= vmin - 1e-4).all() and (out <= vmax + 1e-4).all()
+
+
+@COMMON
+@given(st.integers(0, 100))
+def test_inner_product_linearity(seed):
+    """IP(a*x + b*y, w) == a*IP(x,w) + b*IP(y,w) — kernel respects
+    linearity (catches accumulator / epilogue bugs)."""
+    import repro.kernels.inner_product as ip
+    x = jax.random.normal(jax.random.key(seed), (128, 128))
+    y = jax.random.normal(jax.random.key(seed + 1), (128, 128))
+    w = jax.random.normal(jax.random.key(seed + 2), (128, 128))
+    lhs = ip.inner_product(2.0 * x + 3.0 * y, w, interpret=True)
+    rhs = (2.0 * ip.inner_product(x, w, interpret=True)
+           + 3.0 * ip.inner_product(y, w, interpret=True))
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-4, atol=1e-3)
+
+
+# --------------------------------------------------------------------------
+# Data pipeline determinism (restart invariant)
+# --------------------------------------------------------------------------
+
+@COMMON
+@given(st.integers(0, 10000), st.integers(1, 4))
+def test_data_pure_function_of_step(step, batch):
+    from repro.configs import get_config, smoke
+    from repro.train import SyntheticLMData
+    cfg = smoke(get_config("qwen3-0.6b"))
+    d1 = SyntheticLMData(cfg, batch=batch, seq=8, seed=7)
+    d2 = SyntheticLMData(cfg, batch=batch, seq=8, seed=7)
+    np.testing.assert_array_equal(np.asarray(d1.batch_at(step)["tokens"]),
+                                  np.asarray(d2.batch_at(step)["tokens"]))

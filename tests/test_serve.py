@@ -1,0 +1,97 @@
+"""Serving-engine tests: greedy generation matches step-by-step full
+forwards, prefill-state placement, stop tokens."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke
+from repro.models import init_params
+import repro.models.transformer as tfm
+from repro.serve import Engine, GenerateConfig
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "xlstm-350m",
+                                  "deepseek-v2-236b"])
+def test_greedy_generation_matches_full_forward(arch):
+    """Each generated token must equal argmax of a from-scratch full
+    forward over (prompt + generated prefix): prefill + cached decode is
+    exactly equivalent to recomputation."""
+    cfg = smoke(get_config(arch))
+    params = init_params(cfg, jax.random.key(0))
+    engine = Engine(cfg, params)
+    B, S, new = 2, 8, 5
+    prompts = jax.random.randint(jax.random.key(1), (B, S), 0,
+                                 cfg.vocab_size)
+    out = engine.generate(prompts, GenerateConfig(max_new_tokens=new))
+    toks = out["tokens"]
+    assert toks.shape == (B, S + new)
+
+    # reference A (exact for deterministic routing): manual
+    # prefill-by-decode_step + greedy loop.  Skipped for MoE archs — the
+    # router's top-k can flip between batched-prefill and stepwise caches
+    # on reduction-order fp noise, which is inherent, not an engine bug.
+    from repro.models import decode_step, init_cache
+    if not cfg.n_experts:
+        caches = init_cache(cfg, B, S + new)
+        for t in range(S):
+            logits, caches = decode_step(params, cfg, caches,
+                                         prompts[:, t:t + 1], jnp.int32(t))
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        got = [cur]
+        for i in range(new - 1):
+            logits, caches = decode_step(params, cfg, caches, cur[:, None],
+                                         jnp.int32(S + i))
+            cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            got.append(cur)
+        ref_tokens = jnp.stack(got, axis=1)
+        np.testing.assert_array_equal(np.asarray(toks[:, S:]),
+                                      np.asarray(ref_tokens))
+
+    # reference B (numeric, dense archs): engine tokens are near-argmax of
+    # a full recompute.  MoE archs are excluded: a single fp-noise router
+    # flip changes *which tokens hit the capacity limit*, an inherently
+    # discontinuous O(1) logit change (GShard drop semantics) — their
+    # decode-path exactness is covered by
+    # test_models_math.test_decode_matches_full_forward instead.
+    if not cfg.n_experts:
+        for t in range(new):
+            seq = toks[:, : S + t]
+            logits, _, _ = tfm.forward_full(params, cfg, seq)
+            last = np.asarray(logits[:, -1, :], np.float32)
+            chosen = np.asarray(toks[:, S + t])
+            for b in range(B):
+                gap = np.max(last[b]) - last[b, chosen[b]]
+                assert gap < 1e-4, (arch, t, b, gap)
+    else:
+        assert np.isfinite(np.asarray(toks)).all()
+
+
+def test_stop_token_halts_generation():
+    cfg = smoke(get_config("qwen3-0.6b"))
+    params = init_params(cfg, jax.random.key(0))
+    engine = Engine(cfg, params)
+    prompts = jnp.ones((2, 4), jnp.int32)
+    # pick the first greedy token as the stop token -> stops immediately
+    out1 = engine.generate(prompts, GenerateConfig(max_new_tokens=8))
+    stop = int(out1["tokens"][0, 4])
+    out2 = engine.generate(prompts, GenerateConfig(max_new_tokens=8,
+                                                   stop_token=stop))
+    assert out2["tokens"].shape[1] <= out1["tokens"].shape[1]
+    assert bool(out2["finished"][0])
+
+
+def test_temperature_sampling_reproducible():
+    cfg = smoke(get_config("qwen3-0.6b"))
+    params = init_params(cfg, jax.random.key(0))
+    engine = Engine(cfg, params)
+    prompts = jnp.ones((2, 4), jnp.int32)
+    g = GenerateConfig(max_new_tokens=6, temperature=1.0)
+    a = engine.generate(prompts, g, rng=jax.random.key(3))
+    b = engine.generate(prompts, g, rng=jax.random.key(3))
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    c = engine.generate(prompts, g, rng=jax.random.key(4))
+    assert not np.array_equal(np.asarray(a["tokens"]),
+                              np.asarray(c["tokens"]))

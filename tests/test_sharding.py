@@ -1,0 +1,124 @@
+"""Unit tests for the sharding legalizer — the mechanism that makes every
+(arch x shape x mesh) dry-run cell compile by construction."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import (DEFAULT, ParamDef, resolve_spec,
+                                     stack_defs, tree_abstract,
+                                     tree_instantiate)
+
+MESH = {"data": 16, "model": 16}
+MESH3 = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_basic_tp_dims():
+    # d_ff divisible -> model-sharded
+    assert resolve_spec(["d_model", "d_ff"], [1024, 17408], MESH) == \
+        P(None, "model")
+    # vocab divisible
+    assert resolve_spec(["vocab", "d_model"], [151936, 5120], MESH) == \
+        P("model")
+
+
+def test_batch_multi_axis():
+    spec = resolve_spec(["batch", "seq"], [256, 4096], MESH3)
+    assert spec == P(("pod", "data"))
+
+
+def test_batch_prefix_degrade():
+    # batch=8: pod*data=32 doesn't divide, pod=2 does
+    spec = resolve_spec(["batch", "seq"], [8, 4096], MESH3)
+    assert spec == P("pod")
+    # batch=1: nothing divides -> fully replicated
+    spec = resolve_spec(["batch", "seq"], [1, 4096], MESH3)
+    assert spec == P()
+
+
+def test_odd_vocab_replicates():
+    # minicpm's 122753 is odd -> legalizer must NOT shard it
+    spec = resolve_spec(["vocab", "d_model"], [122753, 2304], MESH)
+    assert spec == P()
+
+
+def test_kv_heads_fallback_to_seq():
+    # 8 KV heads cannot split a 16-way model axis; the cache sequence dim
+    # picks up the freed capacity (flash-decoding layout)
+    spec = resolve_spec(["batch", "kv_seq", "kv_heads", "head_dim"],
+                        [128, 32768, 8, 128], MESH)
+    assert spec == P("data", "model")
+
+
+def test_kv_heads_win_when_divisible():
+    spec = resolve_spec(["batch", "kv_seq", "kv_heads", "head_dim"],
+                        [128, 32768, 128, 128], MESH)
+    # kv_heads=128 takes model; kv_seq falls to its second candidate but
+    # `data` is already taken by batch -> replicated seq
+    assert spec == P("data", None, "model")
+
+
+def test_seq_fb_context_parallel():
+    # 40 q-heads (qwen3-14b) can't split 16 -> seq_fb picks up model
+    spec = resolve_spec(["batch", "seq_fb", "kv_heads", "heads_q", "head_dim"],
+                        [256, 4096, 8, 5, 128], MESH)
+    assert spec == P("data", "model")
+
+
+def test_no_axis_used_twice():
+    spec = resolve_spec(["d_ff", "vocab"], [4096, 4096], MESH)
+    used = [e for e in spec if e is not None]
+    assert used in ([ "model"], ["model"]) or len(used) == 1
+
+
+def test_experts_priority():
+    spec = resolve_spec(["experts", "expert_cap", "d_model"],
+                        [160, 49152, 5120], MESH)
+    assert spec == P("model", "data")
+
+
+def test_stack_defs_adds_layer_axis():
+    d = ParamDef((64, 128), ("d_model", "d_ff"))
+    s = stack_defs({"w": d}, 24)["w"]
+    assert s.shape == (24, 64, 128)
+    assert s.logical == ("layers", "d_model", "d_ff")
+    # fan-in axis tracked correctly after stacking
+    assert s.fan_in_axes == (-1,)
+
+
+def test_tree_instantiate_shapes_and_dtypes():
+    defs = {"a": ParamDef((4, 8), ("d_model", "d_ff"), "bfloat16"),
+            "b": ParamDef((8,), ("d_ff",), "float32", init="zeros")}
+    tree = tree_instantiate(defs, jax.random.key(0))
+    assert tree["a"].shape == (4, 8) and str(tree["a"].dtype) == "bfloat16"
+    assert float(tree["b"].sum()) == 0.0
+    ab = tree_abstract(defs)
+    assert ab["a"].shape == (4, 8)
+
+
+def test_zero1_moment_sharding():
+    from repro.train.optimizer import zero1_spec
+    from repro.parallel.mesh import make_mesh
+    import numpy as np
+    # needs a real mesh object: use a 1x1 host mesh but query specs only
+    d = ParamDef((1024, 17408), ("d_model", "d_ff"))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16), object)
+
+    spec = zero1_spec(d, FakeMesh())
+    # d_ff takes model from the param spec; data lands on d_model (ZeRO-1)
+    assert spec == P("data", "model")
+
+
+def test_zero1_skips_non_divisible():
+    from repro.train.optimizer import zero1_spec
+    import numpy as np
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16), object)
+
+    d = ParamDef((122753,), ("vocab",))  # odd — nothing divides
+    assert zero1_spec(d, FakeMesh()) == P()

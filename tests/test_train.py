@@ -1,0 +1,160 @@
+"""Fault-tolerance tests: checkpoint round-trip, bitwise resume after a
+mid-run failure, straggler watchdog, schedules, grad accumulation."""
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke
+from repro.models import init_params, loss_fn
+from repro.train import (CheckpointManager, LoopConfig, OptConfig,
+                         StragglerWatchdog, SyntheticLMData, TrainConfig,
+                         TrainLoop, lr_at, make_initial_state,
+                         make_train_step)
+from repro.train.loop import _TransientError
+
+
+def _cfg():
+    return smoke(get_config("qwen3-0.6b"))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.key(0))
+    state = {"params": params, "opt": {"step": jnp.int32(7)}}
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(state, step=7, meta={"arch": cfg.name})
+    restored, manifest = mgr.restore(jax.eval_shape(lambda: state))
+    assert manifest["step"] == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {"x": jnp.arange(4)}
+    for s in [10, 20, 30, 40]:
+        mgr.save(state, s)
+    assert mgr.all_steps() == [30, 40]
+
+
+def test_checkpoint_milestones_kept(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=1, milestone_every=100)
+    state = {"x": jnp.arange(4)}
+    for s in [100, 150, 200, 250]:
+        mgr.save(state, s)
+    assert 100 in mgr.all_steps() and 200 in mgr.all_steps()
+    assert 150 not in mgr.all_steps()
+
+
+def test_data_determinism():
+    cfg = _cfg()
+    d = SyntheticLMData(cfg, batch=4, seq=16, seed=99)
+    a = d.batch_at(12)
+    b = d.batch_at(12)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    c = d.batch_at(13)
+    assert not np.array_equal(np.asarray(a["tokens"]),
+                              np.asarray(c["tokens"]))
+
+
+def test_resume_after_failure_is_bitwise(tmp_path):
+    """Kill at step 7, restart, and the loss trajectory must match an
+    uninterrupted run exactly."""
+    cfg = _cfg()
+    loop_cfg = LoopConfig(
+        total_steps=10, ckpt_every=5, log_every=1, max_retries=0,
+        train=TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=0,
+                                        total_steps=10)))
+    data = SyntheticLMData(cfg, batch=2, seq=16, seed=5)
+
+    def run(ckdir, injector=None):
+        loop = TrainLoop(cfg, loop_cfg, data,
+                         CheckpointManager(ckdir, keep=3),
+                         make_initial_state(cfg, seed=0),
+                         failure_injector=injector)
+        return loop
+
+    # uninterrupted reference
+    ref = run(str(tmp_path / "a"))
+    out_ref = ref.run()
+    ref_losses = {h["step"]: h["loss"] for h in ref.history}
+
+    # failing run: dies at step 7 (after the step-5 checkpoint)
+    boom = {"armed": True}
+
+    def injector(step):
+        if step == 7 and boom["armed"]:
+            raise _TransientError("node lost")
+
+    crashed = run(str(tmp_path / "b"), injector)
+    with pytest.raises(_TransientError):
+        crashed.run()
+    # restart: resumes from step 7's emergency checkpoint
+    boom["armed"] = False
+    resumed = run(str(tmp_path / "b"), injector)
+    out = resumed.run()
+    assert out["step"] == 10
+    res_losses = {h["step"]: h["loss"] for h in resumed.history}
+    for step, loss in res_losses.items():
+        assert ref_losses[step] == pytest.approx(loss, rel=1e-6), (
+            step, loss, ref_losses[step])
+
+
+def test_straggler_watchdog_flags_outliers():
+    w = StragglerWatchdog(k=3.0, warmup=3, floor_s=0.0)
+    events = []
+    for i in range(50):
+        e = w.update(i, 0.1 + 0.001 * (i % 3))
+        if e:
+            events.append(e)
+    assert not events
+    e = w.update(50, 1.5)  # 15x step time — a straggling pod
+    assert e is not None and e.dt == 1.5
+    # detector stats not poisoned by the outlier
+    assert w.mean < 0.2
+
+
+def test_wsd_schedule_shape():
+    oc = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, schedule="wsd",
+                   wsd_decay_frac=0.2, min_lr_ratio=0.1)
+    lr5 = float(lr_at(jnp.int32(5), oc))      # warmup
+    lr50 = float(lr_at(jnp.int32(50), oc))    # stable
+    lr90 = float(lr_at(jnp.int32(90), oc))    # decaying
+    lr100 = float(lr_at(jnp.int32(100), oc))  # floor
+    assert lr5 == pytest.approx(0.5)
+    assert lr50 == pytest.approx(1.0)
+    assert 0.1 < lr90 < 1.0
+    assert lr100 == pytest.approx(0.1)
+
+
+def test_grad_accum_matches_full_batch():
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.key(0))
+    data = SyntheticLMData(cfg, batch=8, seq=16, seed=3)
+    batch = data.batch_at(0)
+
+    from repro.train.step import _grad_microbatched
+    loss_m, g_m, _ = _grad_microbatched(params, batch, cfg, n_micro=4)
+    (loss_f, _), g_f = jax.value_and_grad(
+        lambda p: loss_fn(p, batch, cfg), has_aux=True)(params)
+    assert float(loss_m) == pytest.approx(float(loss_f), rel=1e-5)
+    for a, b in zip(jax.tree.leaves(g_m), jax.tree.leaves(g_f)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_prefetcher_yields_in_order():
+    from repro.train import Prefetcher
+    cfg = _cfg()
+    d = SyntheticLMData(cfg, batch=2, seq=8, seed=1)
+    pf = Prefetcher(d, start_step=3)
+    steps = [next(pf)[0] for _ in range(4)]
+    pf.close()
+    assert steps == [3, 4, 5, 6]
