@@ -1,0 +1,111 @@
+"""Continuous-batching serve benchmark: measured tokens/s against the
+memory-bound roofline ceiling.
+
+Decode is the most memory-bound workload in the system: every generated
+token re-reads the active weights plus the request's KV line, so the
+per-token arithmetic intensity sits far left of the ridge point and the
+attainable ceiling is ``beta * I`` (paper eq. 1).  This benchmark drives
+the paged continuous-batching engine end to end and reports, per run:
+
+* measured decode throughput (tokens/s),
+* the analytic bytes/token -> the memory-bound ceiling tokens/s for the
+  target chip,
+* the roofline fraction (measured / ceiling) on the *host* roofline
+  (microbench-calibrated), and the per-request bound class / arithmetic
+  intensity from the engine's roofline ledger.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve --arch qwen3-0.6b \
+        --requests 8 --slots 4 --new-tokens 16
+    PYTHONPATH=src python -m benchmarks.run --only serve
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ALL_ARCHS, get_config, smoke
+from repro.core.roofline.hardware import HOST_CPU_FALLBACK, TPU_V5E
+from repro.models import init_params
+from repro.serve import Engine, EngineConfig, GenerateConfig
+from repro.serve.scheduler import decode_token_bytes
+
+from .common import emit
+
+
+def run_bench(arch: str, *, requests: int, slots: int, page_size: int,
+              prompt_len: int, new_tokens: int, prefill_chunk: int,
+              chip_name: str) -> dict:
+    cfg = smoke(get_config(arch))
+    params = init_params(cfg, jax.random.key(0))
+    chip = TPU_V5E if chip_name == "tpu_v5e" else HOST_CPU_FALLBACK
+    ecfg = EngineConfig(num_slots=slots, page_size=page_size,
+                        max_len=prompt_len + new_tokens,
+                        prefill_chunk=prefill_chunk, chip=chip)
+    engine = Engine(cfg, params, ecfg)
+
+    rng = jax.random.key(1)
+    prompts = [
+        np.asarray(jax.random.randint(jax.random.fold_in(rng, i),
+                                      (prompt_len,), 0, cfg.vocab_size))
+        for i in range(requests)
+    ]
+    gen = GenerateConfig(max_new_tokens=new_tokens)
+    for p in prompts:
+        engine.submit(p, gen)
+    # warm the decode/prefill compile caches with one throwaway pass
+    engine.run()
+    for p in prompts:
+        engine.submit(p, gen)
+    t0 = time.perf_counter()
+    done = engine.run()
+    dt = time.perf_counter() - t0
+
+    n_tokens = sum(r.ledger.decode_tokens + 1 for r in done)
+    tps = n_tokens / dt
+    mean_batch = float(np.mean([r.ledger.mean_batch for r in done]))
+    bytes_tok = decode_token_bytes(cfg, prompt_len + new_tokens // 2,
+                                   max(int(round(mean_batch)), 1))
+    ceiling_tps = chip.hbm_bw / bytes_tok
+    ledgers = [engine.roofline_terms(r) for r in done]
+    ai = float(np.mean([t.arithmetic_intensity for t in ledgers]))
+    bound = ledgers[0].bound_class()
+    frac = tps / ceiling_tps
+    emit(f"serve_{arch}_b{slots}",
+         dt / max(n_tokens, 1) * 1e6,
+         f"tok/s={tps:.1f};ceiling={ceiling_tps:.0f};frac={frac:.4f};"
+         f"AI={ai:.2f};{bound};mean_batch={mean_batch:.2f}")
+    return {"tokens_per_s": tps, "ceiling_tokens_per_s": ceiling_tps,
+            "roofline_fraction": frac, "arithmetic_intensity": ai,
+            "bound_class": bound, "requests": len(done)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ALL_ARCHS), default="qwen3-0.6b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=0)
+    ap.add_argument("--chip", choices=["host", "tpu_v5e"], default="host")
+    args = ap.parse_args(argv)
+    out = run_bench(args.arch, requests=args.requests, slots=args.slots,
+                    page_size=args.page_size, prompt_len=args.prompt_len,
+                    new_tokens=args.new_tokens,
+                    prefill_chunk=args.prefill_chunk,
+                    chip_name="tpu_v5e" if args.chip == "tpu_v5e"
+                    else "host")
+    print(f"[bench_serve] {out['requests']} requests "
+          f"{out['tokens_per_s']:.1f} tok/s "
+          f"(memory-bound ceiling {out['ceiling_tokens_per_s']:.0f} tok/s, "
+          f"roofline fraction {out['roofline_fraction']:.4f}), "
+          f"AI={out['arithmetic_intensity']:.2f} {out['bound_class']}")
+
+
+if __name__ == "__main__":
+    main()

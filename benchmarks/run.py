@@ -13,7 +13,7 @@ import traceback
 
 from . import (bench_arch_roofline, bench_conv, bench_gelu,
                bench_inner_product, bench_layernorm, bench_microbench,
-               bench_pooling)
+               bench_pooling, bench_serve)
 from .common import rows
 
 ALL = {
@@ -24,6 +24,7 @@ ALL = {
     "gelu": bench_gelu.main,                   # paper fig. 8 + §3.4
     "layernorm": bench_layernorm.main,         # paper appendix
     "arch_roofline": bench_arch_roofline.main,  # 40-cell §Roofline table
+    "serve": lambda: bench_serve.main([]),     # continuous-batching decode
 }
 
 

@@ -1,0 +1,9 @@
+"""Repo-root pytest bootstrap: put src/ on sys.path so the tier-1 command
+(`python -m pytest`) works without exporting PYTHONPATH."""
+
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

@@ -1,5 +1,9 @@
-"""Batched serving example: prefill + KV-cache decode on three different
-architecture families (dense GQA, MLA latent cache, recurrent state).
+"""Continuous-batching serving example on three architecture families
+(dense GQA paged KV, MLA paged latent cache, recurrent slot state).
+
+More requests than decode slots: completions free slots mid-flight and
+queued requests are admitted into them.  Each request finishes with a
+decode roofline ledger (I = W/Q per token, bound class).
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -7,24 +11,34 @@ architecture families (dense GQA, MLA latent cache, recurrent state).
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, smoke
 from repro.models import init_params
-from repro.serve import Engine, GenerateConfig
+from repro.serve import Engine, EngineConfig, GenerateConfig
 
 
-def run(arch: str, batch: int = 4, prompt_len: int = 16, new: int = 16):
+def run(arch: str, requests: int = 6, slots: int = 3, prompt_len: int = 16,
+        new: int = 16):
     cfg = smoke(get_config(arch))
     params = init_params(cfg, jax.random.key(0))
-    engine = Engine(cfg, params)
-    prompts = jax.random.randint(jax.random.key(1), (batch, prompt_len),
-                                 0, cfg.vocab_size)
+    engine = Engine(cfg, params, EngineConfig(
+        num_slots=slots, page_size=8, max_len=prompt_len + new))
+    gen = GenerateConfig(max_new_tokens=new)
+    for i in range(requests):
+        prompt = np.asarray(jax.random.randint(
+            jax.random.key(100 + i), (prompt_len,), 0, cfg.vocab_size))
+        engine.submit(prompt, gen)
     t0 = time.perf_counter()
-    out = engine.generate(prompts, GenerateConfig(max_new_tokens=new))
+    done = engine.run()
     dt = time.perf_counter() - t0
-    print(f"{arch:<22} cache={'latent' if cfg.use_mla else ('state' if cfg.subquadratic else 'kv')}"
-          f"  {batch * new / dt:7.1f} tok/s  sample={out['tokens'][0, prompt_len:prompt_len + 8].tolist()}")
+    n_new = sum(len(r.generated) for r in done)
+    terms = done[0].ledger.terms(cfg)
+    kind = ("latent" if cfg.use_mla
+            else ("state" if cfg.subquadratic else "kv"))
+    print(f"{arch:<22} cache={kind:<6} {requests} reqs/{slots} slots "
+          f"{n_new / dt:7.1f} tok/s  AI={terms.arithmetic_intensity:5.2f} "
+          f"{terms.bound_class()}  sample={done[0].generated[:8]}")
 
 
 def main():

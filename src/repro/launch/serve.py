@@ -1,7 +1,12 @@
-"""Serving launcher: batched generation with the prefill/decode engine.
+"""Serving launcher: continuous-batching generation with the paged engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-        --batch 4 --prompt-len 32 --new-tokens 32
+        --batch 4 --prompt-len 32 --new-tokens 32 --slots 2
+
+Each run prints measured tokens/s plus the per-request decode roofline
+ledger (arithmetic intensity, bound class, roofline ceiling).  Archs
+without a paged decode path (enc-dec, VLM) fall back to the static
+whole-batch engine.
 """
 
 from __future__ import annotations
@@ -11,10 +16,12 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ALL_ARCHS, get_config, smoke
+from repro.core.roofline.hardware import HOST_CPU_FALLBACK, TPU_V5E
 from repro.models import init_params
-from repro.serve import Engine, GenerateConfig
+from repro.serve import Engine, EngineConfig, GenerateConfig, supports_paging
 
 
 def main():
@@ -25,38 +32,71 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--slots", type=int, default=0,
+                    help="decode slots (0 = one per request)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=0)
+    ap.add_argument("--chip", choices=["host", "tpu_v5e"], default="tpu_v5e")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke(cfg)
     params = init_params(cfg, jax.random.key(0))
-    engine = Engine(cfg, params)
+    chip = TPU_V5E if args.chip == "tpu_v5e" else HOST_CPU_FALLBACK
+    slots = args.slots or args.batch
+    engine = Engine(cfg, params, EngineConfig(
+        num_slots=slots, page_size=args.page_size,
+        max_len=args.prompt_len + args.new_tokens,
+        prefill_chunk=args.prefill_chunk, chip=chip))
 
     prompts = jax.random.randint(jax.random.key(1),
                                  (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
-    kwargs = {}
-    if cfg.is_encoder_decoder:
-        kwargs["enc_embeds"] = jax.random.normal(
-            jax.random.key(2), (args.batch, cfg.n_audio_frames, cfg.d_model),
-            jnp.float32).astype(cfg.dtype)
-    if cfg.n_image_tokens:
-        kwargs["img_embeds"] = jax.random.normal(
-            jax.random.key(3), (args.batch, cfg.n_image_tokens, cfg.d_model),
-            jnp.float32).astype(cfg.dtype)
+    gen = GenerateConfig(max_new_tokens=args.new_tokens,
+                         temperature=args.temperature)
 
+    if not supports_paging(cfg):
+        kwargs = {}
+        if cfg.is_encoder_decoder:
+            kwargs["enc_embeds"] = jax.random.normal(
+                jax.random.key(2),
+                (args.batch, cfg.n_audio_frames, cfg.d_model),
+                jnp.float32).astype(cfg.dtype)
+        if cfg.n_image_tokens:
+            kwargs["img_embeds"] = jax.random.normal(
+                jax.random.key(3),
+                (args.batch, cfg.n_image_tokens, cfg.d_model),
+                jnp.float32).astype(cfg.dtype)
+        t0 = time.perf_counter()
+        out = engine.generate(prompts, gen, rng=jax.random.key(7), **kwargs)
+        dt = time.perf_counter() - t0
+        toks = out["tokens"]
+        n_new = toks.shape[1] - args.prompt_len
+        print(f"[serve/static] {args.batch} seqs x {n_new} new tokens in "
+              f"{dt:.2f}s ({args.batch * n_new / dt:.1f} tok/s)")
+        print("[serve] first sequence:",
+              toks[0, args.prompt_len:].tolist())
+        return
+
+    prompts_np = np.asarray(prompts)
+    for b in range(args.batch):
+        engine.submit(prompts_np[b], gen, rng=jax.random.fold_in(
+            jax.random.key(7), b))
     t0 = time.perf_counter()
-    out = engine.generate(
-        prompts, GenerateConfig(max_new_tokens=args.new_tokens,
-                                temperature=args.temperature),
-        rng=jax.random.key(7), **kwargs)
+    done = engine.run()
     dt = time.perf_counter() - t0
-    toks = out["tokens"]
-    n_new = toks.shape[1] - args.prompt_len
-    print(f"[serve] {args.batch} seqs x {n_new} new tokens in {dt:.2f}s "
-          f"({args.batch * n_new / dt:.1f} tok/s)")
-    print("[serve] first sequence:", toks[0, args.prompt_len:].tolist())
+    n_new = sum(len(r.generated) for r in done)
+    print(f"[serve] {len(done)} requests, {n_new} new tokens in {dt:.2f}s "
+          f"({n_new / dt:.1f} tok/s) over {slots} slots "
+          f"({engine.decode_steps} decode steps)")
+    for r in sorted(done, key=lambda r: r.request_id)[:4]:
+        t = engine.roofline_terms(r)
+        print(f"[serve]   req {r.request_id}: {len(r.generated)} tokens "
+              f"({r.finish_reason}), AI={t.arithmetic_intensity:.2f} "
+              f"{t.bound_class()}, mean_batch={r.ledger.mean_batch:.1f}")
+    first = min(done, key=lambda r: r.request_id)
+    print("[serve] first sequence:", first.generated[:16])
 
 
 if __name__ == "__main__":

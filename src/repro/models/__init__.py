@@ -4,19 +4,23 @@ from .model import (
     cache_param_defs,
     cross_entropy,
     decode_step,
+    decode_step_paged,
     init_cache,
     init_params,
     loss_fn,
     model_param_defs,
+    paged_cache_defs,
     param_bytes,
     param_count,
     param_shardings,
     prefill,
+    prefill_chunk_paged,
 )
 
 __all__ = [
     "BlockDef", "ModelConfig", "SHAPES", "ShapeCell", "applicable_shapes",
     "abstract_params", "cache_param_defs", "cross_entropy", "decode_step",
-    "init_cache", "init_params", "loss_fn", "model_param_defs",
-    "param_bytes", "param_count", "param_shardings", "prefill",
+    "decode_step_paged", "init_cache", "init_params", "loss_fn",
+    "model_param_defs", "paged_cache_defs", "param_bytes", "param_count",
+    "param_shardings", "prefill", "prefill_chunk_paged",
 ]

@@ -171,6 +171,83 @@ def init_cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Par
     }
 
 
+def paged_pool_defs(cfg: ModelConfig, num_pages: int, page_size: int
+                    ) -> Dict[str, ParamDef]:
+    """Physical page pool for the GQA KV cache: (num_pages, page_size, KV, hd).
+
+    Pages carry no batch dim — a per-slot block table maps logical block
+    index -> physical page, so slots of different lengths share one pool
+    (vLLM-style paging; the block table is shared across layers)."""
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": ParamDef((num_pages, page_size, KV, hd),
+                      ("none", "kv_seq", "kv_heads", "head_dim"), cfg.dtype,
+                      init="zeros"),
+        "v": ParamDef((num_pages, page_size, KV, hd),
+                      ("none", "kv_seq", "kv_heads", "head_dim"), cfg.dtype,
+                      init="zeros"),
+    }
+
+
+def decode_attention_paged(
+    p, x: jax.Array, pool: Dict[str, jax.Array], block_tables: jax.Array,
+    pos: jax.Array, cfg: ModelConfig, *, page_size: int,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode for every slot against a paged pool.
+
+    x (B,1,D); pool k/v (P, page, KV, hd); block_tables (B, n_blocks)
+    logical block -> physical page; pos (B,) per-slot write position.
+    Inactive slots must map to a reserved trash page (their writes collide
+    harmlessly) and are masked out by the caller.
+    """
+    B, _, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // KV
+    posb = pos.astype(jnp.int32)[:, None]                       # (B, 1)
+    q, k_new, v_new = _project_qkv(p, x, x, cfg, posb, posb)
+    blk = jnp.take_along_axis(block_tables, posb // page_size, axis=1)[:, 0]
+    off = pos % page_size
+    pool_k = pool["k"].at[blk, off].set(k_new[:, 0].astype(pool["k"].dtype))
+    pool_v = pool["v"].at[blk, off].set(v_new[:, 0].astype(pool["v"].dtype))
+    S = block_tables.shape[1] * page_size
+    k = pool_k[block_tables].reshape(B, S, KV, hd)              # gather pages
+    v = pool_v[block_tables].reshape(B, S, KV, hd)
+    q = q.reshape(B, 1, KV, G, hd)
+    k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    o = _attn_core(q, k, v, posb, k_pos, causal=True,
+                   scale=1.0 / (hd ** 0.5),
+                   soft_cap=cfg.attn_logit_soft_cap).reshape(B, 1, H, hd)
+    out = jnp.einsum("bqhx,hxd->bqd", o, p["wo"])
+    return constrain(out, "batch", "seq", "d_model"), {"k": pool_k, "v": pool_v}
+
+
+def prefill_attention_paged(
+    p, x: jax.Array, pool: Dict[str, jax.Array], block_table: jax.Array,
+    offset: jax.Array, cfg: ModelConfig, *, page_size: int,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunked prefill for ONE request: x (1,T,D) at positions
+    offset..offset+T-1, attending to everything this slot has cached
+    (earlier chunks + causal self).  block_table (n_blocks,)."""
+    B, T, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // KV
+    idx = offset + jnp.arange(T, dtype=jnp.int32)               # (T,)
+    q, k_new, v_new = _project_qkv(p, x, x, cfg, idx[None, :], idx[None, :])
+    blk, off = block_table[idx // page_size], idx % page_size
+    pool_k = pool["k"].at[blk, off].set(k_new[0].astype(pool["k"].dtype))
+    pool_v = pool["v"].at[blk, off].set(v_new[0].astype(pool["v"].dtype))
+    S = block_table.shape[0] * page_size
+    k = pool_k[block_table].reshape(1, S, KV, hd)
+    v = pool_v[block_table].reshape(1, S, KV, hd)
+    q = q.reshape(B, T, KV, G, hd)
+    k_pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+    o = _attn_core(q, k, v, idx[None, :], k_pos, causal=True,
+                   scale=1.0 / (hd ** 0.5),
+                   soft_cap=cfg.attn_logit_soft_cap).reshape(B, T, H, hd)
+    out = jnp.einsum("bqhx,hxd->bqd", o, p["wo"])
+    return constrain(out, "batch", "seq", "d_model"), {"k": pool_k, "v": pool_v}
+
+
 def decode_attention(
     p, x: jax.Array, cache: Dict[str, jax.Array], pos: jax.Array,
     cfg: ModelConfig,
@@ -186,14 +263,10 @@ def decode_attention(
     k = constrain(k, "batch", "kv_seq", "kv_heads", "head_dim")
     v = constrain(v, "batch", "kv_seq", "kv_heads", "head_dim")
     q = q.reshape(B, 1, KV, G, hd)
-    with jax.named_scope("fused_attention"):
-        s = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32) / (hd ** 0.5)
-        if cfg.attn_logit_soft_cap > 0:
-            s = jnp.tanh(s / cfg.attn_logit_soft_cap) * cfg.attn_logit_soft_cap
-        Smax = k.shape[1]
-        valid = jnp.arange(Smax, dtype=jnp.int32)[None, :] <= pos
-        s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
-        w = jax.nn.softmax(s, axis=-1).astype(v.dtype)
-        o = jnp.einsum("bkgqs,bskh->bqkgh", w, v).reshape(B, 1, H, hd)
+    Smax = k.shape[1]
+    k_pos = jnp.broadcast_to(jnp.arange(Smax, dtype=jnp.int32), (B, Smax))
+    o = _attn_core(q, k, v, posb, k_pos, causal=True,
+                   scale=1.0 / (hd ** 0.5),
+                   soft_cap=cfg.attn_logit_soft_cap).reshape(B, 1, H, hd)
     out = jnp.einsum("bqhx,hxd->bqd", o, p["wo"])
     return constrain(out, "batch", "seq", "d_model"), {"k": k, "v": v}

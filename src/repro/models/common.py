@@ -10,6 +10,7 @@ not O(layers) — this is what keeps 100-layer x 512-device compiles fast).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Optional, Sequence, Tuple
 
@@ -216,6 +217,12 @@ def _block_params(cfg: ModelConfig, b: BlockDef) -> dict:
 
 
 def param_counts(cfg: ModelConfig) -> dict:
+    """Analytic total/active param counts (fresh dict; cached internally)."""
+    return dict(_param_counts(cfg))
+
+
+@functools.lru_cache(maxsize=None)
+def _param_counts(cfg: ModelConfig) -> dict:
     total = active = 0.0
     for unit, reps in cfg.segments():
         for b in unit:

@@ -97,6 +97,31 @@ def decode_step(params, cfg: ModelConfig, caches: List[Any],
     return logits[:, 0, :], new_caches
 
 
+def paged_cache_defs(cfg: ModelConfig, num_slots: int, num_pages: int,
+                     page_size: int):
+    """Paged decode-cache defs: page pools for attention/MLA, slot rows for
+    recurrent state.  See serve/kv_cache.py for the allocator."""
+    return tfm.paged_cache_defs(cfg, num_slots, num_pages, page_size)
+
+
+def decode_step_paged(params, cfg: ModelConfig, pools: List[Any],
+                      block_tables: jax.Array, token: jax.Array,
+                      pos: jax.Array, active: jax.Array, *, page_size: int):
+    """One decode token per slot against the paged cache.  token (B,1);
+    pos (B,); block_tables (B, n_blocks); active (B,) bool."""
+    return tfm.decode_one_paged(params, cfg, pools, block_tables, token, pos,
+                                active, page_size=page_size)
+
+
+def prefill_chunk_paged(params, cfg: ModelConfig, pools: List[Any],
+                        block_table: jax.Array, slot: jax.Array,
+                        tokens: jax.Array, offset: jax.Array,
+                        *, page_size: int):
+    """Prefill one chunk of one request into its pages (chunked prefill)."""
+    return tfm.prefill_chunk_paged(params, cfg, pools, block_table, slot,
+                                   tokens, offset, page_size=page_size)
+
+
 # --------------------------------------------------------------------------
 # Introspection helpers
 # --------------------------------------------------------------------------

@@ -83,9 +83,55 @@ def block_cache_defs(cfg: ModelConfig, b: BlockDef, batch: int,
     raise ValueError(b.mixer)
 
 
+def paged_block_cache_defs(cfg: ModelConfig, b: BlockDef, num_slots: int,
+                           num_pages: int, page_size: int) -> Dict[str, Any]:
+    """Paged decode cache defs for one block: attention-family caches become
+    batchless physical page pools (num_pages, page_size, ...); O(1)
+    recurrent states stay per-slot rows (num_slots, ...)."""
+    if b.mixer == "attn":
+        return attn.paged_pool_defs(cfg, num_pages, page_size)
+    if b.mixer == "mla":
+        return mla_mod.mla_paged_pool_defs(cfg, num_pages, page_size)
+    if b.mixer == "mamba":
+        return ssm_mod.state_defs(cfg, num_slots)
+    if b.mixer == "mlstm":
+        return xlstm_mod.mlstm_state_defs(cfg, num_slots)
+    if b.mixer == "slstm":
+        return xlstm_mod.slstm_state_defs(cfg, num_slots)
+    raise NotImplementedError(
+        f"paged cache unsupported for mixer {b.mixer!r} (decoder-only)")
+
+
+def paged_cache_defs(cfg: ModelConfig, num_slots: int, num_pages: int,
+                     page_size: int) -> List[Dict[str, Any]]:
+    segs = []
+    for unit, reps in cfg.segments():
+        unit_caches = {
+            f"b{i}": paged_block_cache_defs(cfg, b, num_slots, num_pages,
+                                            page_size)
+            for i, b in enumerate(unit)
+        }
+        segs.append(stack_defs(unit_caches, reps))
+    return segs
+
+
 # --------------------------------------------------------------------------
 # Block application — full sequence
 # --------------------------------------------------------------------------
+
+def _ffn_tail(p, b: BlockDef, x: jax.Array, cfg: ModelConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Shared norm2 -> FFN -> residual tail; returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if b.ffn == "none":
+        return x, aux
+    h = apply_norm(p["norm2"], x, cfg)
+    if b.ffn == "dense":
+        o = apply_mlp(p["ffn"], h, cfg)
+    else:
+        o, aux = moe_mod.moe_ffn(p["ffn"], h, cfg)
+    return x + cfg.residual_scale * o, aux
+
 
 def _cross_kv(p, src: jax.Array, cfg: ModelConfig):
     k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
@@ -152,13 +198,7 @@ def apply_block_full(p, b: BlockDef, x: jax.Array, cfg: ModelConfig,
         raise ValueError(b.mixer)
     x = x + cfg.residual_scale * o
 
-    if b.ffn != "none":
-        h = apply_norm(p["norm2"], x, cfg)
-        if b.ffn == "dense":
-            o = apply_mlp(p["ffn"], h, cfg)
-        else:
-            o, aux = moe_mod.moe_ffn(p["ffn"], h, cfg)
-        x = x + cfg.residual_scale * o
+    x, aux = _ffn_tail(p, b, x, cfg)
     x = constrain(x, "batch", "seq", "d_model")
     return x, aux, state
 
@@ -168,10 +208,47 @@ def apply_block_full(p, b: BlockDef, x: jax.Array, cfg: ModelConfig,
 # --------------------------------------------------------------------------
 
 def apply_block_decode(p, b: BlockDef, x: jax.Array, cache: Dict[str, Any],
-                       pos: jax.Array, cfg: ModelConfig
+                       pos: jax.Array, cfg: ModelConfig,
+                       paged: Optional[Dict[str, Any]] = None
                        ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One-token decode for a block.  With ``paged`` set, attention-family
+    caches are physical page pools addressed through
+    ``paged['block_tables']`` (B, n_blocks) and ``pos`` is a per-slot
+    (B,) vector; recurrent states are per-slot rows either way."""
     h = apply_norm(p["norm1"], x, cfg)
-    if b.mixer == "attn":
+    if paged is not None and b.mixer == "attn":
+        o, cache = attn.decode_attention_paged(
+            p["mixer"], h, cache, paged["block_tables"], pos, cfg,
+            page_size=paged["page_size"])
+    elif paged is not None and b.mixer == "mla":
+        o, cache = mla_mod.mla_decode_paged(
+            p["mixer"], h, cache, paged["block_tables"], pos, cfg,
+            page_size=paged["page_size"])
+    elif paged is not None and b.mixer in ("cross_attn", "attn+cross"):
+        raise NotImplementedError(
+            "paged decode supports decoder-only mixers; use the static "
+            "engine for enc-dec / VLM archs")
+    elif paged is not None and b.mixer in ("mamba", "mlstm", "slstm"):
+        # recurrent state rows: freeze rows of non-active slots so a packed
+        # decode step can't clobber a slot that is mid-prefill or idle
+        if b.mixer == "mamba":
+            o, new_cache = ssm_mod.mamba_decode(p["mixer"], h, cache, cfg)
+        elif b.mixer == "mlstm":
+            o, new_cache = xlstm_mod.mlstm_mixer(p["mixer"], h, cfg,
+                                                 state=cache,
+                                                 return_state=True)
+        else:
+            o, new_cache = xlstm_mod.slstm_mixer(p["mixer"], h, cfg,
+                                                 state=cache,
+                                                 return_state=True)
+        act = paged["active"]
+
+        def _freeze(old, new):
+            m = act.reshape((act.shape[0],) + (1,) * (new.ndim - 1))
+            return jnp.where(m, new.astype(old.dtype), old)
+
+        cache = jax.tree.map(_freeze, cache, new_cache)
+    elif b.mixer == "attn":
         o, cache = attn.decode_attention(p["mixer"], h, cache, pos, cfg)
     elif b.mixer == "cross_attn":
         o = _cross_attend_cached(p["mixer"], h, cache["ck"], cache["cv"], cfg)
@@ -195,13 +272,7 @@ def apply_block_decode(p, b: BlockDef, x: jax.Array, cache: Dict[str, Any],
     else:
         raise ValueError(b.mixer)
     x = x + cfg.residual_scale * o
-    if b.ffn != "none":
-        h = apply_norm(p["norm2"], x, cfg)
-        if b.ffn == "dense":
-            o = apply_mlp(p["ffn"], h, cfg)
-        else:
-            o, _ = moe_mod.moe_ffn(p["ffn"], h, cfg)
-        x = x + cfg.residual_scale * o
+    x, _ = _ffn_tail(p, b, x, cfg)
     return x, cache
 
 
@@ -365,3 +436,140 @@ def decode_one(params, cfg: ModelConfig, caches: List[Any], token: jax.Array,
     x = apply_norm(params["final_norm"], x, cfg)
     logits = logits_from_hidden(params["embed"], x, cfg)
     return logits, new_caches
+
+
+# --------------------------------------------------------------------------
+# Paged serving steps (continuous batching)
+# --------------------------------------------------------------------------
+
+def decode_one_paged(params, cfg: ModelConfig, pools: List[Any],
+                     block_tables: jax.Array, token: jax.Array,
+                     pos: jax.Array, active: jax.Array, *, page_size: int
+                     ) -> Tuple[jax.Array, List[Any]]:
+    """One decode step over the packed slot batch.
+
+    token (B,1) int32 (B = num_slots); pos (B,) per-slot positions;
+    block_tables (B, n_blocks) logical block -> physical page; active (B,)
+    bool marks slots holding a decoding request (idle/prefilling lanes
+    compute garbage that is routed to the trash page and frozen out of the
+    recurrent state rows).  Attention / MLA pool leaves are
+    (reps, P, page, ...) physical pages; recurrent state leaves are
+    (reps, B, ...) per-slot rows.  The shapes are independent of which
+    slots are live, so this compiles exactly once and serves every
+    admission state of the continuous batch.
+
+    MoE caveat: idle-lane garbage tokens do enter expert routing and can
+    shift capacity cutoffs for live tokens — the same O(1)-logit
+    discontinuity GShard drop semantics already allow between batch
+    compositions (see test_serve.py), not a paging artifact.
+    """
+    B = token.shape[0]
+    posb = pos.astype(jnp.int32)[:, None]
+    x = embed_tokens(params["embed"], token, cfg, posb)
+    paged = {"block_tables": block_tables, "page_size": page_size,
+             "active": active}
+    new_pools: List[Any] = []
+    for seg_params, seg_pool, (unit, reps) in zip(
+            params["segments"], pools, cfg.segments()):
+
+        def body(y, args):
+            layer_p, layer_c = args
+            new_c = {}
+            for i, b in enumerate(unit):
+                y, c = apply_block_decode(layer_p[f"b{i}"], b, y,
+                                          layer_c[f"b{i}"], pos, cfg,
+                                          paged=paged)
+                new_c[f"b{i}"] = c
+            return y, new_c
+
+        x, upd = jax.lax.scan(body, x, (seg_params, seg_pool))
+        new_pools.append(upd)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = logits_from_hidden(params["embed"], x, cfg)
+    return logits[:, 0, :], new_pools
+
+
+def _slot_rows(tree, slot):
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0), tree)
+
+
+def _write_slot_rows(tree, new, slot):
+    return jax.tree.map(
+        lambda a, s: jax.lax.dynamic_update_slice_in_dim(
+            a, s.astype(a.dtype), slot, axis=0), tree, new)
+
+
+def apply_block_prefill_chunk(p, b: BlockDef, x: jax.Array,
+                              cache: Dict[str, Any], offset: jax.Array,
+                              slot: jax.Array, block_table: jax.Array,
+                              cfg: ModelConfig, *, page_size: int
+                              ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Prefill one chunk of ONE request through a block.  x (1,T,D) at
+    positions offset..offset+T-1; attention caches are page pools written
+    through ``block_table`` (n_blocks,); recurrent state lives in row
+    ``slot`` of the (num_slots, ...) state leaves."""
+    h = apply_norm(p["norm1"], x, cfg)
+    if b.mixer == "attn":
+        o, cache = attn.prefill_attention_paged(
+            p["mixer"], h, cache, block_table, offset, cfg,
+            page_size=page_size)
+    elif b.mixer == "mla":
+        o, cache = mla_mod.mla_prefill_paged(
+            p["mixer"], h, cache, block_table, offset, cfg,
+            page_size=page_size)
+    elif b.mixer in ("mamba", "mlstm", "slstm"):
+        st = _slot_rows(cache, slot)
+        if b.mixer == "mamba":
+            o, new_st = ssm_mod.mamba_mixer(p["mixer"], h, cfg, state=st,
+                                            return_state=True)
+        elif b.mixer == "mlstm":
+            o, new_st = xlstm_mod.mlstm_mixer(p["mixer"], h, cfg, state=st,
+                                              return_state=True)
+        else:
+            o, new_st = xlstm_mod.slstm_mixer(p["mixer"], h, cfg, state=st,
+                                              return_state=True)
+        cache = _write_slot_rows(cache, new_st, slot)
+    else:
+        raise NotImplementedError(
+            "paged prefill supports decoder-only mixers")
+    x = x + cfg.residual_scale * o
+    x, _ = _ffn_tail(p, b, x, cfg)
+    return x, cache
+
+
+def prefill_chunk_paged(params, cfg: ModelConfig, pools: List[Any],
+                        block_table: jax.Array, slot: jax.Array,
+                        tokens: jax.Array, offset: jax.Array,
+                        *, page_size: int) -> Tuple[jax.Array, List[Any]]:
+    """Prefill one chunk of one request into its pages.
+
+    tokens (1,T) int32 at positions offset..offset+T-1; block_table
+    (n_blocks,) for this request's slot; slot scalar int32.  Returns
+    (last_logits (1,V), pools).  Calling this repeatedly over consecutive
+    chunks is mathematically identical to one full prefill: attention
+    chunks attend to all previously written pages, recurrent mixers carry
+    their slot-row state across chunks.
+    """
+    B, T = tokens.shape
+    posb = offset + jnp.arange(T, dtype=jnp.int32)[None, :]
+    x = embed_tokens(params["embed"], tokens, cfg, posb)
+    new_pools: List[Any] = []
+    for seg_params, seg_pool, (unit, reps) in zip(
+            params["segments"], pools, cfg.segments()):
+
+        def body(y, args):
+            layer_p, layer_c = args
+            new_c = {}
+            for i, b in enumerate(unit):
+                y, c = apply_block_prefill_chunk(
+                    layer_p[f"b{i}"], b, y, layer_c[f"b{i}"], offset, slot,
+                    block_table, cfg, page_size=page_size)
+                new_c[f"b{i}"] = c
+            return y, new_c
+
+        x, upd = jax.lax.scan(body, x, (seg_params, seg_pool))
+        new_pools.append(upd)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = logits_from_hidden(params["embed"], x, cfg)
+    return logits[:, -1, :], new_pools

@@ -1,3 +1,9 @@
-from .engine import Engine, GenerateConfig
+from .engine import Engine, EngineConfig, GenerateConfig, StaticEngine
+from .kv_cache import PagedKVCache, supports_paging
+from .scheduler import Request, RequestState, RooflineLedger, Scheduler
 
-__all__ = ["Engine", "GenerateConfig"]
+__all__ = [
+    "Engine", "EngineConfig", "GenerateConfig", "StaticEngine",
+    "PagedKVCache", "supports_paging",
+    "Request", "RequestState", "RooflineLedger", "Scheduler",
+]

@@ -1,10 +1,16 @@
-"""Batched serving engine: prefill -> cache placement -> decode loop.
+"""Serving engines.
 
-The decode step is the exact function the ``decode_32k``/``long_500k``
-dry-run cells lower; here it runs for real on CPU-scale models (the
-examples) with greedy or temperature sampling and per-sequence stop
-handling.  Prefill states are collected by the model's scan and placed
-into max_len-deep cache buffers.
+:class:`Engine` is a continuous-batching engine over a paged KV cache: a
+fixed bank of decode slots, one jitted decode step whose shapes are
+independent of which slots are live (it compiles once and serves every
+admission state), chunked prefill that interleaves with running decodes,
+and a per-request roofline ledger (see scheduler.py).  Decoder-only archs
+only; enc-dec / VLM requests transparently fall back to the static path.
+
+:class:`StaticEngine` is the original whole-batch prefill -> lockstep
+decode loop, kept as the reference implementation the continuous engine is
+tested against token-for-token, and as the serving path for archs with
+cross-attention caches.
 """
 
 from __future__ import annotations
@@ -14,9 +20,15 @@ from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.models import decode_step, init_cache, prefill
-from repro.models.common import ModelConfig
+from repro.core.roofline.hardware import ChipSpec, TPU_V5E
+from repro.models import (decode_step, decode_step_paged, init_cache,
+                          prefill, prefill_chunk_paged)
+from repro.models.common import ModelConfig, model_flops
+
+from .kv_cache import PagedKVCache, supports_paging
+from .scheduler import Request, RequestState, Scheduler
 
 
 @dataclasses.dataclass
@@ -26,8 +38,18 @@ class GenerateConfig:
     stop_token: Optional[int] = None
 
 
+@dataclasses.dataclass
+class EngineConfig:
+    num_slots: int = 4                # packed decode batch width
+    page_size: int = 16               # tokens per physical KV page
+    max_len: int = 256                # per-request context ceiling
+    prefill_chunk: int = 0            # 0 = whole prompt in one chunk
+    num_pages: Optional[int] = None   # None = fully backed pool
+    chip: ChipSpec = TPU_V5E          # roofline ledger target hardware
+
+
 def _place_prefill_states(cfg: ModelConfig, caches, states, prompt_len: int):
-    """Copy collected per-layer states into the cache buffers.
+    """Copy collected per-layer states into dense cache buffers.
 
     Attention k/v (reps, B, S, KV, hd) go into (reps, B, max_len, KV, hd)
     at offset 0; recurrent states replace the zeros outright.
@@ -44,7 +66,9 @@ def _place_prefill_states(cfg: ModelConfig, caches, states, prompt_len: int):
     return out
 
 
-class Engine:
+class StaticEngine:
+    """Whole-batch prefill -> lockstep decode (the original engine)."""
+
     def __init__(self, cfg: ModelConfig, params):
         self.cfg = cfg
         self.params = params
@@ -88,3 +112,245 @@ class Engine:
         k = jax.random.fold_in(rng, i)
         return jax.random.categorical(
             k, logits / gen.temperature, axis=-1).astype(jnp.int32)
+
+
+class Engine:
+    """Continuous-batching serve engine with paged KV cache.
+
+    Streaming API::
+
+        eng = Engine(cfg, params, EngineConfig(num_slots=8, max_len=512))
+        eng.submit(prompt_ids, GenerateConfig(max_new_tokens=64))
+        done = eng.run()          # -> List[Request] with roofline ledgers
+
+    ``generate()`` keeps the original whole-batch signature for drop-in
+    compatibility (and silently uses :class:`StaticEngine` for archs whose
+    caches cannot page: enc-dec, VLM cross-attention).
+    """
+
+    def __init__(self, cfg: ModelConfig, params,
+                 ecfg: Optional[EngineConfig] = None):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg or EngineConfig()
+        self.paged_ok = supports_paging(cfg)
+        self._static: Optional[StaticEngine] = None
+        self._kv: Optional[PagedKVCache] = None
+        self._sched: Optional[Scheduler] = None
+        self._decode_fn = None
+        self._prefill_fn = None
+        self._next_token: Optional[np.ndarray] = None
+        self._pos: Optional[np.ndarray] = None
+        self.step_count = 0
+        self.decode_steps = 0
+
+    # -- wiring ------------------------------------------------------------
+
+    def static_engine(self) -> StaticEngine:
+        if self._static is None:
+            self._static = StaticEngine(self.cfg, self.params)
+        return self._static
+
+    def reset(self, num_slots: Optional[int] = None,
+              max_len: Optional[int] = None) -> None:
+        """(Re)build the paged cache and scheduler.  Drops any in-flight
+        requests; call only when idle."""
+        if not self.paged_ok:
+            raise NotImplementedError(
+                f"{self.cfg.name}: continuous batching needs a paged cache; "
+                "use generate() (static fallback) for this arch")
+        e = self.ecfg
+        if num_slots is not None or max_len is not None:
+            e = dataclasses.replace(
+                self.ecfg,
+                num_slots=num_slots or self.ecfg.num_slots,
+                max_len=max_len or self.ecfg.max_len)
+            self.ecfg = e
+        self._kv = PagedKVCache(self.cfg, e.num_slots, e.page_size,
+                                e.max_len, num_pages=e.num_pages)
+        self._sched = Scheduler(self.cfg, self._kv,
+                                prefill_chunk=e.prefill_chunk)
+        self._next_token = np.zeros((e.num_slots,), np.int32)
+        self._pos = np.zeros((e.num_slots,), np.int32)
+        cfg, ps = self.cfg, e.page_size
+        self._decode_fn = jax.jit(
+            lambda p, pools, bt, tok, pos, act: decode_step_paged(
+                p, cfg, pools, bt, tok, pos, act, page_size=ps))
+        # jit handles per-chunk-length retracing under one cache
+        self._prefill_fn = jax.jit(
+            lambda p, pools, btr, slot, toks, off: prefill_chunk_paged(
+                p, cfg, pools, btr, slot, toks, off, page_size=ps))
+        self.step_count = 0
+        self.decode_steps = 0
+
+    def _ensure(self, budget: int) -> None:
+        if self._kv is None:
+            self.reset(max_len=max(budget, self.ecfg.max_len))
+        elif budget > self._kv.max_len:
+            if self._sched.has_work():
+                raise ValueError(
+                    f"request budget {budget} exceeds engine max_len "
+                    f"{self._kv.max_len} with requests in flight; drain "
+                    "first or raise EngineConfig.max_len")
+            self.reset(max_len=max(budget, self.ecfg.max_len))
+
+    # -- request API -------------------------------------------------------
+
+    def submit(self, prompt, gen: GenerateConfig,
+               rng: Optional[jax.Array] = None) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        self._ensure(prompt.shape[0] + gen.max_new_tokens)
+        req = Request(prompt=prompt, max_new_tokens=gen.max_new_tokens,
+                      temperature=gen.temperature, stop_token=gen.stop_token,
+                      rng=rng)
+        return self._sched.submit(req)
+
+    def step(self) -> List[Request]:
+        """One scheduler iteration: admit, prefill one chunk per admitted
+        request, one packed decode step.  Returns requests finished here."""
+        sched = self._sched
+        n_done = len(sched.finished)
+        admitted = sched.admit()
+        work = sched.prefill_work()
+        for req, start, end in work:
+            self._run_prefill(req, start, end)
+        running = sched.decode_requests()
+        if running:
+            self._run_decode(running)
+        elif not admitted and not work and sched.waiting:
+            head = sched.waiting[0]
+            raise RuntimeError(
+                f"request {head.request_id} (budget {head.budget}) cannot "
+                f"be admitted: engine max_len {self._kv.max_len}, "
+                f"{self._kv.free_page_count} free pages")
+        self.step_count += 1
+        return sched.finished[n_done:]
+
+    def roofline_terms(self, req: Request):
+        """The request's decode RooflineTerms on this engine's target chip
+        (``EngineConfig.chip``)."""
+        return req.ledger.terms(self.cfg, self.ecfg.chip)
+
+    def run(self) -> List[Request]:
+        """Drain all queued work; returns requests finished by this call."""
+        if self._sched is None:
+            return []
+        n0 = len(self._sched.finished)
+        while self._sched.has_work():
+            self.step()
+        return self._sched.finished[n0:]
+
+    # -- internals ---------------------------------------------------------
+
+    def _run_prefill(self, req: Request, start: int, end: int) -> None:
+        kv, cfg = self._kv, self.cfg
+        whole = start == 0 and end == req.prompt_len
+        if whole:
+            # one-chunk path: identical computation to the static engine
+            last_logits, states = prefill(self.params, cfg,
+                                          jnp.asarray(req.prompt[None, :]))
+            kv.write_prefill_states(req.slot, states, req.prompt_len)
+        else:
+            btr = jnp.asarray(kv.block_tables[req.slot])
+            toks = jnp.asarray(req.prompt[None, start:end])
+            last_logits, kv.pools = self._prefill_fn(
+                self.params, kv.pools, btr, jnp.int32(req.slot), toks,
+                jnp.int32(start))
+        req.prefill_pos = end
+        if end == req.prompt_len:
+            req.ledger.prefill_flops += model_flops(cfg, req.prompt_len, 1,
+                                                    "prefill")
+            if req.max_new_tokens <= 0:
+                # prefill-only scoring: same shape contract as StaticEngine
+                self._sched.finish(req, "length")
+                return
+            tok = self._sample_one(np.asarray(last_logits[0]), req)
+            self._commit_token(req, tok, first=True)
+
+    def _run_decode(self, running: List[Request]) -> None:
+        kv = self._kv
+        slots = [r.slot for r in running]
+        bt = kv.block_tables_for(slots)
+        active = np.zeros((self.ecfg.num_slots,), bool)
+        active[slots] = True
+        token = np.where(active, self._next_token, 0).astype(np.int32)
+        pos = np.where(active, self._pos, 0).astype(np.int32)
+        logits, kv.pools = self._decode_fn(
+            self.params, kv.pools, bt, jnp.asarray(token[:, None]),
+            jnp.asarray(pos), jnp.asarray(active))
+        self.decode_steps += 1
+        logits_np = np.asarray(logits, np.float32)
+        n_active = len(running)
+        for req in running:
+            req.ledger.add_decode_token(self.cfg, req.context_len, n_active)
+            tok = self._sample_one(logits_np[req.slot], req)
+            self._commit_token(req, tok)
+
+    def _commit_token(self, req: Request, tok: int, first: bool = False)\
+            -> None:
+        req.generated.append(tok)
+        if first:
+            req.state = RequestState.RUNNING
+        if req.stop_token is not None and tok == req.stop_token:
+            self._sched.finish(req, "stop")
+        elif len(req.generated) >= req.max_new_tokens:
+            self._sched.finish(req, "length")
+        else:
+            self._next_token[req.slot] = tok
+            self._pos[req.slot] = req.context_len - 1
+
+    def _sample_one(self, logits_row: np.ndarray, req: Request) -> int:
+        if req.temperature <= 0.0 or req.rng is None:
+            return int(np.argmax(logits_row))
+        k = jax.random.fold_in(req.rng, len(req.generated))
+        return int(jax.random.categorical(
+            k, jnp.asarray(logits_row) / req.temperature))
+
+    # -- batch compatibility API -------------------------------------------
+
+    def generate(self, prompts: jax.Array, gen: GenerateConfig,
+                 enc_embeds=None, img_embeds=None,
+                 rng: Optional[jax.Array] = None) -> Dict[str, Any]:
+        """prompts (B, S) int32 -> dict with tokens (B, S+new), finished.
+
+        Runs the continuous-batching path with one slot per row; archs
+        without a paged decode path (enc-dec / VLM) use the static engine.
+        """
+        if (enc_embeds is not None or img_embeds is not None
+                or not self.paged_ok):
+            return self.static_engine().generate(
+                prompts, gen, enc_embeds=enc_embeds, img_embeds=img_embeds,
+                rng=rng)
+        if self._sched is not None and self._sched.has_work():
+            raise ValueError(
+                "generate() rebuilds the scheduler and would drop requests "
+                "already in flight; drain with run() first")
+        prompts_np = np.asarray(prompts, np.int32)
+        B, S = prompts_np.shape
+        prev_ecfg = self.ecfg
+        self.reset(num_slots=B, max_len=S + gen.max_new_tokens)
+        try:
+            for b in range(B):
+                self.submit(
+                    prompts_np[b], gen,
+                    rng=None if rng is None else jax.random.fold_in(rng, b))
+            done = sorted(self.run(), key=lambda r: r.request_id)
+        finally:
+            # restore the caller's config; drop the per-call pool so the
+            # next streaming submit rebuilds at the configured sizes
+            self.ecfg = prev_ecfg
+            self._kv = None
+            self._sched = None
+        n_gen = max(len(r.generated) for r in done)
+        out = np.zeros((B, S + n_gen), np.int32)
+        finished = np.zeros((B,), bool)
+        for r in done:
+            row = np.asarray(r.tokens)
+            # rows that stopped early hold their last token (the static
+            # engine keeps decoding them; callers only see shape <= static)
+            padded = np.concatenate(
+                [row, np.full((S + n_gen - row.shape[0],), row[-1],
+                              np.int32)])
+            out[r.request_id] = padded
+            finished[r.request_id] = r.finish_reason == "stop"
+        return {"tokens": jnp.asarray(out), "finished": jnp.asarray(finished)}

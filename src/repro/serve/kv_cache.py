@@ -1,0 +1,197 @@
+"""Paged KV cache: physical page pools + a slot/page allocator.
+
+Storage layout (vLLM-style paging adapted to the scan-over-superblocks
+cache pytrees):
+
+* Attention / MLA cache leaves become batchless *page pools* of shape
+  ``(reps, num_pages, page_size, ...)`` — one pool per stacked cache leaf,
+  all layers addressed through the same per-slot block table.
+* O(1) recurrent states (mamba ``h``/``conv``, mLSTM ``C/n/m``, sLSTM
+  ``c/n/h/m``) stay per-slot rows ``(reps, num_slots, ...)`` — a recurrent
+  "page" is just the slot row.
+
+A *slot* is one position in the packed decode batch.  ``block_tables``
+(num_slots, blocks_per_slot) maps a slot's logical block index to a
+physical page; physical page 0 is reserved as a trash page that idle slots
+harmlessly write to, so the jitted decode step has shapes independent of
+which slots are live and compiles exactly once.
+
+The allocator is host-side and deliberately simple: pages are reserved at
+admission for the request's full ``prompt_len + max_new_tokens`` budget, so
+a request admitted once can never OOM mid-flight (no preemption needed).
+Freed pages return to the pool and are reused by later admissions — the
+validity mask ``k_index <= pos`` makes stale page contents unobservable.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig
+from repro.models import transformer as tfm
+from repro.parallel.sharding import ParamDef, tree_instantiate
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+_PAGED_MIXERS = ("attn", "mla")
+_RECURRENT_MIXERS = ("mamba", "mlstm", "slstm")
+
+
+def supports_paging(cfg: ModelConfig) -> bool:
+    """True iff every mixer in the model has a paged decode path
+    (decoder-only archs; enc-dec / VLM cross-attention is static-engine
+    territory)."""
+    if cfg.is_encoder_decoder or cfg.n_image_tokens:
+        return False
+    return all(b.mixer in _PAGED_MIXERS + _RECURRENT_MIXERS
+               for b in cfg.block_pattern)
+
+
+class PagedKVCache:
+    """Page pools for every cache leaf of the model + slot/page allocator."""
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, page_size: int,
+                 max_len: int, num_pages: Optional[int] = None,
+                 key: Optional[jax.Array] = None):
+        if not supports_paging(cfg):
+            raise NotImplementedError(
+                f"{cfg.name}: paged KV cache supports decoder-only archs "
+                f"(mixers {_PAGED_MIXERS + _RECURRENT_MIXERS})")
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.page_size = page_size
+        self.blocks_per_slot = max(1, math.ceil(max_len / page_size))
+        self.max_len = self.blocks_per_slot * page_size
+        if num_pages is None:
+            # full backing store + the reserved trash page
+            num_pages = 1 + num_slots * self.blocks_per_slot
+        self.num_pages = num_pages
+
+        defs = tfm.paged_cache_defs(cfg, num_slots, num_pages, page_size)
+        self.pools = tree_instantiate(defs, key if key is not None
+                                      else jax.random.key(0))
+        # leaf -> is it a page pool (vs a per-slot state row)?  Pool leaves
+        # carry "kv_seq" but no "batch" logical axis after stacking.
+        self._paged = jax.tree.map(
+            lambda d: "kv_seq" in d.logical and "batch" not in d.logical,
+            defs, is_leaf=_is_def)
+
+        self.block_tables = np.zeros((num_slots, self.blocks_per_slot),
+                                     np.int32)
+        self._free_pages: List[int] = list(range(num_pages - 1, 0, -1))
+        self._free_slots: List[int] = list(range(num_slots - 1, -1, -1))
+        self._slot_pages: Dict[int, List[int]] = {}
+
+    # -- allocator ---------------------------------------------------------
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return max(1, math.ceil(n_tokens / self.page_size))
+
+    @property
+    def free_page_count(self) -> int:
+        return len(self._free_pages)
+
+    @property
+    def free_slot_count(self) -> int:
+        return len(self._free_slots)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return (n_tokens <= self.max_len
+                and bool(self._free_slots)
+                and self.pages_needed(n_tokens) <= len(self._free_pages))
+
+    def alloc(self, n_tokens: int) -> Optional[int]:
+        """Reserve a slot plus pages for an ``n_tokens`` context.  Returns
+        the slot id, or None if slots/pages are exhausted."""
+        n_pages = self.pages_needed(n_tokens)
+        if n_tokens > self.max_len:
+            raise ValueError(f"request needs {n_tokens} tokens > "
+                             f"max_len {self.max_len}")
+        if not self._free_slots or n_pages > len(self._free_pages):
+            return None
+        slot = self._free_slots.pop()
+        pages = [self._free_pages.pop() for _ in range(n_pages)]
+        self._slot_pages[slot] = pages
+        row = np.zeros((self.blocks_per_slot,), np.int32)
+        row[: n_pages] = pages
+        self.block_tables[slot] = row
+        self._zero_slot_state(slot)
+        return slot
+
+    def free(self, slot: int) -> None:
+        pages = self._slot_pages.pop(slot)
+        self._free_pages.extend(reversed(pages))
+        self._free_slots.append(slot)
+        self.block_tables[slot] = 0
+
+    def _zero_slot_state(self, slot: int) -> None:
+        """Fresh requests start from zero recurrent state; attention pages
+        need no reset (masked by position)."""
+        def f(pool, paged):
+            if paged:
+                return pool
+            zeros = jnp.zeros(pool.shape[:1] + (1,) + pool.shape[2:],
+                              pool.dtype)
+            return jax.lax.dynamic_update_slice_in_dim(pool, zeros, slot,
+                                                       axis=1)
+        self.pools = jax.tree.map(f, self.pools, self._paged)
+
+    # -- views -------------------------------------------------------------
+
+    def block_tables_for(self, slots: Optional[List[int]] = None) -> jax.Array:
+        """Device block tables; rows not in ``slots`` are pointed at the
+        trash page so masked/idle lanes cannot clobber live pages."""
+        if slots is None:
+            return jnp.asarray(self.block_tables)
+        bt = np.zeros_like(self.block_tables)
+        for s in slots:
+            bt[s] = self.block_tables[s]
+        return jnp.asarray(bt)
+
+    def write_prefill_states(self, slot: int, states: List[Any],
+                             prompt_len: int) -> None:
+        """Scatter full-prefill collected states into this slot's pages.
+
+        ``states`` come from ``models.prefill(collect_state=True)`` with
+        batch 1: attention-family leaves are (reps, 1, S, ...) per-token
+        streams -> paged scatter; recurrent leaves are (reps, 1, ...) final
+        states -> slot rows.
+        """
+        row = self.block_tables[slot]
+        idx = np.arange(prompt_len)
+        phys = jnp.asarray(row[idx // self.page_size])
+        off = jnp.asarray(idx % self.page_size)
+
+        def f(pool, state, paged):
+            if paged:
+                return pool.at[:, phys, off].set(
+                    state[:, 0].astype(pool.dtype))
+            return jax.lax.dynamic_update_slice_in_dim(
+                pool, state.astype(pool.dtype), slot, axis=1)
+
+        for i, (seg_pool, seg_state) in enumerate(zip(self.pools, states)):
+            self.pools[i] = jax.tree.map(f, seg_pool, seg_state,
+                                         self._paged[i])
+
+    def dense_view(self, slot: int) -> List[Any]:
+        """Gather one slot's cache back into the dense ``init_cache`` layout
+        (batch 1): paged leaves -> (reps, 1, max_len, ...), state leaves ->
+        (reps, 1, ...).  For tests and debugging."""
+        row = jnp.asarray(self.block_tables[slot])
+
+        def f(pool, paged):
+            if paged:
+                g = pool[:, row]                    # (reps, blocks, page, ...)
+                return g.reshape(g.shape[0], 1, self.max_len, *g.shape[3:])
+            return jax.lax.dynamic_slice_in_dim(pool, slot, 1, axis=1)
+
+        return [jax.tree.map(f, seg, flag)
+                for seg, flag in zip(self.pools, self._paged)]

@@ -1,0 +1,276 @@
+"""Continuous-batching scheduler with a per-request decode roofline ledger.
+
+Scheduling
+----------
+Requests move WAITING -> PREFILL -> RUNNING -> FINISHED.  Each engine step:
+
+1. *admit*: pop waiting requests into free decode slots while the paged KV
+   cache can reserve their full ``prompt + max_new_tokens`` page budget —
+   admission happens mid-flight, into slots freed by earlier completions.
+2. *prefill*: every PREFILL request advances one chunk of at most
+   ``prefill_chunk`` prompt tokens (0 = the whole prompt in one chunk).
+   Chunks attend to the request's previously written pages, so chunked and
+   whole-prompt prefill are mathematically identical for dense archs.
+   (MoE caveat: expert-capacity cutoffs scale with tokens-per-call, so a
+   chunked MoE prefill can drop different tokens than a whole-prompt one —
+   the same GShard discontinuity batched decode already accepts.)
+3. *decode*: one jitted step over the packed slot batch produces the next
+   token for every RUNNING request; finished requests (stop token or token
+   budget) are evicted and their pages recycled.
+
+Decode roofline ledger (paper eq. 1: ``P = min(pi, I * beta)``)
+---------------------------------------------------------------
+Generating one token for a request with context length ``L`` does
+
+    W(L) = 2 * N_active  +  4 * H * hd * L * n_attn_blocks        [FLOPs]
+
+(the ``model_flops`` decode convention: weight matmuls + score/value
+attention math), and moves
+
+    Q(L) = params_bytes / B_active                               [weights]
+         + L * kv_line_bytes  +  kv_line_bytes                   [KV r/w]
+         + state_bytes (read+write, recurrent mixers)            [O(1)]
+
+through HBM.  The per-token arithmetic intensity ``I = W/Q`` is tiny —
+decode is the most memory-bound workload we serve — and grows with the
+number of co-resident requests ``B_active`` because the weight read is
+amortized across the batch: exactly the continuous-batching win the
+roofline model predicts.  Each request accumulates ``W`` and ``Q`` over
+its lifetime; at completion the ledger folds into
+:class:`repro.core.roofline.model.RooflineTerms`, giving the request its
+arithmetic intensity, its bound class (memory- vs compute-bound), and the
+attainable-performance ceiling its tokens/s can be compared against.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+import functools
+from typing import Deque, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.roofline.hardware import ChipSpec, TPU_V5E, chip_scope
+from repro.core.roofline.model import RooflineTerms, make_terms
+from repro.models.common import ModelConfig, model_flops, param_counts
+
+from .kv_cache import PagedKVCache
+
+
+# --------------------------------------------------------------------------
+# Analytic per-token decode cost model
+# --------------------------------------------------------------------------
+
+def _dtype_bytes(dtype: str) -> int:
+    import jax.numpy as jnp
+    return jnp.dtype(dtype).itemsize
+
+
+@functools.lru_cache(maxsize=None)
+def kv_line_bytes(cfg: ModelConfig) -> int:
+    """Bytes of growing cache per token summed over all layers: the KV line
+    read once per context token per decode step."""
+    isize = _dtype_bytes(cfg.dtype)
+    total = 0
+    for unit, reps in cfg.segments():
+        for b in unit:
+            if b.mixer == "attn":
+                total += 2 * cfg.n_kv_heads * cfg.hd * isize * reps
+            elif b.mixer == "mla":
+                total += (cfg.kv_lora_rank + cfg.rope_head_dim) * isize * reps
+    return total
+
+
+@functools.lru_cache(maxsize=None)
+def state_bytes(cfg: ModelConfig) -> int:
+    """Bytes of O(1) recurrent state summed over all layers (mamba h/conv,
+    mLSTM C/n/m, sLSTM c/n/h/m) — read and written once per decode step."""
+    isize = _dtype_bytes(cfg.dtype)
+    di = cfg.d_inner
+    total = 0
+    for unit, reps in cfg.segments():
+        for b in unit:
+            if b.mixer == "mamba":
+                total += (di * cfg.mamba_d_state * 4
+                          + (cfg.mamba_conv_width - 1) * di * isize) * reps
+            elif b.mixer == "mlstm":
+                d2 = 2 * cfg.d_model
+                hd = d2 // cfg.n_heads
+                total += (cfg.n_heads * (hd * hd + hd + 1) * 4
+                          + (cfg.mamba_conv_width - 1) * d2 * isize) * reps
+            elif b.mixer == "slstm":
+                total += 4 * cfg.d_model * 4 * reps
+    return total
+
+
+@functools.lru_cache(maxsize=None)
+def params_bytes_active(cfg: ModelConfig) -> float:
+    """Weight bytes touched per decode step: active params only (a routed
+    MoE step reads top-k expert weights, not the full expert bank)."""
+    return param_counts(cfg)["active"] * _dtype_bytes(cfg.dtype)
+
+
+def decode_token_flops(cfg: ModelConfig, context_len: int) -> float:
+    """W for one generated token at context length ``context_len``."""
+    return model_flops(cfg, context_len, 1, "decode")
+
+
+def decode_token_bytes(cfg: ModelConfig, context_len: int,
+                       active_batch: int) -> float:
+    """Q for one generated token: amortized weight read + this request's
+    KV line reads/writes + recurrent state traffic."""
+    weights = params_bytes_active(cfg) / max(active_batch, 1)
+    kv = (context_len + 1) * kv_line_bytes(cfg)          # read ctx + write 1
+    return weights + kv + 2 * state_bytes(cfg)
+
+
+# --------------------------------------------------------------------------
+# Requests + ledger
+# --------------------------------------------------------------------------
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class RooflineLedger:
+    """Per-request W/Q accounting, folded into RooflineTerms at completion."""
+    prefill_flops: float = 0.0
+    decode_flops: float = 0.0
+    decode_bytes: float = 0.0
+    decode_tokens: int = 0
+    decode_batch_sum: int = 0        # sum of co-resident batch sizes
+
+    def add_decode_token(self, cfg: ModelConfig, context_len: int,
+                         active_batch: int) -> None:
+        self.decode_flops += decode_token_flops(cfg, context_len)
+        self.decode_bytes += decode_token_bytes(cfg, context_len,
+                                                active_batch)
+        self.decode_tokens += 1
+        self.decode_batch_sum += active_batch
+
+    @property
+    def mean_batch(self) -> float:
+        return self.decode_batch_sum / max(self.decode_tokens, 1)
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.decode_flops / max(self.decode_bytes, 1.0)
+
+    def terms(self, cfg: ModelConfig, chip: ChipSpec = TPU_V5E
+              ) -> RooflineTerms:
+        """RooflineTerms for this request's decode stream on one chip."""
+        return make_terms(
+            scope=chip_scope(chip),
+            dtype=cfg.dtype,
+            flops_dev=self.decode_flops,
+            hbm_bytes_dev=self.decode_bytes,
+            ici_wire_bytes_dev=0.0,
+            dcn_wire_bytes_dev=0.0,
+            model_flops_total=self.decode_flops,
+        )
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                       # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    stop_token: Optional[int] = None
+    rng: Optional[jax.Array] = None
+    request_id: int = 0
+
+    state: RequestState = RequestState.WAITING
+    slot: int = -1
+    prefill_pos: int = 0                     # prompt tokens already prefilled
+    generated: List[int] = dataclasses.field(default_factory=list)
+    finish_reason: str = ""
+    ledger: RooflineLedger = dataclasses.field(default_factory=RooflineLedger)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def context_len(self) -> int:
+        return self.prompt_len + len(self.generated)
+
+    @property
+    def budget(self) -> int:
+        return self.prompt_len + self.max_new_tokens
+
+    @property
+    def tokens(self) -> np.ndarray:
+        return np.concatenate(
+            [self.prompt, np.asarray(self.generated, np.int32)])
+
+
+class Scheduler:
+    """Admission + queue bookkeeping over a :class:`PagedKVCache`."""
+
+    def __init__(self, cfg: ModelConfig, kv: PagedKVCache,
+                 prefill_chunk: int = 0):
+        self.cfg = cfg
+        self.kv = kv
+        self.prefill_chunk = prefill_chunk
+        self.waiting: Deque[Request] = collections.deque()
+        self.active: Dict[int, Request] = {}          # slot -> request
+        self.finished: List[Request] = []
+        self._next_id = 0
+
+    def submit(self, req: Request) -> Request:
+        req.request_id = self._next_id
+        self._next_id += 1
+        req.state = RequestState.WAITING
+        self.waiting.append(req)
+        return req
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.active)
+
+    # -- phases ------------------------------------------------------------
+
+    def admit(self) -> List[Request]:
+        """FIFO admission while a slot + the full page budget are free."""
+        admitted = []
+        while self.waiting and self.kv.can_admit(self.waiting[0].budget):
+            req = self.waiting.popleft()
+            slot = self.kv.alloc(req.budget)
+            assert slot is not None
+            req.slot = slot
+            req.state = RequestState.PREFILL
+            req.prefill_pos = 0
+            self.active[slot] = req
+            admitted.append(req)
+        return admitted
+
+    def prefill_work(self) -> List[Tuple[Request, int, int]]:
+        """(request, start, end) chunks to prefill this step — one chunk
+        per prefilling request."""
+        out = []
+        for req in self.active.values():
+            if req.state is not RequestState.PREFILL:
+                continue
+            start = req.prefill_pos
+            end = req.prompt_len if self.prefill_chunk <= 0 else min(
+                req.prompt_len, start + self.prefill_chunk)
+            out.append((req, start, end))
+        return out
+
+    def decode_requests(self) -> List[Request]:
+        return [r for r in self.active.values()
+                if r.state is RequestState.RUNNING]
+
+    def finish(self, req: Request, reason: str) -> None:
+        req.state = RequestState.FINISHED
+        req.finish_reason = reason
+        self.kv.free(req.slot)
+        del self.active[req.slot]
+        req.slot = -1
+        self.finished.append(req)

@@ -1,0 +1,134 @@
+"""Paged KV cache: write/read round-trips equal the dense cache, and the
+slot/page allocator keeps its invariants (reserved trash page, reuse,
+exhaustion)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke
+from repro.models import decode_step, decode_step_paged, init_cache, \
+    init_params, prefill
+from repro.serve import PagedKVCache, supports_paging
+from repro.serve.engine import _place_prefill_states
+
+
+def _leaves(tree):
+    return jax.tree.leaves(tree)
+
+
+def _prefilled(arch, S=6, seed=0):
+    cfg = smoke(get_config(arch))
+    params = init_params(cfg, jax.random.key(seed))
+    prompt = jax.random.randint(jax.random.key(1), (1, S), 0, cfg.vocab_size)
+    last_logits, states = prefill(params, cfg, prompt)
+    return cfg, params, prompt, last_logits, states
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "deepseek-v2-236b",
+                                  "xlstm-350m", "jamba-v0.1-52b"])
+def test_prefill_roundtrip_matches_dense(arch):
+    """Scattering collected prefill states into pages and gathering them
+    back equals the dense cache for attention (k/v), MLA (latent), and
+    recurrent (ssm/xlstm) layer states."""
+    S = 6
+    cfg, params, prompt, _, states = _prefilled(arch, S)
+    max_len = 8
+    dense = _place_prefill_states(cfg, init_cache(cfg, 1, max_len), states, S)
+
+    kv = PagedKVCache(cfg, num_slots=3, page_size=4, max_len=max_len)
+    slot = kv.alloc(max_len)
+    kv.write_prefill_states(slot, states, S)
+    view = kv.dense_view(slot)
+
+    for seg_d, seg_v, seg_p in zip(dense, view, kv._paged):
+        for d, v, paged in zip(_leaves(seg_d), _leaves(seg_v),
+                               _leaves(seg_p)):
+            assert v.shape == d.shape, (v.shape, d.shape)
+            if paged:
+                # only the S written positions are meaningful
+                np.testing.assert_array_equal(np.asarray(v[:, :, :S]),
+                                              np.asarray(d[:, :, :S]))
+            else:
+                np.testing.assert_array_equal(np.asarray(v), np.asarray(d))
+
+
+def test_decode_write_roundtrip_matches_dense():
+    """One paged decode step writes the new token's KV line into the right
+    page/offset: gathered cache equals the dense decode_step cache."""
+    S, max_len = 6, 8
+    cfg, params, prompt, last_logits, states = _prefilled("qwen3-0.6b", S)
+    tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+
+    dense = _place_prefill_states(cfg, init_cache(cfg, 1, max_len), states, S)
+    logits_d, dense = decode_step(params, cfg, dense, tok[:, None],
+                                  jnp.int32(S))
+
+    kv = PagedKVCache(cfg, num_slots=2, page_size=4, max_len=max_len)
+    slot = kv.alloc(max_len)
+    kv.write_prefill_states(slot, states, S)
+    ns = kv.num_slots
+    token = np.zeros((ns, 1), np.int32)
+    token[slot] = int(tok[0])
+    pos = np.zeros((ns,), np.int32)
+    pos[slot] = S
+    active = np.zeros((ns,), bool)
+    active[slot] = True
+    logits_p, kv.pools = decode_step_paged(
+        params, cfg, kv.pools, kv.block_tables_for([slot]),
+        jnp.asarray(token), jnp.asarray(pos), jnp.asarray(active),
+        page_size=kv.page_size)
+    np.testing.assert_allclose(np.asarray(logits_p[slot]),
+                               np.asarray(logits_d[0]), rtol=1e-5,
+                               atol=1e-5)
+    view = kv.dense_view(slot)
+    for seg_v, seg_d in zip(view, dense):
+        for v, d in zip(_leaves(seg_v), _leaves(seg_d)):
+            if v.ndim >= 3 and v.shape[2] == max_len:        # seq-carrying
+                np.testing.assert_allclose(np.asarray(v[:, :, : S + 1]),
+                                           np.asarray(d[:, :, : S + 1]),
+                                           rtol=1e-6, atol=1e-6)
+
+
+def test_allocator_invariants():
+    cfg = smoke(get_config("qwen3-0.6b"))
+    kv = PagedKVCache(cfg, num_slots=2, page_size=4, max_len=16)
+    assert kv.blocks_per_slot == 4
+    assert kv.num_pages == 1 + 2 * 4          # fully backed + trash page
+
+    a = kv.alloc(16)
+    b = kv.alloc(9)                            # 3 pages
+    assert a is not None and b is not None and a != b
+    assert 0 not in kv.block_tables[a], "physical page 0 is reserved"
+    used = set(kv.block_tables[a]) | set(kv.block_tables[b][:3])
+    assert len(used) == 7, "pages must not be shared between slots"
+    assert kv.alloc(4) is None, "slots exhausted"
+    assert not kv.can_admit(4)
+
+    kv.free(a)
+    assert np.all(kv.block_tables[a] == 0)
+    assert kv.can_admit(16)
+    c = kv.alloc(16)
+    assert c == a, "freed slot is reused"
+    with pytest.raises(ValueError):
+        kv.alloc(17)                           # > max_len
+
+
+def test_block_tables_for_masks_inactive_slots():
+    cfg = smoke(get_config("qwen3-0.6b"))
+    kv = PagedKVCache(cfg, num_slots=3, page_size=4, max_len=8)
+    s0, s1 = kv.alloc(8), kv.alloc(8)
+    bt = np.asarray(kv.block_tables_for([s0]))
+    assert np.all(bt[s1] == 0), "non-listed slots point at the trash page"
+    assert np.all(bt[s0] == kv.block_tables[s0])
+
+
+def test_supports_paging_flags():
+    assert supports_paging(smoke(get_config("qwen3-0.6b")))
+    assert supports_paging(smoke(get_config("deepseek-v2-236b")))
+    assert supports_paging(smoke(get_config("xlstm-350m")))
+    assert not supports_paging(smoke(get_config("whisper-small")))
+    assert not supports_paging(smoke(get_config("llama-3.2-vision-90b")))
+    with pytest.raises(NotImplementedError):
+        PagedKVCache(smoke(get_config("whisper-small")), 2, 4, 8)

@@ -1,0 +1,112 @@
+"""Golden-value tests for the three-term roofline math (model.py edge
+cases): dominant-term ties, zero-DCN scopes, useful_ratio > 1, and the
+bound_class strings."""
+
+import pytest
+
+from repro.core.roofline.hardware import ChipSpec, ScopeSpec
+from repro.core.roofline.model import RooflineTerms, make_terms
+
+# a chip with round numbers so every derived value is exact
+CHIP = ChipSpec(
+    name="toy",
+    peak_flops=100.0,
+    peak_flops_by_dtype={"bfloat16": 100.0, "float32": 50.0},
+    hbm_bw=10.0,
+    hbm_bytes=1 << 30,
+    ici_bw=5.0,
+    ici_links=1,
+    dcn_bw=2.0,
+    vmem_bytes=1 << 20,
+)
+
+
+def terms(scope_chips=1, interconnect="none", **kw):
+    base = dict(flops_dev=50.0, hbm_bytes_dev=10.0, ici_wire_bytes_dev=0.0,
+                dcn_wire_bytes_dev=0.0, dtype="bfloat16")
+    base.update(kw)
+    return make_terms(scope=ScopeSpec("toy", CHIP, scope_chips,
+                                      interconnect), **base)
+
+
+def test_golden_time_terms():
+    t = terms()
+    assert t.compute_s == pytest.approx(0.5)        # 50 / 100
+    assert t.memory_s == pytest.approx(1.0)         # 10 / 10
+    assert t.ici_s == 0.0 and t.dcn_s == 0.0
+    assert t.t_lower == pytest.approx(1.0)          # max of terms
+    assert t.t_upper == pytest.approx(1.5)          # sum of terms
+    assert t.arithmetic_intensity == pytest.approx(5.0)       # 50 / 10
+    assert t.ridge_intensity == pytest.approx(10.0)           # 100 / 10
+    # left of the ridge: P = I * beta = 50 < pi
+    assert t.attainable_flops == pytest.approx(50.0)
+    assert t.bound_class() == "memory-bound"
+    assert t.hardware_fraction == pytest.approx(0.5)
+
+
+def test_dominant_term_tie_prefers_compute():
+    """compute_s == memory_s: the tie breaks to 'compute' (dict order),
+    i.e. a balanced kernel sitting exactly on the ridge reports
+    compute-bound — the optimistic reading of P = min(pi, I*beta)."""
+    t = terms(flops_dev=100.0, hbm_bytes_dev=10.0)
+    assert t.compute_s == pytest.approx(t.memory_s) == pytest.approx(1.0)
+    assert t.dominant == "compute"
+    assert t.bound_class() == "compute-bound"
+    assert t.arithmetic_intensity == pytest.approx(t.ridge_intensity)
+    assert t.attainable_flops == pytest.approx(100.0)
+
+
+def test_zero_dcn_scope():
+    """dcn_wire_bytes == 0 must give dcn_s == 0.0 exactly (single-pod
+    scopes never pay DCN, whatever the chip's dcn_bw says)."""
+    t = terms(ici_wire_bytes_dev=100.0, dcn_wire_bytes_dev=0.0)
+    assert t.dcn_s == 0.0
+    assert t.ici_s == pytest.approx(20.0)           # 100 / 5
+    assert t.collective_s == pytest.approx(20.0)
+    assert t.bound_class() == "collective-bound(ici)"
+
+
+def test_dcn_bound_class():
+    t = terms(dcn_wire_bytes_dev=100.0)
+    assert t.dcn_s == pytest.approx(50.0)           # 100 / 2
+    assert t.bound_class() == "collective-bound(dcn)"
+    assert t.t_upper == pytest.approx(0.5 + 1.0 + 50.0)
+
+
+def test_useful_ratio_above_one():
+    """HLO can do *less* work than the analytic 6ND convention (MoE
+    active-only counting, cost_analysis folding): useful_ratio > 1 and the
+    roofline fraction scales with it."""
+    t = terms(flops_dev=50.0, model_flops_total=80.0)
+    assert t.model_flops_dev == pytest.approx(80.0)
+    assert t.useful_ratio == pytest.approx(1.6)
+    # useful_s = 80/100 = 0.8; t_lower = memory_s = 1.0
+    assert t.roofline_fraction == pytest.approx(0.8)
+
+
+def test_useful_ratio_none_without_model_flops():
+    t = terms()
+    assert t.useful_ratio is None
+    assert t.roofline_fraction is None
+    assert t.model_flops_dev is None
+
+
+def test_multichip_scope_divides_model_flops():
+    t = terms(scope_chips=4, interconnect="ici", model_flops_total=200.0)
+    assert t.n_chips == 4
+    assert t.model_flops_dev == pytest.approx(50.0)
+    assert t.useful_ratio == pytest.approx(1.0)
+
+
+def test_dtype_selects_peak():
+    t = terms(dtype="float32")
+    assert t.compute_s == pytest.approx(1.0)        # 50 / 50
+    assert t.ridge_intensity == pytest.approx(5.0)  # 50 / 10
+
+
+def test_zero_flops_zero_bytes_edge():
+    """Empty scopes must not divide by zero: AI guards with max(Q, 1)."""
+    t = terms(flops_dev=0.0, hbm_bytes_dev=0.0)
+    assert t.arithmetic_intensity == 0.0
+    assert t.useful_ratio is None                   # flops_dev == 0 guard
+    assert t.t_lower == 0.0

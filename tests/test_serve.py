@@ -12,8 +12,11 @@ import repro.models.transformer as tfm
 from repro.serve import Engine, GenerateConfig
 
 
-@pytest.mark.parametrize("arch", ["qwen3-0.6b", "xlstm-350m",
-                                  "deepseek-v2-236b"])
+@pytest.mark.parametrize("arch", [
+    "qwen3-0.6b",
+    pytest.param("xlstm-350m", marks=pytest.mark.slow),
+    "deepseek-v2-236b",
+])
 def test_greedy_generation_matches_full_forward(arch):
     """Each generated token must equal argmax of a from-scratch full
     forward over (prompt + generated prefix): prefill + cached decode is

@@ -38,6 +38,7 @@ def test_forward_loss_finite(arch):
     assert 2.0 < float(loss) < 12.0, (arch, float(loss))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_grad_finite_nonzero(arch):
     cfg = smoke(get_config(arch))
