@@ -16,7 +16,8 @@ the paged continuous-batching engine end to end and reports, per run:
 
     PYTHONPATH=src python -m benchmarks.bench_serve --arch qwen3-0.6b \
         --requests 8 --slots 4 --new-tokens 16
-    PYTHONPATH=src python -m benchmarks.run --only serve
+    PYTHONPATH=src python -m benchmarks.bench_serve --smoke   # CI-sized
+    PYTHONPATH=src python -m benchmarks.run --only serve --smoke
 """
 
 from __future__ import annotations
@@ -38,13 +39,14 @@ from .common import emit
 
 def run_bench(arch: str, *, requests: int, slots: int, page_size: int,
               prompt_len: int, new_tokens: int, prefill_chunk: int,
-              chip_name: str) -> dict:
+              chip_name: str, backend: str = None) -> dict:
     cfg = smoke(get_config(arch))
     params = init_params(cfg, jax.random.key(0))
     chip = TPU_V5E if chip_name == "tpu_v5e" else HOST_CPU_FALLBACK
     ecfg = EngineConfig(num_slots=slots, page_size=page_size,
                         max_len=prompt_len + new_tokens,
-                        prefill_chunk=prefill_chunk, chip=chip)
+                        prefill_chunk=prefill_chunk, chip=chip,
+                        kernel_backend=backend)
     engine = Engine(cfg, params, ecfg)
 
     rng = jax.random.key(1)
@@ -86,20 +88,34 @@ def run_bench(arch: str, *, requests: int, slots: int, page_size: int,
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(ALL_ARCHS), default="qwen3-0.6b")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--page-size", type=int, default=16)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--slots", type=int, default=None)
+    ap.add_argument("--page-size", type=int, default=None)
+    ap.add_argument("--prompt-len", type=int, default=None)
+    ap.add_argument("--new-tokens", type=int, default=None)
     ap.add_argument("--prefill-chunk", type=int, default=0)
     ap.add_argument("--chip", choices=["host", "tpu_v5e"], default="host")
+    ap.add_argument("--backend", choices=["auto", "pallas", "jnp"],
+                    default=None,
+                    help="paged-attention kernel backend (registry default"
+                         " when omitted)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized defaults: 4 requests, 2 slots, 8 new "
+                         "tokens (explicit flags still win)")
     args = ap.parse_args(argv)
+    sizes = (dict(requests=4, slots=2, page_size=4, prompt_len=8,
+                  new_tokens=8) if args.smoke else
+             dict(requests=8, slots=4, page_size=16, prompt_len=16,
+                  new_tokens=16))
+    for k, v in sizes.items():
+        if getattr(args, k) is None:
+            setattr(args, k, v)
     out = run_bench(args.arch, requests=args.requests, slots=args.slots,
                     page_size=args.page_size, prompt_len=args.prompt_len,
                     new_tokens=args.new_tokens,
                     prefill_chunk=args.prefill_chunk,
                     chip_name="tpu_v5e" if args.chip == "tpu_v5e"
-                    else "host")
+                    else "host", backend=args.backend)
     print(f"[bench_serve] {out['requests']} requests "
           f"{out['tokens_per_s']:.1f} tok/s "
           f"(memory-bound ceiling {out['ceiling_tokens_per_s']:.0f} tok/s, "

@@ -1,8 +1,11 @@
 """Benchmark harness entry: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--smoke]
 
 Prints ``name,us_per_call,derived`` CSV rows (and ASCII roofline plots).
+``--smoke`` shrinks benches that support it (currently ``serve``) to
+CI-sized runs — the GitHub Actions workflow drives
+``--only serve --smoke`` on every push.
 """
 
 from __future__ import annotations
@@ -24,13 +27,18 @@ ALL = {
     "gelu": bench_gelu.main,                   # paper fig. 8 + §3.4
     "layernorm": bench_layernorm.main,         # paper appendix
     "arch_roofline": bench_arch_roofline.main,  # 40-cell §Roofline table
-    "serve": lambda: bench_serve.main([]),     # continuous-batching decode
+    "serve": lambda smoke=False: bench_serve.main(
+        ["--smoke"] if smoke else []),         # continuous-batching decode
 }
+
+_SMOKEABLE = ("serve",)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=sorted(ALL), default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized runs for benches that support it")
     args = ap.parse_args()
     failed = []
     names = [args.only] if args.only else list(ALL)
@@ -38,7 +46,10 @@ def main() -> None:
     for name in names:
         print(f"\n===== bench: {name} =====", flush=True)
         try:
-            ALL[name]()
+            if args.smoke and name in _SMOKEABLE:
+                ALL[name](smoke=True)
+            else:
+                ALL[name]()
         except Exception:
             failed.append(name)
             traceback.print_exc()

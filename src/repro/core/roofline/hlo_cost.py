@@ -193,6 +193,7 @@ def parse_module(text: str) -> Tuple[Dict[str, HloComputation], Optional[str]]:
 # jax.named_scope(tag); the op_name metadata then carries the tag.
 TRACKED_SCOPES = (
     "fused_attention",
+    "paged_attention",
     "moe_dispatch",
     "moe_experts",
     "mamba_scan",
@@ -358,7 +359,11 @@ def _fusion_io_bytes(op: HloOp, comp: HloComputation,
                 param_of_idx[int(m.group(1))] = cop.name
         for o in cop.operands:
             consumers.setdefault(o, set()).add(cop.opcode)
-            if cop.opcode == "dynamic-slice" and o in called.symbols:
+        # only the *sliced/gathered* operand (index 0) is read through the
+        # slice; the remaining operands are start-index scalars / indices
+        if cop.opcode in ("dynamic-slice", "gather") and cop.operands:
+            o = cop.operands[0]
+            if o in called.symbols:
                 _, b = _shape_elems_bytes(cop.shape)
                 slice_bytes[o] = slice_bytes.get(o, 0.0) + b
 
@@ -374,11 +379,17 @@ def _fusion_io_bytes(op: HloOp, comp: HloComputation,
         _, full = _shape_elems_bytes(comp.symbols.get(oname, ""))
         pname = param_of_idx.get(i)
         use = consumers.get(pname, set()) if pname else set()
-        if pname and use and use <= {"dynamic-slice"}:
+        if (pname and "dynamic-update-slice" in use
+                and use <= {"dynamic-slice", "dynamic-update-slice"}
+                and full >= result_bytes * 0.99):
+            # in-place update target (scatter-style read-modify-write
+            # fusions slice the old line out, select, and update it back):
+            # traffic = touched lines, not the whole aliased buffer
+            aliased = True
+            total += slice_bytes.get(pname, 0.0)
+        elif pname and use and use <= {"dynamic-slice", "gather"}:
+            # only the sliced/gathered rows are read, not the whole table
             total += slice_bytes.get(pname, full)
-        elif (pname and use and use <= {"dynamic-update-slice"}
-              and full >= result_bytes * 0.99):
-            aliased = True          # in-place target: read cost ~ 0
         else:
             total += full
     if aliased:
@@ -391,6 +402,21 @@ def _fusion_io_bytes(op: HloOp, comp: HloComputation,
 def _is_pure_convert_fusion(comp: HloComputation) -> bool:
     ops = {o.opcode for o in comp.ops}
     return bool(ops) and ops <= _PURE_MOVEMENT_OPS and "convert" in ops
+
+
+_VIEW_OPS = _PURE_MOVEMENT_OPS | {"dynamic-update-slice"}
+
+
+def _is_view_fusion(comp: HloComputation) -> bool:
+    """Scan-carry plumbing: a fusion of nothing but slices / bitcasts /
+    dynamic-(update-)slices — the CPU backend materializes these as copies,
+    but on the TPU target the scan carry is donated/aliased and they are
+    views (the real traffic is charged at the compute fusions that produce
+    and consume the data).  Gated by TPU_NATIVE_DTYPES like the convert
+    fusions — same class of host-backend counter distortion."""
+    ops = {o.opcode for o in comp.ops}
+    return (bool(ops) and ops <= _VIEW_OPS
+            and ("dynamic-slice" in ops or "dynamic-update-slice" in ops))
 
 
 def _reduce_flops(op: HloOp, comp: HloComputation,
@@ -445,10 +471,24 @@ def _computation_cost(comp: HloComputation,
     if comp.name in memo:
         return memo[comp.name]
     cost = ModuleCost()
+    producers = {o.name: o for o in comp.ops}
     for op in comp.ops:
         opcode = op.opcode
         if opcode in _SKIP_BYTES_OPS:
             continue
+        if TPU_NATIVE_DTYPES and opcode in ("broadcast", "copy"):
+            # zero/constant-fill of loop-carried output buffers (broadcast
+            # of a scalar, and the defensive copy XLA:CPU makes of it
+            # before a while init).  The TPU backend aliases these away;
+            # charging them distorts Q exactly like the prefetcher
+            # distorted the paper's DRAM counters.
+            src = op
+            if opcode == "copy" and op.operands:
+                src = producers.get(op.operands[0], op)
+            if src.opcode == "broadcast" and all(
+                    not _shape_dims(comp.symbols.get(o, "x[2]"))
+                    for o in src.operands):
+                continue
         _, result_bytes = _shape_elems_bytes(op.shape)
         operand_bytes = sum(
             _shape_elems_bytes(comp.symbols.get(o, ""))[1]
@@ -490,6 +530,14 @@ def _computation_cost(comp: HloComputation,
         # ordinary top-level op: fusion-boundary bytes
         op_bytes = result_bytes + operand_bytes
         op_flops = 0.0
+        if opcode == "gather":
+            # a gather reads the gathered rows plus indices, not the whole
+            # operand table (paper §2.4 again: the convenient counter
+            # charges the embedding table per token lookup)
+            idx_bytes = sum(
+                _shape_elems_bytes(comp.symbols.get(o, ""))[1]
+                for o in op.operands[1:])
+            op_bytes = 2.0 * result_bytes + idx_bytes
         if opcode == "dynamic-update-slice":
             # in-place update: traffic = the touched slice (r+w), not the
             # whole aliased buffer (XLA aliases operand 0 with the result)
@@ -501,9 +549,11 @@ def _computation_cost(comp: HloComputation,
         elif opcode == "fusion":
             if (TPU_NATIVE_DTYPES
                     and all(_is_pure_convert_fusion(comps[t])
+                            or _is_view_fusion(comps[t])
                             for t in _called(op) if t in comps)
                     and _called(op)):
-                # CPU-backend dtype materialization — absent on TPU target
+                # CPU-backend dtype / scan-carry materialization — absent
+                # on the TPU target (native bf16, donated-aliased carries)
                 cost.tally_scope(op.attrs, 0.0, 0.0)
                 continue
             op_bytes = _fusion_io_bytes(op, comp, comps)

@@ -1,13 +1,30 @@
-"""Public jit'd wrappers for the Pallas kernel library.
+"""Public jit'd wrappers for the Pallas kernel library + kernel registry.
 
 ``interpret`` defaults to True off-TPU so every kernel validates on this
 CPU container; on a TPU backend the same calls compile to Mosaic.
+
+Kernel registry / dispatch
+--------------------------
+Ops with both a Pallas kernel and a jnp reference register under a name in
+``_REGISTRY``; callers dispatch through :func:`resolve` (or the public
+per-op wrappers below) with a ``backend`` of:
+
+* ``"pallas"`` — the Pallas kernel (interpret mode off-TPU, Mosaic on TPU)
+* ``"jnp"``    — the pure-jnp reference (the byte-checked oracle)
+* ``"auto"``   — pallas everywhere (interpret off-TPU); the default
+
+``None`` falls back to the process-wide default set by
+:func:`set_default_backend` / :func:`use_backend`.  Backend resolution
+happens at *trace time*: code that jits a caller (e.g. the serve engine's
+decode step) must rebuild/retrace to pick up a backend change — the serve
+engine does this on ``reset()``.
 """
 
 from __future__ import annotations
 
+import contextlib
 import functools
-from typing import Optional
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,11 +36,113 @@ from . import flash_attention as _flash
 from . import gelu as _gelu
 from . import inner_product as _ip
 from . import layernorm as _ln
+from . import paged_attention as _paged
 from . import ref
 
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# --------------------------------------------------------------------------
+# Kernel registry
+# --------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+_BACKENDS = ("auto", "pallas", "jnp")
+_default_backend = "auto"
+
+
+def register_kernel(name: str, *, pallas: Callable, reference: Callable
+                    ) -> None:
+    """Register a (pallas, jnp-reference) implementation pair.
+
+    The pallas callable must accept ``interpret: bool``; the reference is
+    pure jnp with the same positional/keyword contract minus ``interpret``.
+    """
+    _REGISTRY[name] = {"pallas": pallas, "jnp": reference}
+
+
+def registered_kernels() -> Dict[str, Dict[str, Callable]]:
+    return dict(_REGISTRY)
+
+
+def set_default_backend(backend: str) -> None:
+    """Process-wide default for ``backend=None`` dispatches."""
+    global _default_backend
+    if backend not in _BACKENDS:
+        raise ValueError(f"backend {backend!r} not in {_BACKENDS}")
+    _default_backend = backend
+
+
+def default_backend() -> str:
+    return _default_backend
+
+
+@contextlib.contextmanager
+def use_backend(backend: str):
+    """Scoped default-backend override (trace-time; see module docstring)."""
+    prev = _default_backend
+    set_default_backend(backend)
+    try:
+        yield
+    finally:
+        set_default_backend(prev)
+
+
+def resolve(name: str, backend: Optional[str] = None) -> Callable:
+    """Resolve a registered op to a concrete callable for this process."""
+    backend = backend or _default_backend
+    if backend not in _BACKENDS:
+        raise ValueError(f"backend {backend!r} not in {_BACKENDS}")
+    impls = _REGISTRY[name]
+    if backend == "jnp":
+        return impls["jnp"]
+    return functools.partial(impls["pallas"], interpret=_interpret_default())
+
+
+register_kernel("paged_attention",
+                pallas=_paged.paged_attention,
+                reference=_paged.paged_attention_reference)
+register_kernel("mla_paged_attention",
+                pallas=_paged.mla_paged_attention,
+                reference=_paged.mla_paged_attention_reference)
+def _flash_model_layout(q, k, v, *, causal: bool = True,
+                        interpret: bool = False):
+    """flash kernel in model layout — q (B,Sq,H,hd), k/v (B,Sk,KV,hd)."""
+    o = _flash.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)
+
+
+register_kernel("flash_attention",
+                pallas=_flash_model_layout,
+                reference=ref.mha)
+
+
+def paged_attention(q, k_pool, v_pool, block_tables, pos, *, scale,
+                    soft_cap: float = 0.0, backend: Optional[str] = None):
+    """Dispatching GQA paged-decode attention (see kernels/paged_attention).
+
+    q (B, KV, G, hd); pools (P, page, KV, hd); block_tables (B, n_blocks);
+    pos (B,).  Returns (B, KV, G, hd).
+    """
+    impl = resolve("paged_attention", backend)
+    return impl(q, k_pool, v_pool, block_tables, pos, scale=scale,
+                soft_cap=soft_cap)
+
+
+def mla_paged_attention(q_lat, q_rope, c_pool, r_pool, block_tables, pos, *,
+                        scale, backend: Optional[str] = None):
+    """Dispatching MLA paged-decode attention over the compressed cache.
+
+    q_lat (B, H, r); q_rope (B, H, dr); pools (P, page, r) / (P, page, dr);
+    block_tables (B, n_blocks); pos (B,).  Returns o_lat (B, H, r).
+    """
+    impl = resolve("mla_paged_attention", backend)
+    return impl(q_lat, q_rope, c_pool, r_pool, block_tables, pos,
+                scale=scale)
 
 
 @functools.partial(jax.jit, static_argnames=("fuse",))

@@ -1,0 +1,270 @@
+"""Paged-attention decode — Pallas TPU kernels + jnp references.
+
+The serving hot loop: one query token per decode slot attends to that
+slot's whole KV history, which lives in *physical pages* shared across
+slots (see serve/kv_cache.py).  The jnp reference materializes the
+gathered (B, S, KV, hd) K/V to HBM before attending — per the roofline
+model that doubles the dominant Q term of the most memory-bound workload
+we serve.  The Pallas kernels stream each page HBM->VMEM exactly once and
+keep scores/softmax state in VMEM, so HBM traffic collapses to
+
+    Q_kernel ~= (context_len + 1) * kv_line_bytes  +  q/o vectors
+
+— the ledger's analytic model (scheduler.decode_token_bytes), which is why
+the per-request ledger and the HLO cross-check can agree on W/Q for the
+decode step (the ``paged_attention`` named scope marks the region;
+core/roofline/hlo_cost.TRACKED_SCOPES prices it, substitute.py swaps the
+reference's gather traffic for the kernel's).
+
+Kernel layout (GQA):
+  grid (num_slots, kv_heads, n_blocks); per grid step one (page, hd) K
+  slab and V slab of the mapped KV head are resident in VMEM.  The block
+  table and per-slot positions ride in as *scalar prefetch* so the page
+  -> HBM address mapping is known before the body runs — Pallas
+  double-buffers the page fetches across the innermost grid dim, i.e. the
+  kernel "walks the block table" with the DMA engine.  Online softmax
+  carries (m, l, acc) in VMEM scratch across the block walk; the output
+  block is written on the last block.
+
+MLA variant: attention runs entirely in the compressed latent space
+(absorbed form, DeepSeek-V2 §5): scores = q_lat @ c_kv^T + q_rope @
+k_rope^T over (page, kv_lora + rope_hd) slabs, acc accumulates w @ c_kv.
+The cache line is ~57x smaller than the equivalent GQA line, so decode
+intensity I = W/Q rises by the same factor — the paper's eq. 1 lever.
+
+VMEM budget (per grid step, fp32 accounting): GQA holds 2 * page_size *
+hd K/V slabs + (G, hd) q/acc + 2 * (G, 1) carries; MLA holds page_size *
+(r + rope_hd) slabs + (H, r + rope_hd) queries + (H, r) acc.  With
+page_size 16-128, hd/r <= 576 this is well under 1 MiB — far below the
+~16 MiB/core limit, leaving the pipeline free to prefetch ahead.
+
+Ragged contexts: slots own different numbers of live pages; dead block
+-table entries point at the reserved trash page (physical page 0) and the
+``k_pos <= pos`` mask zeroes their probability exactly.  Idle lanes
+(pos = 0, all-trash tables) compute a harmless garbage row the engine
+discards — same contract as the jnp reference.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# jnp references (the byte-checked oracles; extracted verbatim from the
+# pre-registry models/attention.py + models/mla.py inline gathers)
+# --------------------------------------------------------------------------
+
+def paged_attention_reference(
+    q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+    block_tables: jax.Array, pos: jax.Array, *,
+    scale: float, soft_cap: float = 0.0,
+) -> jax.Array:
+    """GQA paged decode, gather-and-attend.
+
+    q (B, KV, G, hd); k/v pools (P, page, KV, hd); block_tables
+    (B, n_blocks); pos (B,) last written position.  Returns (B, KV, G, hd).
+    """
+    B = q.shape[0]
+    KV, hd = k_pool.shape[2], k_pool.shape[3]
+    page_size = k_pool.shape[1]
+    S = block_tables.shape[1] * page_size
+    posb = pos.astype(jnp.int32)[:, None]                       # (B, 1)
+    k = k_pool[block_tables].reshape(B, S, KV, hd)              # gather pages
+    v = v_pool[block_tables].reshape(B, S, KV, hd)
+    qb = q[:, None]                                             # (B,1,KV,G,hd)
+    k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qb, k).astype(jnp.float32) * scale
+    if soft_cap > 0:
+        s = jnp.tanh(s / soft_cap) * soft_cap
+    m = posb[:, :, None] >= k_pos[:, None, :]                   # (B, 1, S)
+    s = jnp.where(m[:, None, None, :, :], s, NEG_INF)
+    p_attn = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p_attn, v)
+    return o[:, 0]
+
+
+def mla_paged_attention_reference(
+    q_lat: jax.Array, q_rope: jax.Array, c_pool: jax.Array,
+    r_pool: jax.Array, block_tables: jax.Array, pos: jax.Array, *,
+    scale: float,
+) -> jax.Array:
+    """MLA paged decode in the compressed latent space (absorbed form).
+
+    q_lat (B, H, r) — q_nope already folded through wk_b; q_rope (B, H, dr);
+    c/r pools (P, page, r) / (P, page, dr); pos (B,).  Returns o_lat
+    (B, H, r) — the caller folds wv_b/wo back out.
+    """
+    B = q_lat.shape[0]
+    page_size = c_pool.shape[1]
+    S = block_tables.shape[1] * page_size
+    c_kv = c_pool[block_tables].reshape(B, S, -1)
+    k_rope = r_pool[block_tables].reshape(B, S, -1)
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat, c_kv)
+         + jnp.einsum("bhk,bsk->bhs", q_rope, k_rope))
+    s = s.astype(jnp.float32) * scale
+    valid = jnp.arange(S, dtype=jnp.int32)[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(c_kv.dtype)
+    return jnp.einsum("bhs,bsr->bhr", w, c_kv)
+
+
+# --------------------------------------------------------------------------
+# Pallas kernels
+# --------------------------------------------------------------------------
+
+def _paged_decode_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, page_size: int,
+                         scale: float, soft_cap: float):
+    """One (slot, kv_head, block) grid step of the GQA decode walk."""
+    b, j = pl.program_id(0), pl.program_id(2)
+    n_blocks = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                     # (G, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)               # (page, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = (q @ k.T) * scale                                   # (G, page)
+    if soft_cap > 0:
+        s = jnp.tanh(s / soft_cap) * soft_cap
+    k_pos = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    s = jnp.where(k_pos <= pos_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention(
+    q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+    block_tables: jax.Array, pos: jax.Array, *,
+    scale: float, soft_cap: float = 0.0, interpret: bool = False,
+) -> jax.Array:
+    """Pallas GQA paged decode; same contract as the reference."""
+    B, KV, G, hd = q.shape
+    _, page_size, _, _ = k_pool.shape
+    n_blocks = block_tables.shape[1]
+    kernel = functools.partial(
+        _paged_decode_kernel, page_size=page_size, scale=scale,
+        soft_cap=soft_cap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                  # block tables + positions
+        grid=(B, KV, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, bt, ps: (b, h, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda b, h, j, bt, ps: (bt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda b, h, j, bt, ps: (bt[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, j, bt, ps: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, pos.astype(jnp.int32), q, k_pool, v_pool)
+
+
+def _mla_paged_decode_kernel(bt_ref, pos_ref, ql_ref, qr_ref, c_ref, r_ref,
+                             o_ref, m_ref, l_ref, acc_ref, *,
+                             page_size: int, scale: float):
+    """One (slot, block) grid step of the latent-space MLA decode walk."""
+    b, j = pl.program_id(0), pl.program_id(1)
+    n_blocks = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lat = ql_ref[0].astype(jnp.float32)                   # (H, r)
+    q_rope = qr_ref[0].astype(jnp.float32)                  # (H, dr)
+    c = c_ref[0].astype(jnp.float32)                        # (page, r)
+    kr = r_ref[0].astype(jnp.float32)                       # (page, dr)
+    s = (q_lat @ c.T + q_rope @ kr.T) * scale               # (H, page)
+    k_pos = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    s = jnp.where(k_pos <= pos_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + p @ c
+    m_ref[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def mla_paged_attention(
+    q_lat: jax.Array, q_rope: jax.Array, c_pool: jax.Array,
+    r_pool: jax.Array, block_tables: jax.Array, pos: jax.Array, *,
+    scale: float, interpret: bool = False,
+) -> jax.Array:
+    """Pallas MLA paged decode over the compressed cache."""
+    B, H, r = q_lat.shape
+    dr = q_rope.shape[-1]
+    page_size = c_pool.shape[1]
+    n_blocks = block_tables.shape[1]
+    kernel = functools.partial(
+        _mla_paged_decode_kernel, page_size=page_size, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, H, r), lambda b, j, bt, ps: (b, 0, 0)),
+            pl.BlockSpec((1, H, dr), lambda b, j, bt, ps: (b, 0, 0)),
+            pl.BlockSpec((1, page_size, r),
+                         lambda b, j, bt, ps: (bt[b, j], 0, 0)),
+            pl.BlockSpec((1, page_size, dr),
+                         lambda b, j, bt, ps: (bt[b, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, r), lambda b, j, bt, ps: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, r), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, r), q_lat.dtype),
+        interpret=interpret,
+    )(block_tables, pos.astype(jnp.int32), q_lat, q_rope, c_pool, r_pool)

@@ -32,11 +32,17 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k sampling filter (0 = off)")
     ap.add_argument("--slots", type=int, default=0,
                     help="decode slots (0 = one per request)")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=0)
     ap.add_argument("--chip", choices=["host", "tpu_v5e"], default="tpu_v5e")
+    ap.add_argument("--backend", choices=["auto", "pallas", "jnp"],
+                    default=None,
+                    help="paged-attention kernel backend (kernels/ops.py "
+                         "registry; default = registry 'auto')")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -48,13 +54,14 @@ def main():
     engine = Engine(cfg, params, EngineConfig(
         num_slots=slots, page_size=args.page_size,
         max_len=args.prompt_len + args.new_tokens,
-        prefill_chunk=args.prefill_chunk, chip=chip))
+        prefill_chunk=args.prefill_chunk, chip=chip,
+        kernel_backend=args.backend))
 
     prompts = jax.random.randint(jax.random.key(1),
                                  (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
     gen = GenerateConfig(max_new_tokens=args.new_tokens,
-                         temperature=args.temperature)
+                         temperature=args.temperature, top_k=args.top_k)
 
     if not supports_paging(cfg):
         kwargs = {}

@@ -15,6 +15,7 @@ from .model import (
     param_shardings,
     prefill,
     prefill_chunk_paged,
+    prefill_padded,
 )
 
 __all__ = [
@@ -22,5 +23,5 @@ __all__ = [
     "abstract_params", "cache_param_defs", "cross_entropy", "decode_step",
     "decode_step_paged", "init_cache", "init_params", "loss_fn",
     "model_param_defs", "paged_cache_defs", "param_bytes", "param_count",
-    "param_shardings", "prefill", "prefill_chunk_paged",
+    "param_shardings", "prefill", "prefill_chunk_paged", "prefill_padded",
 ]

@@ -22,6 +22,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kernel_ops
 from repro.parallel.sharding import ParamDef, constrain
 from .common import ModelConfig
 from .layers import apply_rope, rms_head_norm, rope_cos_sin
@@ -192,6 +193,7 @@ def paged_pool_defs(cfg: ModelConfig, num_pages: int, page_size: int
 def decode_attention_paged(
     p, x: jax.Array, pool: Dict[str, jax.Array], block_tables: jax.Array,
     pos: jax.Array, cfg: ModelConfig, *, page_size: int,
+    backend: Optional[str] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One-token decode for every slot against a paged pool.
 
@@ -199,6 +201,12 @@ def decode_attention_paged(
     logical block -> physical page; pos (B,) per-slot write position.
     Inactive slots must map to a reserved trash page (their writes collide
     harmlessly) and are masked out by the caller.
+
+    The attention core (page walk + online softmax) dispatches through the
+    kernel registry (kernels/ops.py ``paged_attention``): the Pallas decode
+    kernel on TPU / interpret mode, or the jnp gather reference; the
+    ``paged_attention`` named scope marks the region for the roofline
+    accounting either way (hlo_cost.TRACKED_SCOPES).
     """
     B, _, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -209,15 +217,12 @@ def decode_attention_paged(
     off = pos % page_size
     pool_k = pool["k"].at[blk, off].set(k_new[:, 0].astype(pool["k"].dtype))
     pool_v = pool["v"].at[blk, off].set(v_new[:, 0].astype(pool["v"].dtype))
-    S = block_tables.shape[1] * page_size
-    k = pool_k[block_tables].reshape(B, S, KV, hd)              # gather pages
-    v = pool_v[block_tables].reshape(B, S, KV, hd)
-    q = q.reshape(B, 1, KV, G, hd)
-    k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
-    o = _attn_core(q, k, v, posb, k_pos, causal=True,
-                   scale=1.0 / (hd ** 0.5),
-                   soft_cap=cfg.attn_logit_soft_cap).reshape(B, 1, H, hd)
-    out = jnp.einsum("bqhx,hxd->bqd", o, p["wo"])
+    with jax.named_scope("paged_attention"):
+        o = kernel_ops.paged_attention(
+            q.reshape(B, KV, G, hd), pool_k, pool_v, block_tables, pos,
+            scale=1.0 / (hd ** 0.5), soft_cap=cfg.attn_logit_soft_cap,
+            backend=backend).reshape(B, 1, H, hd)
+    out = jnp.einsum("bqhx,hxd->bqd", o.astype(x.dtype), p["wo"])
     return constrain(out, "batch", "seq", "d_model"), {"k": pool_k, "v": pool_v}
 
 

@@ -21,6 +21,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kernel_ops
 from repro.parallel.sharding import ParamDef, constrain
 from .common import ModelConfig
 from .layers import rope_cos_sin
@@ -184,12 +185,24 @@ def _mla_attend(p, q_nope, q_rope, c_kv, k_rope, valid, cfg: ModelConfig):
 
 def mla_decode_paged(p, x: jax.Array, pool: Dict[str, jax.Array],
                      block_tables: jax.Array, pos: jax.Array,
-                     cfg: ModelConfig, *, page_size: int
+                     cfg: ModelConfig, *, page_size: int,
+                     backend: Optional[str] = None
                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One-token MLA decode against the paged latent pool.  x (B,1,D);
     pool c_kv (P,page,r) / k_rope (P,page,dr); block_tables (B,n_blocks);
-    pos (B,)."""
+    pos (B,).
+
+    Paged decode always runs in the compressed latent space (the absorbed
+    form: fold ``wk_b`` into q, attend against ``c_kv`` directly, fold
+    ``wv_b`` back out) regardless of ``cfg.mla_absorb`` — it is the
+    IO-optimal form the Pallas kernel implements, and it is mathematically
+    identical to the per-head re-expansion.  The attention core dispatches
+    through the kernel registry (kernels/ops.py ``mla_paged_attention``);
+    the dense-cache :func:`mla_decode` keeps honoring ``cfg.mla_absorb``.
+    """
     B = x.shape[0]
+    H = cfg.n_heads
+    dn, dr = cfg.nope_head_dim, cfg.rope_head_dim
     posb = pos.astype(jnp.int32)[:, None]
     q_nope, q_rope = _queries(p, x, posb, cfg)
     c_new, kr_new = _latent_kv(p, x, posb, cfg)
@@ -197,11 +210,14 @@ def mla_decode_paged(p, x: jax.Array, pool: Dict[str, jax.Array],
     off = pos % page_size
     pool_c = pool["c_kv"].at[blk, off].set(c_new[:, 0].astype(pool["c_kv"].dtype))
     pool_r = pool["k_rope"].at[blk, off].set(kr_new[:, 0].astype(pool["k_rope"].dtype))
-    S = block_tables.shape[1] * page_size
-    c_kv = pool_c[block_tables].reshape(B, S, -1)
-    k_rope = pool_r[block_tables].reshape(B, S, -1)
-    valid = (jnp.arange(S, dtype=jnp.int32)[None, :] <= pos[:, None])[:, None, :]
-    out = _mla_attend(p, q_nope, q_rope, c_kv, k_rope, valid, cfg)
+    scale = 1.0 / ((dn + dr) ** 0.5)
+    q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"])     # (B,1,H,r)
+    with jax.named_scope("paged_attention"):
+        o_lat = kernel_ops.mla_paged_attention(
+            q_lat[:, 0], q_rope[:, 0], pool_c, pool_r, block_tables, pos,
+            scale=scale, backend=backend)[:, None]              # (B,1,H,r)
+    o = jnp.einsum("bqhr,rhk->bqhk", o_lat.astype(x.dtype), p["wv_b"])
+    out = jnp.einsum("bqhk,hkd->bqd", o, p["wo"])
     out = constrain(out, "batch", "seq", "d_model")
     return out, {"c_kv": pool_c, "k_rope": pool_r}
 

@@ -90,6 +90,27 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array,
     return logits[:, -1, :], states
 
 
+def prefill_padded(params, cfg: ModelConfig, tokens: jax.Array,
+                   true_len: jax.Array):
+    """Whole-prompt prefill over a length-bucketed (zero-padded) buffer.
+
+    tokens (B, S_padded) int32 with the real prompt in the first
+    ``true_len`` positions.  Causal masking keeps every prefix row — and
+    therefore the returned last-token logits and the first ``true_len``
+    collected states — byte-identical to an unpadded prefill; callers
+    (serve.Engine) bucket S_padded to powers of two so the jit compiles
+    O(log max_len) shapes.  Only valid for archs whose collected state is
+    per-token (attention/MLA): a recurrent final state or an MoE capacity
+    cutoff would observe the pad tokens.
+
+    Returns (last_logits (B, V) at position true_len-1, states).
+    """
+    logits, _, states = tfm.forward_full(params, cfg, tokens,
+                                         collect_state=True, remat=False)
+    last = jax.lax.dynamic_slice_in_dim(logits, true_len - 1, 1, axis=1)
+    return last[:, 0, :], states
+
+
 def decode_step(params, cfg: ModelConfig, caches: List[Any],
                 token: jax.Array, pos: jax.Array):
     """One token for every sequence in the batch.  token (B,1); pos scalar."""
@@ -106,11 +127,13 @@ def paged_cache_defs(cfg: ModelConfig, num_slots: int, num_pages: int,
 
 def decode_step_paged(params, cfg: ModelConfig, pools: List[Any],
                       block_tables: jax.Array, token: jax.Array,
-                      pos: jax.Array, active: jax.Array, *, page_size: int):
+                      pos: jax.Array, active: jax.Array, *, page_size: int,
+                      backend: Optional[str] = None):
     """One decode token per slot against the paged cache.  token (B,1);
-    pos (B,); block_tables (B, n_blocks); active (B,) bool."""
+    pos (B,); block_tables (B, n_blocks); active (B,) bool.  ``backend``
+    selects the paged-attention kernel (see kernels/ops.py registry)."""
     return tfm.decode_one_paged(params, cfg, pools, block_tables, token, pos,
-                                active, page_size=page_size)
+                                active, page_size=page_size, backend=backend)
 
 
 def prefill_chunk_paged(params, cfg: ModelConfig, pools: List[Any],

@@ -219,11 +219,11 @@ def apply_block_decode(p, b: BlockDef, x: jax.Array, cache: Dict[str, Any],
     if paged is not None and b.mixer == "attn":
         o, cache = attn.decode_attention_paged(
             p["mixer"], h, cache, paged["block_tables"], pos, cfg,
-            page_size=paged["page_size"])
+            page_size=paged["page_size"], backend=paged.get("backend"))
     elif paged is not None and b.mixer == "mla":
         o, cache = mla_mod.mla_decode_paged(
             p["mixer"], h, cache, paged["block_tables"], pos, cfg,
-            page_size=paged["page_size"])
+            page_size=paged["page_size"], backend=paged.get("backend"))
     elif paged is not None and b.mixer in ("cross_attn", "attn+cross"):
         raise NotImplementedError(
             "paged decode supports decoder-only mixers; use the static "
@@ -444,7 +444,8 @@ def decode_one(params, cfg: ModelConfig, caches: List[Any], token: jax.Array,
 
 def decode_one_paged(params, cfg: ModelConfig, pools: List[Any],
                      block_tables: jax.Array, token: jax.Array,
-                     pos: jax.Array, active: jax.Array, *, page_size: int
+                     pos: jax.Array, active: jax.Array, *, page_size: int,
+                     backend: Optional[str] = None
                      ) -> Tuple[jax.Array, List[Any]]:
     """One decode step over the packed slot batch.
 
@@ -458,6 +459,10 @@ def decode_one_paged(params, cfg: ModelConfig, pools: List[Any],
     slots are live, so this compiles exactly once and serves every
     admission state of the continuous batch.
 
+    ``backend`` picks the paged-attention implementation through the
+    kernel registry (kernels/ops.py): "pallas" (decode kernel), "jnp"
+    (gather reference) or "auto"/None (registry default).
+
     MoE caveat: idle-lane garbage tokens do enter expert routing and can
     shift capacity cutoffs for live tokens — the same O(1)-logit
     discontinuity GShard drop semantics already allow between batch
@@ -467,7 +472,7 @@ def decode_one_paged(params, cfg: ModelConfig, pools: List[Any],
     posb = pos.astype(jnp.int32)[:, None]
     x = embed_tokens(params["embed"], token, cfg, posb)
     paged = {"block_tables": block_tables, "page_size": page_size,
-             "active": active}
+             "active": active, "backend": backend}
     new_pools: List[Any] = []
     for seg_params, seg_pool, (unit, reps) in zip(
             params["segments"], pools, cfg.segments()):

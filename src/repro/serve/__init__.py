@@ -1,3 +1,4 @@
+from . import sampling
 from .engine import Engine, EngineConfig, GenerateConfig, StaticEngine
 from .kv_cache import PagedKVCache, supports_paging
 from .scheduler import Request, RequestState, RooflineLedger, Scheduler
@@ -6,4 +7,5 @@ __all__ = [
     "Engine", "EngineConfig", "GenerateConfig", "StaticEngine",
     "PagedKVCache", "supports_paging",
     "Request", "RequestState", "RooflineLedger", "Scheduler",
+    "sampling",
 ]

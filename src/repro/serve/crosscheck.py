@@ -1,0 +1,94 @@
+"""Ledger <-> HLO cross-check for the paged decode step.
+
+The scheduler's per-request roofline ledger prices one decode token
+*analytically* (scheduler.decode_token_flops/bytes).  This module closes
+the loop the way the paper cross-checks its FLOP/traffic counters against
+PMU measurements (§2.4): lower and compile the engine's actual jitted
+decode step, walk the partitioned HLO with the full-module cost model
+(core/roofline/hlo_cost), and compare W and Q.
+
+One correction is applied before comparing, mirroring
+``substitute_flash``: the compiled *reference* decode materializes the
+gathered (B, S, KV, hd) K/V to HBM (the ``paged_attention`` scope's
+measured bytes), which the Pallas kernel never does — its traffic is the
+page walk itself, exactly the ledger's ``(L + 1) * kv_line`` term.  So the
+scope's measured bytes are swapped for the kernel pricing
+(substitute.substitute_paged_attention) and the remainder of the step
+(weight reads, FFN, norms, logits, cache writes) is compared as measured.
+
+The decode-only step is characterized (without the fused sampling tail):
+the ledger models decode; sampling adds O(B * V) sort/RNG traffic that is
+deliberately outside the ledger's W/Q.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.roofline import extract
+from repro.core.roofline.substitute import substitute_paged_attention
+from repro.models import decode_step_paged
+
+from .scheduler import (decode_token_bytes, decode_token_flops,
+                        kv_line_bytes)
+
+
+def decode_step_character(engine) -> extract.StepCharacter:
+    """Compile the engine's decode step (jnp reference backend, so the HLO
+    is analyzable) at its current shapes and characterize it."""
+    if engine._kv is None:
+        raise ValueError("engine has no live pool; submit work or reset()")
+    cfg, kv, e = engine.cfg, engine._kv, engine.ecfg
+    ps = e.page_size
+
+    def step(p, pools, bt, tok, pos, act):
+        return decode_step_paged(p, cfg, pools, bt, tok, pos, act,
+                                 page_size=ps, backend="jnp")
+
+    B = e.num_slots
+    abstract = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+        (engine.params, kv.pools,
+         jnp.zeros((B, kv.blocks_per_slot), jnp.int32),
+         jnp.zeros((B, 1), jnp.int32), jnp.zeros((B,), jnp.int32),
+         jnp.zeros((B,), bool)))
+    compiled = jax.jit(step).lower(*abstract).compile()
+    return extract.characterize(compiled)
+
+
+def crosscheck_decode(engine, requests: Optional[List] = None) -> Dict:
+    """Compare the analytic ledger's W/Q for one decode step against the
+    compiled step's HLO measurement (kernel-substituted; see module
+    docstring).  ``requests`` defaults to the engine's currently decoding
+    requests.  Returns both sides plus their ratios."""
+    cfg = engine.cfg
+    if requests is None:
+        requests = engine._sched.decode_requests()
+    if not requests:
+        raise ValueError("no decoding requests to cross-check")
+    contexts = [r.context_len for r in requests]
+    n_active = len(contexts)
+
+    analytic_flops = sum(decode_token_flops(cfg, L) for L in contexts)
+    analytic_bytes = sum(decode_token_bytes(cfg, L, n_active)
+                         for L in contexts)
+
+    char = extract.character_as_dict(decode_step_character(engine))
+    sub = substitute_paged_attention(char, contexts, kv_line_bytes(cfg))
+    hlo = sub or char
+    return {
+        "analytic_flops": analytic_flops,
+        "analytic_bytes": analytic_bytes,
+        "hlo_flops": hlo["flops_dev"],
+        "hlo_bytes": hlo["hbm_bytes_dev"],
+        "hlo_bytes_raw": char["hbm_bytes_dev"],
+        "scope_bytes_raw": (char.get("scopes", {})
+                            .get("paged_attention", {}).get("bytes", 0.0)),
+        "flops_ratio": analytic_flops / max(hlo["flops_dev"], 1.0),
+        "bytes_ratio": analytic_bytes / max(hlo["hbm_bytes_dev"], 1.0),
+        "substituted": sub is not None,
+        "contexts": contexts,
+    }

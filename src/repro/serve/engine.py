@@ -7,10 +7,25 @@ admission state), chunked prefill that interleaves with running decodes,
 and a per-request roofline ledger (see scheduler.py).  Decoder-only archs
 only; enc-dec / VLM requests transparently fall back to the static path.
 
+The decode hot path is fully on-device: paged attention dispatches
+through the kernel registry (kernels/ops.py — the Pallas decode kernel or
+its jnp gather reference, picked by ``EngineConfig.kernel_backend``), and
+batched temperature/top-k sampling with per-slot RNG folds is fused into
+the same jitted step (serve/sampling.py), so the host loop only ever sees
+chosen token ids.  Whole-prompt prefill is length-bucketed to the next
+power of two so the jitted prefill compiles O(log max_len) shapes instead
+of one per distinct prompt length.
+
 :class:`StaticEngine` is the original whole-batch prefill -> lockstep
 decode loop, kept as the reference implementation the continuous engine is
 tested against token-for-token, and as the serving path for archs with
-cross-attention caches.
+cross-attention caches.  Both engines sample through the one shared
+helper in serve/sampling.py, with per-row key streams derived the same
+way — their greedy/temperature semantics cannot drift apart.  (Token
+-for-token caveat: paged MLA decode always runs the absorbed/latent form,
+so for MLA archs the static engine matches byte-for-byte when
+``cfg.mla_absorb`` is set and up to fp reordering otherwise; MoE expert
+-capacity cutoffs carry their usual batch-composition discontinuity.)
 """
 
 from __future__ import annotations
@@ -24,9 +39,10 @@ import numpy as np
 
 from repro.core.roofline.hardware import ChipSpec, TPU_V5E
 from repro.models import (decode_step, decode_step_paged, init_cache,
-                          prefill, prefill_chunk_paged)
+                          prefill, prefill_chunk_paged, prefill_padded)
 from repro.models.common import ModelConfig, model_flops
 
+from . import sampling
 from .kv_cache import PagedKVCache, supports_paging
 from .scheduler import Request, RequestState, Scheduler
 
@@ -35,6 +51,7 @@ from .scheduler import Request, RequestState, Scheduler
 class GenerateConfig:
     max_new_tokens: int = 32
     temperature: float = 0.0          # 0 = greedy
+    top_k: int = 0                    # 0 = no top-k filter
     stop_token: Optional[int] = None
 
 
@@ -46,6 +63,14 @@ class EngineConfig:
     prefill_chunk: int = 0            # 0 = whole prompt in one chunk
     num_pages: Optional[int] = None   # None = fully backed pool
     chip: ChipSpec = TPU_V5E          # roofline ledger target hardware
+    prefill_bucket: int = 8           # min whole-prompt bucket (0 = off)
+    kernel_backend: Optional[str] = None  # "pallas"|"jnp"|"auto"|None
+
+
+def _bucket_len(n: int, floor: int) -> int:
+    """Next power of two >= n (but >= floor): bounds distinct prefill
+    shapes — and therefore recompiles — to O(log max_len)."""
+    return max(floor, 1 << max(n - 1, 0).bit_length())
 
 
 def _place_prefill_states(cfg: ModelConfig, caches, states, prompt_len: int):
@@ -89,7 +114,8 @@ class StaticEngine:
         caches = _place_prefill_states(cfg, caches, states, S)
 
         tokens = [prompts]
-        cur = self._sample(last_logits, rng, 0, gen)
+        kd = sampling.batch_key_data(rng, B)
+        cur = self._sample(last_logits, kd, 0, gen, rng)
         finished = jnp.zeros((B,), bool)
         for i in range(gen.max_new_tokens):
             tokens.append(cur[:, None])
@@ -101,17 +127,25 @@ class StaticEngine:
                 break
             logits, caches = self._decode(self.params, caches, cur[:, None],
                                           jnp.int32(S + i))
-            cur = self._sample(logits, rng, i + 1, gen)
+            cur = self._sample(logits, kd, i + 1, gen, rng)
         return {"tokens": jnp.concatenate(tokens, axis=1),
                 "finished": finished}
 
-    def _sample(self, logits: jax.Array, rng, i: int,
-                gen: GenerateConfig) -> jax.Array:
-        if gen.temperature <= 0.0 or rng is None:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        k = jax.random.fold_in(rng, i)
-        return jax.random.categorical(
-            k, logits / gen.temperature, axis=-1).astype(jnp.int32)
+    def _sample(self, logits: jax.Array, kd: np.ndarray, i: int,
+                gen: GenerateConfig, rng) -> jax.Array:
+        """Shared-helper sampling (serve/sampling.py): per-row key streams
+        ``fold_in(rng, b)`` folded with the step index — the same derivation
+        the continuous engine fuses into its decode step, so a static batch
+        with base key K samples byte-identically to continuous requests
+        submitted with ``rng=fold_in(K, b)``."""
+        B = logits.shape[0]
+        temp = gen.temperature if rng is not None else 0.0
+        toks = sampling.sample_host(
+            logits, kd,                       # logits stay on device
+            np.full((B,), i, np.int32),
+            np.full((B,), temp, np.float32),
+            np.full((B,), gen.top_k, np.int32))
+        return jnp.asarray(toks)
 
 
 class Engine:
@@ -141,6 +175,7 @@ class Engine:
         self._prefill_fn = None
         self._next_token: Optional[np.ndarray] = None
         self._pos: Optional[np.ndarray] = None
+        self.prefill_shapes: set = set()      # padded lengths compiled
         self.step_count = 0
         self.decode_steps = 0
 
@@ -172,14 +207,35 @@ class Engine:
                                 prefill_chunk=e.prefill_chunk)
         self._next_token = np.zeros((e.num_slots,), np.int32)
         self._pos = np.zeros((e.num_slots,), np.int32)
-        cfg, ps = self.cfg, e.page_size
-        self._decode_fn = jax.jit(
-            lambda p, pools, bt, tok, pos, act: decode_step_paged(
-                p, cfg, pools, bt, tok, pos, act, page_size=ps))
+        # per-slot sampling state, consumed by the fused decode+sample step
+        ksize = sampling.key_data(None).shape[0]
+        self._key_data = np.zeros((e.num_slots, ksize), np.uint32)
+        self._steps = np.zeros((e.num_slots,), np.int32)
+        self._temps = np.zeros((e.num_slots,), np.float32)
+        self._top_ks = np.zeros((e.num_slots,), np.int32)
+        cfg, ps, be = self.cfg, e.page_size, e.kernel_backend
+
+        def _decode_sample(p, pools, bt, tok, pos, act, kd, steps, temps,
+                           top_ks):
+            logits, pools = decode_step_paged(
+                p, cfg, pools, bt, tok, pos, act, page_size=ps, backend=be)
+            return sampling.sample_tokens(logits, kd, steps, temps,
+                                          top_ks), pools
+
+        self._decode_fn = jax.jit(_decode_sample)
         # jit handles per-chunk-length retracing under one cache
         self._prefill_fn = jax.jit(
             lambda p, pools, btr, slot, toks, off: prefill_chunk_paged(
                 p, cfg, pools, btr, slot, toks, off, page_size=ps))
+        # bucketed whole-prompt prefill: only archs whose collected states
+        # are all per-token (attention/MLA) survive padding — a recurrent
+        # final state or an MoE capacity cutoff would see the pad tokens
+        self._bucketable = (
+            all(b.mixer in ("attn", "mla") for b in cfg.block_pattern)
+            and all(b.ffn != "moe" for b in cfg.block_pattern))
+        self._prefill_full_fn = jax.jit(
+            lambda p, toks, n: prefill_padded(p, cfg, toks, n))
+        self.prefill_shapes: set = set()
         self.step_count = 0
         self.decode_steps = 0
 
@@ -201,8 +257,8 @@ class Engine:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         self._ensure(prompt.shape[0] + gen.max_new_tokens)
         req = Request(prompt=prompt, max_new_tokens=gen.max_new_tokens,
-                      temperature=gen.temperature, stop_token=gen.stop_token,
-                      rng=rng)
+                      temperature=gen.temperature, top_k=gen.top_k,
+                      stop_token=gen.stop_token, rng=rng)
         return self._sched.submit(req)
 
     def step(self) -> List[Request]:
@@ -211,6 +267,8 @@ class Engine:
         sched = self._sched
         n_done = len(sched.finished)
         admitted = sched.admit()
+        for req in admitted:
+            self._init_sampling_row(req)
         work = sched.prefill_work()
         for req, start, end in work:
             self._run_prefill(req, start, end)
@@ -245,7 +303,20 @@ class Engine:
     def _run_prefill(self, req: Request, start: int, end: int) -> None:
         kv, cfg = self._kv, self.cfg
         whole = start == 0 and end == req.prompt_len
-        if whole:
+        if whole and self._bucketable and self.ecfg.prefill_bucket > 0:
+            # length-bucketed jitted prefill: pad the prompt to the next
+            # power of two; causal masking makes the prefix rows (and the
+            # logits at true_len-1) byte-identical to the unpadded run, so
+            # at most O(log max_len) shapes ever compile
+            L = req.prompt_len
+            pl_ = _bucket_len(L, self.ecfg.prefill_bucket)
+            toks = np.zeros((1, pl_), np.int32)
+            toks[0, :L] = req.prompt
+            self.prefill_shapes.add(pl_)
+            last_logits, states = self._prefill_full_fn(
+                self.params, jnp.asarray(toks), jnp.int32(L))
+            kv.write_prefill_states(req.slot, states, L)
+        elif whole:
             # one-chunk path: identical computation to the static engine
             last_logits, states = prefill(self.params, cfg,
                                           jnp.asarray(req.prompt[None, :]))
@@ -264,7 +335,7 @@ class Engine:
                 # prefill-only scoring: same shape contract as StaticEngine
                 self._sched.finish(req, "length")
                 return
-            tok = self._sample_one(np.asarray(last_logits[0]), req)
+            tok = self._sample_first(last_logits, req)
             self._commit_token(req, tok, first=True)
 
     def _run_decode(self, running: List[Request]) -> None:
@@ -275,16 +346,19 @@ class Engine:
         active[slots] = True
         token = np.where(active, self._next_token, 0).astype(np.int32)
         pos = np.where(active, self._pos, 0).astype(np.int32)
-        logits, kv.pools = self._decode_fn(
+        # decode + batched sampling run as ONE jitted step: the host sees
+        # only the chosen token ids, never the (B, V) logits
+        next_tok, kv.pools = self._decode_fn(
             self.params, kv.pools, bt, jnp.asarray(token[:, None]),
-            jnp.asarray(pos), jnp.asarray(active))
+            jnp.asarray(pos), jnp.asarray(active),
+            jnp.asarray(self._key_data), jnp.asarray(self._steps),
+            jnp.asarray(self._temps), jnp.asarray(self._top_ks))
         self.decode_steps += 1
-        logits_np = np.asarray(logits, np.float32)
+        tok_np = np.asarray(next_tok)
         n_active = len(running)
         for req in running:
             req.ledger.add_decode_token(self.cfg, req.context_len, n_active)
-            tok = self._sample_one(logits_np[req.slot], req)
-            self._commit_token(req, tok)
+            self._commit_token(req, int(tok_np[req.slot]))
 
     def _commit_token(self, req: Request, tok: int, first: bool = False)\
             -> None:
@@ -298,13 +372,28 @@ class Engine:
         else:
             self._next_token[req.slot] = tok
             self._pos[req.slot] = req.context_len - 1
+            self._steps[req.slot] = len(req.generated)
 
-    def _sample_one(self, logits_row: np.ndarray, req: Request) -> int:
-        if req.temperature <= 0.0 or req.rng is None:
-            return int(np.argmax(logits_row))
-        k = jax.random.fold_in(req.rng, len(req.generated))
-        return int(jax.random.categorical(
-            k, jnp.asarray(logits_row) / req.temperature))
+    def _init_sampling_row(self, req: Request) -> None:
+        """Per-slot sampling state for the fused decode+sample step.  A
+        request without an rng samples greedily whatever its temperature
+        (the pre-fusion host-sampling contract)."""
+        slot = req.slot
+        self._key_data[slot] = sampling.key_data(req.rng)
+        self._temps[slot] = req.temperature if req.rng is not None else 0.0
+        self._top_ks[slot] = req.top_k
+        self._steps[slot] = 0
+
+    def _sample_first(self, last_logits: jax.Array, req: Request) -> int:
+        """Sample the prefill's first token through the same shared helper
+        (B=1 row), keeping its RNG stream identical to the fused path."""
+        tok = sampling.sample_host(
+            jnp.reshape(last_logits, (1, -1)),
+            self._key_data[req.slot][None],
+            np.asarray([len(req.generated)], np.int32),
+            np.asarray([self._temps[req.slot]], np.float32),
+            np.asarray([self._top_ks[req.slot]], np.int32))
+        return int(tok[0])
 
     # -- batch compatibility API -------------------------------------------
 

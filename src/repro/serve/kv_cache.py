@@ -162,7 +162,9 @@ class PagedKVCache:
 
         ``states`` come from ``models.prefill(collect_state=True)`` with
         batch 1: attention-family leaves are (reps, 1, S, ...) per-token
-        streams -> paged scatter; recurrent leaves are (reps, 1, ...) final
+        streams -> paged scatter (S may exceed ``prompt_len`` when the
+        prefill was length-bucketed/padded; only the first ``prompt_len``
+        tokens are written); recurrent leaves are (reps, 1, ...) final
         states -> slot rows.
         """
         row = self.block_tables[slot]
@@ -173,7 +175,7 @@ class PagedKVCache:
         def f(pool, state, paged):
             if paged:
                 return pool.at[:, phys, off].set(
-                    state[:, 0].astype(pool.dtype))
+                    state[:, 0, :prompt_len].astype(pool.dtype))
             return jax.lax.dynamic_update_slice_in_dim(
                 pool, state.astype(pool.dtype), slot, axis=1)
 

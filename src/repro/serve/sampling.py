@@ -1,0 +1,130 @@
+"""Batched on-device token sampling — the single sampling helper both
+engines share.
+
+Before this module the static engine and the continuous engine each had a
+private sampler (``StaticEngine._sample`` / ``Engine._sample_one``) whose
+greedy/temperature semantics could drift apart; worse, the continuous
+engine sampled *per request on the host*, so the hottest loop in the repo
+ended every memory-bound decode step with a host round-trip per slot.
+Now there is exactly one primitive:
+
+    sample_tokens(logits, key_data, steps, temps, top_ks) -> (B,) int32
+
+fully batched, jit-friendly, and fused by the serve engine into the one
+jitted decode step — the host loop only ever sees chosen token ids.
+
+Semantics (per row ``b``):
+
+* ``temps[b] <= 0``  -> greedy ``argmax`` (RNG untouched).
+* ``temps[b] > 0``   -> ``categorical(fold_in(key_b, steps[b]),
+  logits_b / temps[b])`` with an optional top-k filter — byte-identical to
+  sampling that row alone on the host, because ``fold_in`` + per-row
+  ``categorical`` commute with ``vmap``.
+* ``top_ks[b] > 0``  -> logits outside the top-k are masked to -inf before
+  the draw (ties at the k-th value are all kept, the usual caveat).
+
+Key derivation is unified across engines: a whole-batch ``rng`` becomes
+per-row streams via ``fold_in(rng, row)`` (:func:`batch_key_data`), and
+each drawn token folds the per-row stream with its step index.  A static
+whole-batch run with base key K therefore samples byte-identically to
+continuous requests submitted with ``rng=fold_in(K, b)`` — the engines
+cannot diverge by construction.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def key_data(rng: Optional[jax.Array]) -> np.ndarray:
+    """Raw uint32 key data for one key (zeros when no rng is supplied)."""
+    if rng is None:
+        rng = jax.random.key(0)
+    return np.asarray(jax.random.key_data(rng), np.uint32)
+
+
+def batch_key_data(rng: Optional[jax.Array], batch: int) -> np.ndarray:
+    """(B, key_size) uint32: per-row streams ``fold_in(rng, b)``."""
+    if rng is None:
+        return np.broadcast_to(key_data(None), (batch,) + key_data(None).shape
+                               ).copy()
+    keys = jax.vmap(lambda b: jax.random.key_data(jax.random.fold_in(rng, b))
+                    )(jnp.arange(batch, dtype=jnp.int32))
+    return np.asarray(keys, np.uint32)
+
+
+def _top_k_mask(logits: jax.Array, top_ks: jax.Array) -> jax.Array:
+    """Mask logits outside each row's top-k (0 = keep all).
+
+    ``top_ks`` is traced, so the k-th threshold comes from a full
+    descending sort + per-row gather rather than ``lax.top_k`` (whose k
+    must be static).  O(V log V) per step — fine for the vocab sizes
+    served here; swap for a partitioned threshold pass if V ever dominates
+    the decode step.
+    """
+    V = logits.shape[-1]
+    sorted_desc = -jnp.sort(-logits, axis=-1)
+    idx = jnp.clip(top_ks.astype(jnp.int32) - 1, 0, V - 1)
+    thresh = jnp.take_along_axis(sorted_desc, idx[:, None], axis=-1)
+    keep = (top_ks[:, None] <= 0) | (logits >= thresh)
+    return jnp.where(keep, logits, NEG_INF)
+
+
+def sample_tokens(logits: jax.Array, key_data_rows: jax.Array,
+                  steps: jax.Array, temps: jax.Array, top_ks: jax.Array
+                  ) -> jax.Array:
+    """Batched greedy/temperature/top-k sampling.
+
+    logits (B, V) float; key_data_rows (B, key_size) uint32 per-row RNG
+    streams; steps (B,) int32 fold-in indices (the request's generated
+    count); temps (B,) float32; top_ks (B,) int32.  Returns (B,) int32.
+
+    An all-greedy batch (every temp <= 0 — the serving default) reduces
+    to argmax at runtime: the top-k sort and the Gumbel draws sit behind
+    ``lax.cond`` so the fused decode step pays nothing for sampling
+    machinery it is not using.
+    """
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def draw(kd, step, row, temp):
+        k = jax.random.fold_in(jax.random.wrap_key_data(kd), step)
+        return jax.random.categorical(k, row / temp).astype(jnp.int32)
+
+    def drawn(_):
+        filtered = jax.lax.cond(
+            jnp.any(top_ks > 0),
+            lambda l: _top_k_mask(l, top_ks), lambda l: l, logits)
+        safe_t = jnp.maximum(temps, 1e-6).astype(jnp.float32)
+        sampled = jax.vmap(draw)(key_data_rows, steps.astype(jnp.int32),
+                                 filtered, safe_t)
+        return jnp.where(temps > 0.0, sampled, greedy)
+
+    return jax.lax.cond(jnp.any(temps > 0.0), drawn, lambda _: greedy, None)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _sample_tokens_jit(logits, key_data_rows, steps, temps, top_ks):
+    return sample_tokens(logits, key_data_rows, steps, temps, top_ks)
+
+
+def sample_host(logits, key_data_rows: np.ndarray,
+                steps: np.ndarray, temps: np.ndarray, top_ks: np.ndarray
+                ) -> np.ndarray:
+    """Host-callable wrapper (jitted) — used for prefill's first token and
+    by the static engine; the continuous decode path fuses
+    :func:`sample_tokens` into its jitted decode step instead.  ``logits``
+    may be a device array (preferred — no host round-trip of the (B, V)
+    buffer; only the (B,) token ids come back) or a numpy array."""
+    out = _sample_tokens_jit(
+        jnp.asarray(logits), jnp.asarray(key_data_rows, jnp.uint32),
+        jnp.asarray(steps, jnp.int32), jnp.asarray(temps, jnp.float32),
+        jnp.asarray(top_ks, jnp.int32))
+    return np.asarray(out)

@@ -182,6 +182,7 @@ class Request:
     prompt: np.ndarray                       # (S,) int32
     max_new_tokens: int = 32
     temperature: float = 0.0
+    top_k: int = 0
     stop_token: Optional[int] = None
     rng: Optional[jax.Array] = None
     request_id: int = 0

@@ -1,0 +1,192 @@
+"""Paged-attention decode: Pallas kernel parity (interpret mode) vs the
+jnp gather reference, across GQA/MLA shapes, ragged page counts, and idle
+trash-page lanes — plus end-to-end engine byte-identity between the
+pallas-dispatch path and the jnp reference path."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke
+from repro.kernels import ops
+from repro.kernels import paged_attention as pa
+from repro.models import init_params
+from repro.serve import Engine, EngineConfig, GenerateConfig
+
+
+def _ragged_tables(rng, B, n_blocks, page, num_pages):
+    """Random ragged block tables: slot b owns 1..n_blocks live pages;
+    dead entries stay 0 (the trash page)."""
+    bt = np.zeros((B, n_blocks), np.int32)
+    pos = np.zeros((B,), np.int32)
+    free = list(range(1, num_pages))
+    for b in range(B):
+        live = rng.randint(1, n_blocks + 1)
+        for j in range(live):
+            bt[b, j] = free.pop()
+        pos[b] = rng.randint(0, live * page)
+    return jnp.asarray(bt), jnp.asarray(pos)
+
+
+@pytest.mark.parametrize("B,KV,G,hd,page,nb", [
+    (3, 2, 2, 16, 4, 5),      # GQA, odd block count
+    (2, 4, 1, 32, 8, 3),      # MHA (G=1)
+    (4, 1, 8, 64, 16, 2),     # MQA-style single KV head
+])
+def test_gqa_kernel_matches_reference(B, KV, G, hd, page, nb):
+    P = 1 + B * nb
+    ks = jax.random.split(jax.random.key(B * 7 + nb), 3)
+    q = jax.random.normal(ks[0], (B, KV, G, hd))
+    kp = jax.random.normal(ks[1], (P, page, KV, hd))
+    vp = jax.random.normal(ks[2], (P, page, KV, hd))
+    bt, pos = _ragged_tables(np.random.RandomState(B), B, nb, page, P)
+    scale = hd ** -0.5
+    ref = pa.paged_attention_reference(q, kp, vp, bt, pos, scale=scale)
+    out = pa.paged_attention(q, kp, vp, bt, pos, scale=scale,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_gqa_kernel_soft_cap():
+    B, KV, G, hd, page, nb = 2, 2, 2, 16, 4, 3
+    P = 1 + B * nb
+    ks = jax.random.split(jax.random.key(11), 3)
+    q = jax.random.normal(ks[0], (B, KV, G, hd)) * 4.0
+    kp = jax.random.normal(ks[1], (P, page, KV, hd))
+    vp = jax.random.normal(ks[2], (P, page, KV, hd))
+    bt, pos = _ragged_tables(np.random.RandomState(3), B, nb, page, P)
+    ref = pa.paged_attention_reference(q, kp, vp, bt, pos, scale=0.25,
+                                       soft_cap=30.0)
+    out = pa.paged_attention(q, kp, vp, bt, pos, scale=0.25, soft_cap=30.0,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_gqa_kernel_idle_trash_lane_is_finite():
+    """An idle lane (pos=0, all-trash block table) must produce finite
+    garbage, exactly like the reference — the engine discards it."""
+    B, KV, G, hd, page, nb = 2, 2, 2, 16, 4, 3
+    P = 1 + B * nb
+    ks = jax.random.split(jax.random.key(5), 3)
+    q = jax.random.normal(ks[0], (B, KV, G, hd))
+    kp = jax.random.normal(ks[1], (P, page, KV, hd))
+    vp = jax.random.normal(ks[2], (P, page, KV, hd))
+    bt = jnp.zeros((B, nb), jnp.int32)        # every lane idle -> trash page
+    pos = jnp.zeros((B,), jnp.int32)
+    out = pa.paged_attention(q, kp, vp, bt, pos, scale=hd ** -0.5,
+                             interpret=True)
+    ref = pa.paged_attention_reference(q, kp, vp, bt, pos, scale=hd ** -0.5)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("B,H,r,dr,page,nb", [
+    (3, 4, 32, 8, 4, 4),
+    (2, 8, 64, 16, 8, 2),
+])
+def test_mla_kernel_matches_reference(B, H, r, dr, page, nb):
+    P = 1 + B * nb
+    ks = jax.random.split(jax.random.key(B * 13 + nb), 4)
+    ql = jax.random.normal(ks[0], (B, H, r))
+    qr = jax.random.normal(ks[1], (B, H, dr))
+    cp = jax.random.normal(ks[2], (P, page, r))
+    rp = jax.random.normal(ks[3], (P, page, dr))
+    bt, pos = _ragged_tables(np.random.RandomState(B + 1), B, nb, page, P)
+    scale = (r + dr) ** -0.5
+    ref = pa.mla_paged_attention_reference(ql, qr, cp, rp, bt, pos,
+                                           scale=scale)
+    out = pa.mla_paged_attention(ql, qr, cp, rp, bt, pos, scale=scale,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_registry_resolves_backends():
+    impls = ops.registered_kernels()
+    assert {"paged_attention", "mla_paged_attention",
+            "flash_attention"} <= set(impls)
+    assert ops.resolve("paged_attention", "jnp") \
+        is pa.paged_attention_reference
+    # pallas resolution binds interpret for this (CPU) process
+    fn = ops.resolve("paged_attention", "pallas")
+    assert fn.func is pa.paged_attention
+    assert fn.keywords["interpret"] == (jax.default_backend() != "tpu")
+    with ops.use_backend("jnp"):
+        assert ops.resolve("mla_paged_attention") \
+            is pa.mla_paged_attention_reference
+    assert ops.default_backend() == "auto"
+    with pytest.raises(ValueError):
+        ops.resolve("paged_attention", "mosaic")
+
+
+# -- end-to-end: engine tokens, pallas dispatch vs jnp reference ------------
+
+def _engine_tokens(cfg, params, backend, arch_seed):
+    eng = Engine(cfg, params, EngineConfig(
+        num_slots=2, page_size=4, max_len=32, kernel_backend=backend))
+    gen = GenerateConfig(max_new_tokens=6)
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.key(arch_seed + i), (5 + i,), 0, cfg.vocab_size))
+        for i in range(3)]
+    reqs = [eng.submit(p, gen) for p in prompts]
+    eng.run()
+    return [list(r.generated) for r in reqs]
+
+
+@pytest.mark.parametrize("arch,seed", [("qwen3-0.6b", 100),
+                                       ("deepseek-v2-236b", 200)])
+def test_engine_pallas_dispatch_byte_identical(arch, seed):
+    """Continuous-engine output with the Pallas kernels (interpret mode)
+    is byte-identical to the jnp reference path — dense GQA and MLA."""
+    cfg = smoke(get_config(arch))
+    params = init_params(cfg, jax.random.key(0))
+    tok_jnp = _engine_tokens(cfg, params, "jnp", seed)
+    tok_pallas = _engine_tokens(cfg, params, "pallas", seed)
+    assert tok_jnp == tok_pallas
+
+
+def test_engine_pallas_dispatch_mla_absorb_equivalent():
+    """mla_absorb only changes compute order; the paged path runs latent
+    -space attention either way and tokens must agree."""
+    cfg = smoke(get_config("deepseek-v2-236b"))
+    params = init_params(cfg, jax.random.key(0))
+    base = _engine_tokens(cfg, params, "jnp", 300)
+    absorbed = _engine_tokens(
+        dataclasses.replace(cfg, mla_absorb=True), params, "pallas", 300)
+    assert base == absorbed
+
+
+def test_mla_continuous_matches_static_byte_for_byte():
+    """MLA continuous-vs-static byte identity (the contract the attn/xlstm
+    tests pin for their cache families).  MoE-free MLA config so expert
+    -capacity discontinuities can't confound; mla_absorb=True so the
+    static dense decode runs the same latent form the paged path always
+    uses."""
+    from repro.models.common import BlockDef
+    from repro.serve import StaticEngine
+    cfg = smoke(get_config("deepseek-v2-236b"))
+    cfg = dataclasses.replace(
+        cfg, name="mla-dense-smoke", mla_absorb=True, n_experts=0,
+        moe_top_k=0, moe_d_ff=0, n_shared_experts=0, moe_first_dense=0,
+        n_layers=2, block_pattern=(BlockDef("mla", "dense"),))
+    params = init_params(cfg, jax.random.key(0))
+    gen = GenerateConfig(max_new_tokens=6)
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.key(400 + i), (5 + i,), 0, cfg.vocab_size))
+        for i in range(3)]
+    eng = Engine(cfg, params, EngineConfig(num_slots=2, page_size=4,
+                                           max_len=32))
+    reqs = [eng.submit(p, gen) for p in prompts]
+    eng.run()
+    static = StaticEngine(cfg, params)
+    for p, r in zip(prompts, reqs):
+        ref = static.generate(jnp.asarray(p[None]), gen)
+        np.testing.assert_array_equal(
+            np.asarray(r.generated),
+            np.asarray(ref["tokens"])[0, len(p):])
