@@ -1,5 +1,5 @@
 """Continuous-batching serve benchmark: measured tokens/s against the
-memory-bound roofline ceiling.
+memory-bound roofline ceiling, with an optional speculative-decoding pass.
 
 Decode is the most memory-bound workload in the system: every generated
 token re-reads the active weights plus the request's KV line, so the
@@ -7,15 +7,25 @@ per-token arithmetic intensity sits far left of the ridge point and the
 attainable ceiling is ``beta * I`` (paper eq. 1).  This benchmark drives
 the paged continuous-batching engine end to end and reports, per run:
 
-* measured decode throughput (tokens/s),
+* measured decode throughput (tokens/s) and per-request latency (mean
+  TTFT, pooled inter-token p50/p95),
 * the analytic bytes/token -> the memory-bound ceiling tokens/s for the
   target chip,
 * the roofline fraction (measured / ceiling) on the *host* roofline
   (microbench-calibrated), and the per-request bound class / arithmetic
-  intensity from the engine's roofline ledger.
+  intensity from the engine's roofline ledger,
+* with ``--spec``: measured acceptance rate, tokens per weight pass, the
+  ledger arithmetic intensity against the one-token-per-pass baseline,
+  and the predicted memory-bound speedup (serve.spec.spec_speedup_model).
+
+``--smoke`` (the CI run) benches the baseline engine AND an n-gram
+speculative pass over self-repetitive prompts, and asserts the
+speculative ledger intensity is strictly above the baseline's — the
+roofline claim the subsystem exists to cash in.
 
     PYTHONPATH=src python -m benchmarks.bench_serve --arch qwen3-0.6b \
         --requests 8 --slots 4 --new-tokens 16
+    PYTHONPATH=src python -m benchmarks.bench_serve --spec ngram
     PYTHONPATH=src python -m benchmarks.bench_serve --smoke   # CI-sized
     PYTHONPATH=src python -m benchmarks.run --only serve --smoke
 """
@@ -31,15 +41,37 @@ import numpy as np
 from repro.configs import ALL_ARCHS, get_config, smoke
 from repro.core.roofline.hardware import HOST_CPU_FALLBACK, TPU_V5E
 from repro.models import init_params
-from repro.serve import Engine, EngineConfig, GenerateConfig
+from repro.serve import (Engine, EngineConfig, GenerateConfig, SpecConfig,
+                         SpecEngine)
 from repro.serve.scheduler import decode_token_bytes
+from repro.serve.spec import speculative_summary
 
 from .common import emit
 
 
+def _prompts(cfg, requests: int, prompt_len: int, repetitive: bool):
+    """Random prompts, or self-repetitive ones (a short motif tiled to
+    length) — the prompt-lookup proposer's honest demo workload."""
+    rng = jax.random.key(1)
+    out = []
+    for i in range(requests):
+        if repetitive:
+            motif = np.asarray(jax.random.randint(
+                jax.random.fold_in(rng, i), (max(prompt_len // 4, 2),), 0,
+                cfg.vocab_size))
+            p = np.tile(motif, prompt_len // motif.shape[0] + 1)[:prompt_len]
+        else:
+            p = np.asarray(jax.random.randint(
+                jax.random.fold_in(rng, i), (prompt_len,), 0,
+                cfg.vocab_size))
+        out.append(p.astype(np.int32))
+    return out
+
+
 def run_bench(arch: str, *, requests: int, slots: int, page_size: int,
               prompt_len: int, new_tokens: int, prefill_chunk: int,
-              chip_name: str, backend: str = None) -> dict:
+              chip_name: str, backend: str = None, spec: str = "none",
+              spec_k: int = 4, draft_arch: str = "qwen3-0.6b") -> dict:
     cfg = smoke(get_config(arch))
     params = init_params(cfg, jax.random.key(0))
     chip = TPU_V5E if chip_name == "tpu_v5e" else HOST_CPU_FALLBACK
@@ -47,14 +79,20 @@ def run_bench(arch: str, *, requests: int, slots: int, page_size: int,
                         max_len=prompt_len + new_tokens,
                         prefill_chunk=prefill_chunk, chip=chip,
                         kernel_backend=backend)
-    engine = Engine(cfg, params, ecfg)
+    scfg = None
+    if spec != "none":
+        if spec == "draft":
+            dcfg = smoke(get_config(draft_arch))
+            scfg = SpecConfig(k=spec_k, proposer="draft", draft_cfg=dcfg,
+                              draft_params=init_params(dcfg,
+                                                       jax.random.key(4)))
+        else:
+            scfg = SpecConfig(k=spec_k, proposer="ngram")
+        engine = SpecEngine(cfg, params, ecfg, scfg)
+    else:
+        engine = Engine(cfg, params, ecfg)
 
-    rng = jax.random.key(1)
-    prompts = [
-        np.asarray(jax.random.randint(jax.random.fold_in(rng, i),
-                                      (prompt_len,), 0, cfg.vocab_size))
-        for i in range(requests)
-    ]
+    prompts = _prompts(cfg, requests, prompt_len, repetitive=spec != "none")
     gen = GenerateConfig(max_new_tokens=new_tokens)
     for p in prompts:
         engine.submit(p, gen)
@@ -76,13 +114,32 @@ def run_bench(arch: str, *, requests: int, slots: int, page_size: int,
     ai = float(np.mean([t.arithmetic_intensity for t in ledgers]))
     bound = ledgers[0].bound_class()
     frac = tps / ceiling_tps
-    emit(f"serve_{arch}_b{slots}",
-         dt / max(n_tokens, 1) * 1e6,
-         f"tok/s={tps:.1f};ceiling={ceiling_tps:.0f};frac={frac:.4f};"
-         f"AI={ai:.2f};{bound};mean_batch={mean_batch:.2f}")
-    return {"tokens_per_s": tps, "ceiling_tokens_per_s": ceiling_tps,
-            "roofline_fraction": frac, "arithmetic_intensity": ai,
-            "bound_class": bound, "requests": len(done)}
+    ttft = float(np.mean([r.ttft for r in done]))
+    gaps = np.concatenate(
+        [np.diff(np.asarray(r.token_times))
+         for r in done if len(r.token_times) > 1] or [np.zeros((0,))])
+    itl_p50 = float(np.percentile(gaps, 50)) if gaps.size else float("nan")
+    itl_p95 = float(np.percentile(gaps, 95)) if gaps.size else float("nan")
+    out = {"tokens_per_s": tps, "ceiling_tokens_per_s": ceiling_tps,
+           "roofline_fraction": frac, "arithmetic_intensity": ai,
+           "bound_class": bound, "requests": len(done),
+           "ttft_s": ttft, "itl_p50_s": itl_p50, "itl_p95_s": itl_p95}
+    derived = (f"tok/s={tps:.1f};ceiling={ceiling_tps:.0f};"
+               f"frac={frac:.4f};AI={ai:.2f};{bound};"
+               f"mean_batch={mean_batch:.2f};ttft_ms={ttft * 1e3:.1f};"
+               f"itl_p50_ms={itl_p50 * 1e3:.2f};"
+               f"itl_p95_ms={itl_p95 * 1e3:.2f}")
+    name = f"serve_{arch}_b{slots}"
+    if spec != "none":
+        out.update(speculative_summary(cfg, done, spec_k,
+                                       prompt_len + new_tokens // 2,
+                                       draft_cfg=scfg.draft_cfg))
+        name = f"serve_{arch}_b{slots}_spec_{spec}{spec_k}"
+        derived += (f";accept={out['acceptance_rate']:.2f};"
+                    f"tok_per_pass={out['tokens_per_pass']:.2f};"
+                    f"pred_speedup={out['predicted_speedup']:.2f}")
+    emit(name, dt / max(n_tokens, 1) * 1e6, derived)
+    return out
 
 
 def main(argv=None):
@@ -99,9 +156,17 @@ def main(argv=None):
                     default=None,
                     help="paged-attention kernel backend (registry default"
                          " when omitted)")
+    ap.add_argument("--spec", choices=["none", "ngram", "draft"],
+                    default="none",
+                    help="speculative decoding proposer (serve/spec.py)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="drafted tokens per verify round")
+    ap.add_argument("--draft-arch", default="qwen3-0.6b",
+                    help="draft model arch for --spec draft")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized defaults: 4 requests, 2 slots, 8 new "
-                         "tokens (explicit flags still win)")
+                         "tokens, baseline + ngram speculative pass "
+                         "(explicit flags still win)")
     args = ap.parse_args(argv)
     sizes = (dict(requests=4, slots=2, page_size=4, prompt_len=8,
                   new_tokens=8) if args.smoke else
@@ -110,17 +175,44 @@ def main(argv=None):
     for k, v in sizes.items():
         if getattr(args, k) is None:
             setattr(args, k, v)
-    out = run_bench(args.arch, requests=args.requests, slots=args.slots,
-                    page_size=args.page_size, prompt_len=args.prompt_len,
-                    new_tokens=args.new_tokens,
-                    prefill_chunk=args.prefill_chunk,
-                    chip_name="tpu_v5e" if args.chip == "tpu_v5e"
-                    else "host", backend=args.backend)
+    kwargs = dict(requests=args.requests, slots=args.slots,
+                  page_size=args.page_size, prompt_len=args.prompt_len,
+                  new_tokens=args.new_tokens,
+                  prefill_chunk=args.prefill_chunk,
+                  chip_name="tpu_v5e" if args.chip == "tpu_v5e" else "host",
+                  backend=args.backend, spec_k=args.spec_k,
+                  draft_arch=args.draft_arch)
+    out = run_bench(args.arch, spec=args.spec, **kwargs)
     print(f"[bench_serve] {out['requests']} requests "
           f"{out['tokens_per_s']:.1f} tok/s "
           f"(memory-bound ceiling {out['ceiling_tokens_per_s']:.0f} tok/s, "
           f"roofline fraction {out['roofline_fraction']:.4f}), "
-          f"AI={out['arithmetic_intensity']:.2f} {out['bound_class']}")
+          f"AI={out['arithmetic_intensity']:.2f} {out['bound_class']}, "
+          f"ttft={out['ttft_s'] * 1e3:.1f}ms "
+          f"itl_p50={out['itl_p50_s'] * 1e3:.2f}ms "
+          f"p95={out['itl_p95_s'] * 1e3:.2f}ms")
+    if args.spec != "none":
+        print(f"[bench_serve/spec] proposer={args.spec} k={args.spec_k} "
+              f"acceptance={out['acceptance_rate']:.2f} "
+              f"tokens/pass={out['tokens_per_pass']:.2f} "
+              f"(model {out['predicted_tokens_per_pass']:.2f}), predicted "
+              f"memory-bound speedup x{out['predicted_speedup']:.2f}")
+    if args.smoke and args.spec == "none":
+        # CI acceptance bar: the speculative pass must report acceptance
+        # and a ledger intensity strictly above one-token-per-pass decode
+        spec_out = run_bench(args.arch, spec="ngram", **kwargs)
+        print(f"[bench_serve/spec] ngram k={args.spec_k} "
+              f"acceptance={spec_out['acceptance_rate']:.2f} "
+              f"tokens/pass={spec_out['tokens_per_pass']:.2f} "
+              f"AI={spec_out['arithmetic_intensity']:.2f} "
+              f"(baseline {out['arithmetic_intensity']:.2f}), predicted "
+              f"memory-bound speedup x{spec_out['predicted_speedup']:.2f}")
+        if not (spec_out["arithmetic_intensity"]
+                > out["arithmetic_intensity"]):
+            raise RuntimeError(
+                "speculative ledger intensity did not exceed the one-token"
+                f"-per-pass baseline: {spec_out['arithmetic_intensity']} "
+                f"<= {out['arithmetic_intensity']}")
 
 
 if __name__ == "__main__":

@@ -32,14 +32,23 @@ def flash_attention_ai(seq_len: int, bq: int = 128) -> float:
 
 
 def paged_attention_kernel_bytes(context_lens, kv_line_bytes: float,
-                                 qo_bytes_per_slot: float = 0.0) -> float:
+                                 qo_bytes_per_slot: float = 0.0,
+                                 n_q: int = 1) -> float:
     """HBM bytes of ONE paged-decode attention step under the Pallas kernel
     (kernels/paged_attention.py): each slot streams its live KV pages
-    HBM->VMEM exactly once — (L_i + 1) cache lines counting the just
-    -written token — plus its q/o vectors.  This is the same expression the
-    scheduler's analytic ledger charges (scheduler.decode_token_bytes KV
-    term), which is what lets the ledger and the HLO cross-check agree
-    once the jnp reference's gather traffic is swapped out.
+    HBM->VMEM exactly once — for ``n_q = 1`` that is (L_i + 1) cache lines
+    counting the just-written token — plus its q/o vectors.  This is the
+    same expression the scheduler's analytic ledger charges
+    (scheduler.decode_token_bytes KV term), which is what lets the ledger
+    and the HLO cross-check agree once the jnp reference's gather traffic
+    is swapped out.
+
+    ``n_q > 1`` prices the multi-token *verification* kernel of the
+    speculative subsystem (kernels ``paged_attention_verify``): ``n_q``
+    lines are written and ONE shared page walk reads the context plus the
+    just-written draft lines — (L_i + 2 * n_q - 1) lines total, matching
+    RooflineLedger.add_verify_step.  The walk is shared across all n_q
+    query tokens, which is exactly why verification raises intensity.
 
     ``context_lens``: iterable of per-slot context lengths L_i;
     ``kv_line_bytes``: all-layer cache line (scheduler.kv_line_bytes);
@@ -47,25 +56,26 @@ def paged_attention_kernel_bytes(context_lens, kv_line_bytes: float,
     """
     total = 0.0
     for L in context_lens:
-        total += (L + 1) * kv_line_bytes + qo_bytes_per_slot
+        total += (L + 2 * n_q - 1) * kv_line_bytes + qo_bytes_per_slot
     return total
 
 
 def substitute_paged_attention(char_dict: Dict, context_lens,
                                kv_line_bytes: float,
-                               qo_bytes_per_slot: float = 0.0
-                               ) -> Optional[Dict]:
+                               qo_bytes_per_slot: float = 0.0,
+                               n_q: int = 1) -> Optional[Dict]:
     """Return a copy of a ``character_as_dict`` dump with the
     ``paged_attention`` scope's HBM bytes replaced by the Pallas-kernel
     equivalent (the jnp reference materializes the gathered (B, S, KV, hd)
     K/V to HBM — roughly 2x the page pool per step — which the kernel
-    never does).  None if the dump has no paged-attention scope."""
+    never does).  ``n_q`` > 1 prices the multi-token verification kernel.
+    None if the dump has no paged-attention scope."""
     scope = (char_dict.get("scopes") or {}).get("paged_attention")
     if not scope:
         return None
     out = copy.deepcopy(char_dict)
     new_bytes = paged_attention_kernel_bytes(context_lens, kv_line_bytes,
-                                             qo_bytes_per_slot)
+                                             qo_bytes_per_slot, n_q=n_q)
     out["hbm_bytes_dev"] = max(
         char_dict["hbm_bytes_dev"] - scope["bytes"] + new_bytes, 1.0)
     out["scopes"]["paged_attention"] = {"flops": scope["flops"],

@@ -107,6 +107,12 @@ register_kernel("paged_attention",
 register_kernel("mla_paged_attention",
                 pallas=_paged.mla_paged_attention,
                 reference=_paged.mla_paged_attention_reference)
+register_kernel("paged_attention_verify",
+                pallas=_paged.paged_attention_verify,
+                reference=_paged.paged_attention_verify_reference)
+register_kernel("mla_paged_attention_verify",
+                pallas=_paged.mla_paged_attention_verify,
+                reference=_paged.mla_paged_attention_verify_reference)
 def _flash_model_layout(q, k, v, *, causal: bool = True,
                         interpret: bool = False):
     """flash kernel in model layout — q (B,Sq,H,hd), k/v (B,Sk,KV,hd)."""
@@ -141,6 +147,33 @@ def mla_paged_attention(q_lat, q_rope, c_pool, r_pool, block_tables, pos, *,
     block_tables (B, n_blocks); pos (B,).  Returns o_lat (B, H, r).
     """
     impl = resolve("mla_paged_attention", backend)
+    return impl(q_lat, q_rope, c_pool, r_pool, block_tables, pos,
+                scale=scale)
+
+
+def paged_attention_verify(q, k_pool, v_pool, block_tables, pos, *, scale,
+                           soft_cap: float = 0.0,
+                           backend: Optional[str] = None):
+    """Dispatching GQA multi-token paged verification (spec decoding).
+
+    q (B, T, KV, G, hd) — T draft-chain query tokens at positions
+    ``pos + t``; pools (P, page, KV, hd); block_tables (B, n_blocks);
+    pos (B,) first-query position.  Returns (B, T, KV, G, hd).
+    """
+    impl = resolve("paged_attention_verify", backend)
+    return impl(q, k_pool, v_pool, block_tables, pos, scale=scale,
+                soft_cap=soft_cap)
+
+
+def mla_paged_attention_verify(q_lat, q_rope, c_pool, r_pool, block_tables,
+                               pos, *, scale,
+                               backend: Optional[str] = None):
+    """Dispatching MLA multi-token paged verification over the latent cache.
+
+    q_lat (B, T, H, r); q_rope (B, T, H, dr); pools (P, page, r) /
+    (P, page, dr); pos (B,) first-query position.  Returns (B, T, H, r).
+    """
+    impl = resolve("mla_paged_attention_verify", backend)
     return impl(q_lat, q_rope, c_pool, r_pool, block_tables, pos,
                 scale=scale)
 

@@ -43,6 +43,17 @@ Ragged contexts: slots own different numbers of live pages; dead block
 ``k_pos <= pos`` mask zeroes their probability exactly.  Idle lanes
 (pos = 0, all-trash tables) compute a harmless garbage row the engine
 discards — same contract as the jnp reference.
+
+Multi-token verification (speculative decoding): the ``*_verify`` variants
+score T = k+1 query tokens per slot against the same paged KV in ONE page
+walk.  Query t sits at position ``pos + t`` and is causally masked to
+``k_pos <= pos + t`` — token t attends the committed context plus the
+drafted tokens before it, exactly the sequential decode it replaces.  The
+kernels flatten the (T, G) / (T, H) query rows into one VMEM slab so the
+block walk, the scalar-prefetched table, and the online-softmax carries
+are shared across all T tokens: HBM traffic stays ~one page walk while
+the FLOPs scale by T — the roofline lever speculative decoding exists to
+pull (measured intensity -> (k+1) * I at the same memory ceiling).
 """
 
 from __future__ import annotations
@@ -92,6 +103,34 @@ def paged_attention_reference(
     return o[:, 0]
 
 
+def paged_attention_verify_reference(
+    q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+    block_tables: jax.Array, pos: jax.Array, *,
+    scale: float, soft_cap: float = 0.0,
+) -> jax.Array:
+    """GQA multi-token paged verification, gather-and-attend.
+
+    q (B, T, KV, G, hd) — T query tokens per slot at positions
+    ``pos + t``; k/v pools (P, page, KV, hd); block_tables (B, n_blocks);
+    pos (B,) position of the FIRST query token.  Returns (B, T, KV, G, hd).
+    """
+    B, T = q.shape[0], q.shape[1]
+    KV, hd = k_pool.shape[2], k_pool.shape[3]
+    page_size = k_pool.shape[1]
+    S = block_tables.shape[1] * page_size
+    k = k_pool[block_tables].reshape(B, S, KV, hd)
+    v = v_pool[block_tables].reshape(B, S, KV, hd)
+    q_pos = pos.astype(jnp.int32)[:, None] + jnp.arange(T, dtype=jnp.int32)
+    k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    s = jnp.einsum("btkgh,bskh->bkgts", q, k).astype(jnp.float32) * scale
+    if soft_cap > 0:
+        s = jnp.tanh(s / soft_cap) * soft_cap
+    m = q_pos[:, :, None] >= k_pos[:, None, :]                  # (B, T, S)
+    s = jnp.where(m[:, None, None, :, :], s, NEG_INF)
+    p_attn = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgts,bskh->btkgh", p_attn, v)
+
+
 def mla_paged_attention_reference(
     q_lat: jax.Array, q_rope: jax.Array, c_pool: jax.Array,
     r_pool: jax.Array, block_tables: jax.Array, pos: jax.Array, *,
@@ -115,6 +154,32 @@ def mla_paged_attention_reference(
     s = jnp.where(valid[:, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1).astype(c_kv.dtype)
     return jnp.einsum("bhs,bsr->bhr", w, c_kv)
+
+
+def mla_paged_attention_verify_reference(
+    q_lat: jax.Array, q_rope: jax.Array, c_pool: jax.Array,
+    r_pool: jax.Array, block_tables: jax.Array, pos: jax.Array, *,
+    scale: float,
+) -> jax.Array:
+    """MLA multi-token paged verification in the compressed latent space.
+
+    q_lat (B, T, H, r); q_rope (B, T, H, dr); pools (P, page, r) /
+    (P, page, dr); pos (B,) position of the first query token.  Returns
+    o_lat (B, T, H, r).
+    """
+    B, T = q_lat.shape[0], q_lat.shape[1]
+    page_size = c_pool.shape[1]
+    S = block_tables.shape[1] * page_size
+    c_kv = c_pool[block_tables].reshape(B, S, -1)
+    k_rope = r_pool[block_tables].reshape(B, S, -1)
+    s = (jnp.einsum("bthr,bsr->bhts", q_lat, c_kv)
+         + jnp.einsum("bthk,bsk->bhts", q_rope, k_rope))
+    s = s.astype(jnp.float32) * scale
+    q_pos = pos.astype(jnp.int32)[:, None] + jnp.arange(T, dtype=jnp.int32)
+    valid = q_pos[:, :, None] >= jnp.arange(S, dtype=jnp.int32)[None, None, :]
+    s = jnp.where(valid[:, None, :, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(c_kv.dtype)
+    return jnp.einsum("bhts,bsr->bthr", w, c_kv)
 
 
 # --------------------------------------------------------------------------
@@ -268,3 +333,170 @@ def mla_paged_attention(
         out_shape=jax.ShapeDtypeStruct((B, H, r), q_lat.dtype),
         interpret=interpret,
     )(block_tables, pos.astype(jnp.int32), q_lat, q_rope, c_pool, r_pool)
+
+
+# --------------------------------------------------------------------------
+# Multi-token verification kernels (speculative decoding)
+# --------------------------------------------------------------------------
+
+def _paged_verify_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, page_size: int,
+                         n_group: int, scale: float, soft_cap: float):
+    """One (slot, kv_head, block) grid step scoring T*G flattened query
+    rows; row r belongs to draft token t = r // n_group at position
+    ``pos + t``."""
+    b, j = pl.program_id(0), pl.program_id(2)
+    n_blocks = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                     # (T*G, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)               # (page, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = (q @ k.T) * scale                                   # (T*G, page)
+    if soft_cap > 0:
+        s = jnp.tanh(s / soft_cap) * soft_cap
+    k_pos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    t = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // n_group
+    s = jnp.where(k_pos <= pos_ref[b] + t, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention_verify(
+    q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+    block_tables: jax.Array, pos: jax.Array, *,
+    scale: float, soft_cap: float = 0.0, interpret: bool = False,
+) -> jax.Array:
+    """Pallas GQA multi-token verify; same contract as the reference.
+
+    All T query tokens of a slot ride in one (T*G, hd) VMEM slab, so the
+    page walk (and its HBM traffic) is paid once for the whole draft chain.
+    """
+    B, T, KV, G, hd = q.shape
+    page_size = k_pool.shape[1]
+    n_blocks = block_tables.shape[1]
+    qf = q.transpose(0, 2, 1, 3, 4).reshape(B, KV, T * G, hd)
+    kernel = functools.partial(
+        _paged_verify_kernel, page_size=page_size, n_group=G, scale=scale,
+        soft_cap=soft_cap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, T * G, hd),
+                         lambda b, h, j, bt, ps: (b, h, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda b, h, j, bt, ps: (bt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda b, h, j, bt, ps: (bt[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, T * G, hd),
+                               lambda b, h, j, bt, ps: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((T * G, 1), jnp.float32),
+            pltpu.VMEM((T * G, 1), jnp.float32),
+            pltpu.VMEM((T * G, hd), jnp.float32),
+        ],
+    )
+    o = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, T * G, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, pos.astype(jnp.int32), qf, k_pool, v_pool)
+    return o.reshape(B, KV, T, G, hd).transpose(0, 2, 1, 3, 4)
+
+
+def _mla_paged_verify_kernel(bt_ref, pos_ref, ql_ref, qr_ref, c_ref, r_ref,
+                             o_ref, m_ref, l_ref, acc_ref, *,
+                             page_size: int, n_heads: int, scale: float):
+    """One (slot, block) grid step over T*H flattened latent query rows;
+    row r belongs to draft token t = r // n_heads."""
+    b, j = pl.program_id(0), pl.program_id(1)
+    n_blocks = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lat = ql_ref[0].astype(jnp.float32)                   # (T*H, r)
+    q_rope = qr_ref[0].astype(jnp.float32)                  # (T*H, dr)
+    c = c_ref[0].astype(jnp.float32)                        # (page, r)
+    kr = r_ref[0].astype(jnp.float32)                       # (page, dr)
+    s = (q_lat @ c.T + q_rope @ kr.T) * scale               # (T*H, page)
+    k_pos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    t = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // n_heads
+    s = jnp.where(k_pos <= pos_ref[b] + t, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + p @ c
+    m_ref[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def mla_paged_attention_verify(
+    q_lat: jax.Array, q_rope: jax.Array, c_pool: jax.Array,
+    r_pool: jax.Array, block_tables: jax.Array, pos: jax.Array, *,
+    scale: float, interpret: bool = False,
+) -> jax.Array:
+    """Pallas MLA multi-token verify over the compressed cache."""
+    B, T, H, r = q_lat.shape
+    dr = q_rope.shape[-1]
+    page_size = c_pool.shape[1]
+    n_blocks = block_tables.shape[1]
+    qlf = q_lat.reshape(B, T * H, r)
+    qrf = q_rope.reshape(B, T * H, dr)
+    kernel = functools.partial(
+        _mla_paged_verify_kernel, page_size=page_size, n_heads=H,
+        scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, T * H, r), lambda b, j, bt, ps: (b, 0, 0)),
+            pl.BlockSpec((1, T * H, dr), lambda b, j, bt, ps: (b, 0, 0)),
+            pl.BlockSpec((1, page_size, r),
+                         lambda b, j, bt, ps: (bt[b, j], 0, 0)),
+            pl.BlockSpec((1, page_size, dr),
+                         lambda b, j, bt, ps: (bt[b, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, T * H, r), lambda b, j, bt, ps: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((T * H, 1), jnp.float32),
+            pltpu.VMEM((T * H, 1), jnp.float32),
+            pltpu.VMEM((T * H, r), jnp.float32),
+        ],
+    )
+    o = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, T * H, r), q_lat.dtype),
+        interpret=interpret,
+    )(block_tables, pos.astype(jnp.int32), qlf, qrf, c_pool, r_pool)
+    return o.reshape(B, T, H, r)

@@ -3,10 +3,16 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --batch 4 --prompt-len 32 --new-tokens 32 --slots 2
 
+Speculative decoding (draft/verify; serve/spec.py):
+
+    ... --spec ngram --spec-k 4              # weight-free prompt lookup
+    ... --spec draft --draft-arch qwen3-0.6b # small-model drafting
+
 Each run prints measured tokens/s plus the per-request decode roofline
-ledger (arithmetic intensity, bound class, roofline ceiling).  Archs
-without a paged decode path (enc-dec, VLM) fall back to the static
-whole-batch engine.
+ledger (arithmetic intensity, bound class, roofline ceiling); speculative
+runs add acceptance rate, tokens-per-weight-pass, and the predicted
+speedup from the memory-bound model.  Archs without a paged decode path
+(enc-dec, VLM) fall back to the static whole-batch engine.
 """
 
 from __future__ import annotations
@@ -21,7 +27,9 @@ import numpy as np
 from repro.configs import ALL_ARCHS, get_config, smoke
 from repro.core.roofline.hardware import HOST_CPU_FALLBACK, TPU_V5E
 from repro.models import init_params
-from repro.serve import Engine, EngineConfig, GenerateConfig, supports_paging
+from repro.serve import (Engine, EngineConfig, GenerateConfig, SpecConfig,
+                         SpecEngine, supports_paging, supports_spec)
+from repro.serve.spec import speculative_summary
 
 
 def main():
@@ -34,6 +42,16 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0,
                     help="top-k sampling filter (0 = off)")
+    ap.add_argument("--top-p", type=float, default=0.0,
+                    help="nucleus sampling mass (0 or >= 1 = off)")
+    ap.add_argument("--spec", choices=["off", "ngram", "draft"],
+                    default="off",
+                    help="speculative decoding proposer (serve/spec.py)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="drafted tokens per verify round")
+    ap.add_argument("--draft-arch", default="qwen3-0.6b",
+                    help="draft model arch for --spec draft (shrunk with "
+                         "--smoke like the target)")
     ap.add_argument("--slots", type=int, default=0,
                     help="decode slots (0 = one per request)")
     ap.add_argument("--page-size", type=int, default=16)
@@ -51,17 +69,36 @@ def main():
     params = init_params(cfg, jax.random.key(0))
     chip = TPU_V5E if args.chip == "tpu_v5e" else HOST_CPU_FALLBACK
     slots = args.slots or args.batch
-    engine = Engine(cfg, params, EngineConfig(
+    ecfg = EngineConfig(
         num_slots=slots, page_size=args.page_size,
         max_len=args.prompt_len + args.new_tokens,
         prefill_chunk=args.prefill_chunk, chip=chip,
-        kernel_backend=args.backend))
+        kernel_backend=args.backend)
+    scfg = None
+    if args.spec != "off":
+        if not supports_spec(cfg):
+            raise SystemExit(f"{cfg.name}: --spec needs attention/MLA "
+                             "mixers throughout")
+        if args.spec == "draft":
+            dcfg = get_config(args.draft_arch)
+            if args.smoke:
+                dcfg = smoke(dcfg)
+            scfg = SpecConfig(k=args.spec_k, proposer="draft",
+                              draft_cfg=dcfg,
+                              draft_params=init_params(
+                                  dcfg, jax.random.key(4)))
+        else:
+            scfg = SpecConfig(k=args.spec_k, proposer="ngram")
+        engine = SpecEngine(cfg, params, ecfg, scfg)
+    else:
+        engine = Engine(cfg, params, ecfg)
 
     prompts = jax.random.randint(jax.random.key(1),
                                  (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
     gen = GenerateConfig(max_new_tokens=args.new_tokens,
-                         temperature=args.temperature, top_k=args.top_k)
+                         temperature=args.temperature, top_k=args.top_k,
+                         top_p=args.top_p)
 
     if not supports_paging(cfg):
         kwargs = {}
@@ -99,9 +136,23 @@ def main():
           f"({engine.decode_steps} decode steps)")
     for r in sorted(done, key=lambda r: r.request_id)[:4]:
         t = engine.roofline_terms(r)
+        lat = r.latency_stats()
         print(f"[serve]   req {r.request_id}: {len(r.generated)} tokens "
               f"({r.finish_reason}), AI={t.arithmetic_intensity:.2f} "
-              f"{t.bound_class()}, mean_batch={r.ledger.mean_batch:.1f}")
+              f"{t.bound_class()}, mean_batch={r.ledger.mean_batch:.1f}, "
+              f"ttft={lat['ttft_s'] * 1e3:.1f}ms "
+              f"itl_p50={lat['itl_p50_s'] * 1e3:.2f}ms "
+              f"p95={lat['itl_p95_s'] * 1e3:.2f}ms")
+    if args.spec != "off":
+        s = speculative_summary(cfg, done, args.spec_k,
+                                args.prompt_len + args.new_tokens // 2,
+                                draft_cfg=scfg.draft_cfg)
+        print(f"[serve/spec] proposer={args.spec} k={args.spec_k} "
+              f"acceptance={s['acceptance_rate']:.2f} "
+              f"tokens/pass={s['tokens_per_pass']:.2f} "
+              f"(predicted {s['predicted_tokens_per_pass']:.2f}), "
+              f"predicted memory-bound speedup "
+              f"x{s['predicted_speedup']:.2f}")
     first = min(done, key=lambda r: r.request_id)
     print("[serve] first sequence:", first.generated[:16])
 

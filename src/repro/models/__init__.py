@@ -5,6 +5,7 @@ from .model import (
     cross_entropy,
     decode_step,
     decode_step_paged,
+    decode_step_verify_paged,
     init_cache,
     init_params,
     loss_fn,
@@ -21,7 +22,8 @@ from .model import (
 __all__ = [
     "BlockDef", "ModelConfig", "SHAPES", "ShapeCell", "applicable_shapes",
     "abstract_params", "cache_param_defs", "cross_entropy", "decode_step",
-    "decode_step_paged", "init_cache", "init_params", "loss_fn",
-    "model_param_defs", "paged_cache_defs", "param_bytes", "param_count",
-    "param_shardings", "prefill", "prefill_chunk_paged", "prefill_padded",
+    "decode_step_paged", "decode_step_verify_paged", "init_cache",
+    "init_params", "loss_fn", "model_param_defs", "paged_cache_defs",
+    "param_bytes", "param_count", "param_shardings", "prefill",
+    "prefill_chunk_paged", "prefill_padded",
 ]

@@ -226,6 +226,45 @@ def decode_attention_paged(
     return constrain(out, "batch", "seq", "d_model"), {"k": pool_k, "v": pool_v}
 
 
+def decode_verify_paged(
+    p, x: jax.Array, pool: Dict[str, jax.Array], block_tables: jax.Array,
+    pos: jax.Array, cfg: ModelConfig, *, page_size: int,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Multi-token verification decode for every slot (spec decoding).
+
+    x (B, T, D) — the draft chain [last committed token, d_1..d_k] at
+    positions ``pos + t``; pos (B,) the first token's write position.
+    Writes all T K/V lines into the slot's pages, then scores all T query
+    tokens in one page walk (kernels ``paged_attention_verify``).  Writes
+    beyond the slot's reserved pages land on the trash page (block-table
+    entries are 0 there) and rejected-draft writes are unobservable: the
+    causal mask hides positions beyond the committed context and the
+    engine re-feeds the committed token at that position next step,
+    overwriting them — the "rollback" is host-side position bookkeeping.
+    """
+    B, T, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // KV
+    posq = (pos.astype(jnp.int32)[:, None]
+            + jnp.arange(T, dtype=jnp.int32)[None, :])          # (B, T)
+    q, k_new, v_new = _project_qkv(p, x, x, cfg, posq, posq)
+    n_blocks = block_tables.shape[1]
+    blk_idx = jnp.minimum(posq // page_size, n_blocks - 1)
+    blk = jnp.take_along_axis(block_tables, blk_idx, axis=1)    # (B, T)
+    off = posq % page_size
+    pool_k = pool["k"].at[blk, off].set(k_new.astype(pool["k"].dtype))
+    pool_v = pool["v"].at[blk, off].set(v_new.astype(pool["v"].dtype))
+    with jax.named_scope("paged_attention"):
+        o = kernel_ops.paged_attention_verify(
+            q.reshape(B, T, KV, G, hd), pool_k, pool_v, block_tables, pos,
+            scale=1.0 / (hd ** 0.5), soft_cap=cfg.attn_logit_soft_cap,
+            backend=backend).reshape(B, T, H, hd)
+    out = jnp.einsum("bqhx,hxd->bqd", o.astype(x.dtype), p["wo"])
+    return constrain(out, "batch", "seq", "d_model"), {"k": pool_k,
+                                                       "v": pool_v}
+
+
 def prefill_attention_paged(
     p, x: jax.Array, pool: Dict[str, jax.Array], block_table: jax.Array,
     offset: jax.Array, cfg: ModelConfig, *, page_size: int,

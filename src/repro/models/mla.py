@@ -222,6 +222,45 @@ def mla_decode_paged(p, x: jax.Array, pool: Dict[str, jax.Array],
     return out, {"c_kv": pool_c, "k_rope": pool_r}
 
 
+def mla_decode_verify_paged(p, x: jax.Array, pool: Dict[str, jax.Array],
+                            block_tables: jax.Array, pos: jax.Array,
+                            cfg: ModelConfig, *, page_size: int,
+                            backend: Optional[str] = None
+                            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Multi-token MLA verification against the paged latent pool (spec
+    decoding).  x (B, T, D) draft-chain tokens at positions ``pos + t``;
+    pos (B,) first-token write position.  Like :func:`mla_decode_paged`
+    this always runs the absorbed/latent form; all T latent lines are
+    written, then all T queries share one page walk
+    (kernels ``mla_paged_attention_verify``).  Rejected-draft writes are
+    rolled back by host-side position bookkeeping (see
+    attention.decode_verify_paged).
+    """
+    B, T, _ = x.shape
+    dn, dr = cfg.nope_head_dim, cfg.rope_head_dim
+    posq = (pos.astype(jnp.int32)[:, None]
+            + jnp.arange(T, dtype=jnp.int32)[None, :])          # (B, T)
+    q_nope, q_rope = _queries(p, x, posq, cfg)                  # (B,T,H,*)
+    c_new, kr_new = _latent_kv(p, x, posq, cfg)                 # (B,T,*)
+    n_blocks = block_tables.shape[1]
+    blk_idx = jnp.minimum(posq // page_size, n_blocks - 1)
+    blk = jnp.take_along_axis(block_tables, blk_idx, axis=1)
+    off = posq % page_size
+    pool_c = pool["c_kv"].at[blk, off].set(c_new.astype(pool["c_kv"].dtype))
+    pool_r = pool["k_rope"].at[blk, off].set(
+        kr_new.astype(pool["k_rope"].dtype))
+    scale = 1.0 / ((dn + dr) ** 0.5)
+    q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"])     # (B,T,H,r)
+    with jax.named_scope("paged_attention"):
+        o_lat = kernel_ops.mla_paged_attention_verify(
+            q_lat, q_rope, pool_c, pool_r, block_tables, pos,
+            scale=scale, backend=backend)                       # (B,T,H,r)
+    o = jnp.einsum("bqhr,rhk->bqhk", o_lat.astype(x.dtype), p["wv_b"])
+    out = jnp.einsum("bqhk,hkd->bqd", o, p["wo"])
+    out = constrain(out, "batch", "seq", "d_model")
+    return out, {"c_kv": pool_c, "k_rope": pool_r}
+
+
 def mla_prefill_paged(p, x: jax.Array, pool: Dict[str, jax.Array],
                       block_table: jax.Array, offset: jax.Array,
                       cfg: ModelConfig, *, page_size: int

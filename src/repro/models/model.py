@@ -136,6 +136,20 @@ def decode_step_paged(params, cfg: ModelConfig, pools: List[Any],
                                 active, page_size=page_size, backend=backend)
 
 
+def decode_step_verify_paged(params, cfg: ModelConfig, pools: List[Any],
+                             block_tables: jax.Array, tokens: jax.Array,
+                             pos: jax.Array, active: jax.Array, *,
+                             page_size: int,
+                             backend: Optional[str] = None):
+    """Multi-token speculative verification: score tokens (B, T) — per
+    slot the chain [last committed token, draft_1..draft_k] at positions
+    ``pos + t`` — in one weight pass against the paged cache.  Returns
+    logits (B, T, V) and updated pools.  Attention/MLA archs only."""
+    return tfm.decode_verify_paged(params, cfg, pools, block_tables, tokens,
+                                   pos, active, page_size=page_size,
+                                   backend=backend)
+
+
 def prefill_chunk_paged(params, cfg: ModelConfig, pools: List[Any],
                         block_table: jax.Array, slot: jax.Array,
                         tokens: jax.Array, offset: jax.Array,

@@ -276,6 +276,35 @@ def apply_block_decode(p, b: BlockDef, x: jax.Array, cache: Dict[str, Any],
     return x, cache
 
 
+def apply_block_verify(p, b: BlockDef, x: jax.Array, cache: Dict[str, Any],
+                       pos: jax.Array, cfg: ModelConfig,
+                       paged: Dict[str, Any]
+                       ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Multi-token verification through one block (spec decoding).
+
+    x (B, T, D) draft-chain tokens at per-slot positions ``pos + t``.
+    Attention-family mixers only: a recurrent mixer's state advance cannot
+    be rolled back when drafts are rejected, so speculative decoding is
+    gated on attention/MLA archs (serve.spec.supports_spec).
+    """
+    h = apply_norm(p["norm1"], x, cfg)
+    if b.mixer == "attn":
+        o, cache = attn.decode_verify_paged(
+            p["mixer"], h, cache, paged["block_tables"], pos, cfg,
+            page_size=paged["page_size"], backend=paged.get("backend"))
+    elif b.mixer == "mla":
+        o, cache = mla_mod.mla_decode_verify_paged(
+            p["mixer"], h, cache, paged["block_tables"], pos, cfg,
+            page_size=paged["page_size"], backend=paged.get("backend"))
+    else:
+        raise NotImplementedError(
+            f"speculative verification needs a rollback-free cache; mixer "
+            f"{b.mixer!r} carries recurrent state (attn/mla only)")
+    x = x + cfg.residual_scale * o
+    x, _ = _ffn_tail(p, b, x, cfg)
+    return x, cache
+
+
 def _cross_attend_cached(p, x, ck, cv, cfg: ModelConfig) -> jax.Array:
     B, S, D = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -492,6 +521,53 @@ def decode_one_paged(params, cfg: ModelConfig, pools: List[Any],
     x = apply_norm(params["final_norm"], x, cfg)
     logits = logits_from_hidden(params["embed"], x, cfg)
     return logits[:, 0, :], new_pools
+
+
+def decode_verify_paged(params, cfg: ModelConfig, pools: List[Any],
+                        block_tables: jax.Array, tokens: jax.Array,
+                        pos: jax.Array, active: jax.Array, *,
+                        page_size: int, backend: Optional[str] = None
+                        ) -> Tuple[jax.Array, List[Any]]:
+    """Score T = k+1 draft-chain tokens per slot in ONE weight pass.
+
+    tokens (B, T) int32 — per slot: [last committed token, draft_1..
+    draft_k]; pos (B,) the first token's position (= context_len - 1);
+    block_tables / active as in :func:`decode_one_paged`.  Returns logits
+    (B, T, V) — logits[:, t] is the target distribution after draft token
+    t, i.e. what one sequential decode step would have produced — plus the
+    updated pools (all T K/V lines written; rejected positions are
+    overwritten when the real token is later fed there).
+
+    This is the roofline payoff of the speculative subsystem: the weight
+    read (the dominant Q term of memory-bound decode) and the KV page walk
+    are paid once for T scored tokens, so measured arithmetic intensity
+    approaches T * I_decode under the same memory ceiling (paper eq. 1).
+    """
+    B, T = tokens.shape
+    posq = (pos.astype(jnp.int32)[:, None]
+            + jnp.arange(T, dtype=jnp.int32)[None, :])
+    x = embed_tokens(params["embed"], tokens, cfg, posq)
+    paged = {"block_tables": block_tables, "page_size": page_size,
+             "active": active, "backend": backend}
+    new_pools: List[Any] = []
+    for seg_params, seg_pool, (unit, reps) in zip(
+            params["segments"], pools, cfg.segments()):
+
+        def body(y, args):
+            layer_p, layer_c = args
+            new_c = {}
+            for i, b in enumerate(unit):
+                y, c = apply_block_verify(layer_p[f"b{i}"], b, y,
+                                          layer_c[f"b{i}"], pos, cfg,
+                                          paged)
+                new_c[f"b{i}"] = c
+            return y, new_c
+
+        x, upd = jax.lax.scan(body, x, (seg_params, seg_pool))
+        new_pools.append(upd)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = logits_from_hidden(params["embed"], x, cfg)
+    return logits, new_pools
 
 
 def _slot_rows(tree, slot):

@@ -1,11 +1,17 @@
 from . import sampling
 from .engine import Engine, EngineConfig, GenerateConfig, StaticEngine
 from .kv_cache import PagedKVCache, supports_paging
+from .proposer import DraftModelProposer, NgramProposer, Proposal
 from .scheduler import Request, RequestState, RooflineLedger, Scheduler
+from .spec import (SpecConfig, SpecEngine, spec_expected_tokens_per_pass,
+                   spec_speedup_model, supports_spec)
 
 __all__ = [
     "Engine", "EngineConfig", "GenerateConfig", "StaticEngine",
     "PagedKVCache", "supports_paging",
     "Request", "RequestState", "RooflineLedger", "Scheduler",
+    "DraftModelProposer", "NgramProposer", "Proposal",
+    "SpecConfig", "SpecEngine", "spec_expected_tokens_per_pass",
+    "spec_speedup_model", "supports_spec",
     "sampling",
 ]

@@ -19,6 +19,17 @@ scope's measured bytes are swapped for the kernel pricing
 The decode-only step is characterized (without the fused sampling tail):
 the ledger models decode; sampling adds O(B * V) sort/RNG traffic that is
 deliberately outside the ledger's W/Q.
+
+Speculative phase split: :func:`crosscheck_verify` runs the same loop for
+the multi-token *verification* step (models.decode_step_verify_paged, the
+speculative subsystem's target-model pass) — per-phase attribution in the
+spirit of the time-based / hierarchical roofline follow-ups (arXiv
+2009.04598, 2009.05257).  The substitution prices the verify kernel's
+shared page walk ((L + 2T - 1) lines, see
+substitute.paged_attention_kernel_bytes ``n_q``), so the cross-check
+confirms the claim the whole subsystem rests on: W scales by T while Q
+stays ~flat, i.e. measured arithmetic intensity really does approach
+T * I_decode.
 """
 
 from __future__ import annotations
@@ -30,10 +41,10 @@ import jax.numpy as jnp
 
 from repro.core.roofline import extract
 from repro.core.roofline.substitute import substitute_paged_attention
-from repro.models import decode_step_paged
+from repro.models import decode_step_paged, decode_step_verify_paged
 
 from .scheduler import (decode_token_bytes, decode_token_flops,
-                        kv_line_bytes)
+                        kv_line_bytes, params_bytes_active, state_bytes)
 
 
 def decode_step_character(engine) -> extract.StepCharacter:
@@ -91,4 +102,73 @@ def crosscheck_decode(engine, requests: Optional[List] = None) -> Dict:
         "bytes_ratio": analytic_bytes / max(hlo["hbm_bytes_dev"], 1.0),
         "substituted": sub is not None,
         "contexts": contexts,
+    }
+
+
+def verify_step_character(engine, n_tokens: int) -> extract.StepCharacter:
+    """Compile the speculative engine's multi-token verification step
+    (jnp reference backend) at its current shapes and characterize it."""
+    if engine._kv is None:
+        raise ValueError("engine has no live pool; submit work or reset()")
+    cfg, kv, e = engine.cfg, engine._kv, engine.ecfg
+    ps, T = e.page_size, n_tokens
+
+    def step(p, pools, bt, toks, pos, act):
+        return decode_step_verify_paged(p, cfg, pools, bt, toks, pos, act,
+                                        page_size=ps, backend="jnp")
+
+    B = e.num_slots
+    abstract = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+        (engine.params, kv.pools,
+         jnp.zeros((B, kv.blocks_per_slot), jnp.int32),
+         jnp.zeros((B, T), jnp.int32), jnp.zeros((B,), jnp.int32),
+         jnp.zeros((B,), bool)))
+    compiled = jax.jit(step).lower(*abstract).compile()
+    return extract.characterize(compiled)
+
+
+def crosscheck_verify(engine, requests: Optional[List] = None,
+                      n_tokens: Optional[int] = None) -> Dict:
+    """Ledger <-> HLO cross-check for ONE speculative verification step
+    (the draft/verify phase split of the decode cross-check above).
+
+    The analytic side is exactly what RooflineLedger.add_verify_step
+    charges each request: T scored tokens per weight pass, one shared page
+    walk.  ``engine`` is a serve.spec.SpecEngine (or any engine, with
+    ``n_tokens`` given explicitly)."""
+    cfg = engine.cfg
+    if n_tokens is None:
+        n_tokens = engine.scfg.k + 1
+    T = n_tokens
+    if requests is None:
+        requests = engine._sched.decode_requests()
+    if not requests:
+        raise ValueError("no decoding requests to cross-check")
+    contexts = [r.context_len for r in requests]
+    n_active = len(contexts)
+    line = kv_line_bytes(cfg)
+
+    analytic_flops = sum(decode_token_flops(cfg, L + t)
+                         for L in contexts for t in range(T))
+    analytic_bytes = sum(
+        params_bytes_active(cfg) / n_active + (L + 2 * T - 1) * line
+        + 2 * state_bytes(cfg) for L in contexts)
+
+    char = extract.character_as_dict(verify_step_character(engine, T))
+    sub = substitute_paged_attention(char, contexts, line, n_q=T)
+    hlo = sub or char
+    return {
+        "analytic_flops": analytic_flops,
+        "analytic_bytes": analytic_bytes,
+        "hlo_flops": hlo["flops_dev"],
+        "hlo_bytes": hlo["hbm_bytes_dev"],
+        "hlo_bytes_raw": char["hbm_bytes_dev"],
+        "scope_bytes_raw": (char.get("scopes", {})
+                            .get("paged_attention", {}).get("bytes", 0.0)),
+        "flops_ratio": analytic_flops / max(hlo["flops_dev"], 1.0),
+        "bytes_ratio": analytic_bytes / max(hlo["hbm_bytes_dev"], 1.0),
+        "substituted": sub is not None,
+        "contexts": contexts,
+        "n_tokens": T,
     }

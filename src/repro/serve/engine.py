@@ -31,6 +31,7 @@ so for MLA archs the static engine matches byte-for-byte when
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -52,6 +53,7 @@ class GenerateConfig:
     max_new_tokens: int = 32
     temperature: float = 0.0          # 0 = greedy
     top_k: int = 0                    # 0 = no top-k filter
+    top_p: float = 0.0                # nucleus mass (0 or >= 1 = off)
     stop_token: Optional[int] = None
 
 
@@ -144,7 +146,8 @@ class StaticEngine:
             logits, kd,                       # logits stay on device
             np.full((B,), i, np.int32),
             np.full((B,), temp, np.float32),
-            np.full((B,), gen.top_k, np.int32))
+            np.full((B,), gen.top_k, np.int32),
+            np.full((B,), gen.top_p, np.float32))
         return jnp.asarray(toks)
 
 
@@ -202,7 +205,8 @@ class Engine:
                 max_len=max_len or self.ecfg.max_len)
             self.ecfg = e
         self._kv = PagedKVCache(self.cfg, e.num_slots, e.page_size,
-                                e.max_len, num_pages=e.num_pages)
+                                e.max_len, num_pages=e.num_pages,
+                                margin_tokens=self._kv_margin())
         self._sched = Scheduler(self.cfg, self._kv,
                                 prefill_chunk=e.prefill_chunk)
         self._next_token = np.zeros((e.num_slots,), np.int32)
@@ -213,14 +217,15 @@ class Engine:
         self._steps = np.zeros((e.num_slots,), np.int32)
         self._temps = np.zeros((e.num_slots,), np.float32)
         self._top_ks = np.zeros((e.num_slots,), np.int32)
+        self._top_ps = np.zeros((e.num_slots,), np.float32)
         cfg, ps, be = self.cfg, e.page_size, e.kernel_backend
 
         def _decode_sample(p, pools, bt, tok, pos, act, kd, steps, temps,
-                           top_ks):
+                           top_ks, top_ps):
             logits, pools = decode_step_paged(
                 p, cfg, pools, bt, tok, pos, act, page_size=ps, backend=be)
             return sampling.sample_tokens(logits, kd, steps, temps,
-                                          top_ks), pools
+                                          top_ks, top_ps), pools
 
         self._decode_fn = jax.jit(_decode_sample)
         # jit handles per-chunk-length retracing under one cache
@@ -238,6 +243,12 @@ class Engine:
         self.prefill_shapes: set = set()
         self.step_count = 0
         self.decode_steps = 0
+
+    def _kv_margin(self) -> int:
+        """Block-table margin (tokens) past ``max_len``; the speculative
+        subclass widens this so verify writes near the budget edge stay on
+        legal (trash) table entries."""
+        return 0
 
     def _ensure(self, budget: int) -> None:
         if self._kv is None:
@@ -258,7 +269,8 @@ class Engine:
         self._ensure(prompt.shape[0] + gen.max_new_tokens)
         req = Request(prompt=prompt, max_new_tokens=gen.max_new_tokens,
                       temperature=gen.temperature, top_k=gen.top_k,
-                      stop_token=gen.stop_token, rng=rng)
+                      top_p=gen.top_p, stop_token=gen.stop_token, rng=rng,
+                      submit_time=time.perf_counter())
         return self._sched.submit(req)
 
     def step(self) -> List[Request]:
@@ -352,7 +364,8 @@ class Engine:
             self.params, kv.pools, bt, jnp.asarray(token[:, None]),
             jnp.asarray(pos), jnp.asarray(active),
             jnp.asarray(self._key_data), jnp.asarray(self._steps),
-            jnp.asarray(self._temps), jnp.asarray(self._top_ks))
+            jnp.asarray(self._temps), jnp.asarray(self._top_ks),
+            jnp.asarray(self._top_ps))
         self.decode_steps += 1
         tok_np = np.asarray(next_tok)
         n_active = len(running)
@@ -363,6 +376,7 @@ class Engine:
     def _commit_token(self, req: Request, tok: int, first: bool = False)\
             -> None:
         req.generated.append(tok)
+        req.token_times.append(time.perf_counter())
         if first:
             req.state = RequestState.RUNNING
         if req.stop_token is not None and tok == req.stop_token:
@@ -382,6 +396,7 @@ class Engine:
         self._key_data[slot] = sampling.key_data(req.rng)
         self._temps[slot] = req.temperature if req.rng is not None else 0.0
         self._top_ks[slot] = req.top_k
+        self._top_ps[slot] = req.top_p
         self._steps[slot] = 0
 
     def _sample_first(self, last_logits: jax.Array, req: Request) -> int:
@@ -392,7 +407,8 @@ class Engine:
             self._key_data[req.slot][None],
             np.asarray([len(req.generated)], np.int32),
             np.asarray([self._temps[req.slot]], np.float32),
-            np.asarray([self._top_ks[req.slot]], np.int32))
+            np.asarray([self._top_ks[req.slot]], np.int32),
+            np.asarray([self._top_ps[req.slot]], np.float32))
         return int(tok[0])
 
     # -- batch compatibility API -------------------------------------------

@@ -60,7 +60,13 @@ class PagedKVCache:
 
     def __init__(self, cfg: ModelConfig, num_slots: int, page_size: int,
                  max_len: int, num_pages: Optional[int] = None,
-                 key: Optional[jax.Array] = None):
+                 key: Optional[jax.Array] = None, margin_tokens: int = 0):
+        """``margin_tokens`` widens every block table past the ``max_len``
+        admission ceiling WITHOUT backing pages: speculative verification
+        writes up to k draft lines beyond a request's committed context,
+        and near the end of its budget those positions must still resolve
+        to a legal table entry.  Margin entries stay 0 (the trash page),
+        so overflow writes land harmlessly and never alias live pages."""
         if not supports_paging(cfg):
             raise NotImplementedError(
                 f"{cfg.name}: paged KV cache supports decoder-only archs "
@@ -68,11 +74,14 @@ class PagedKVCache:
         self.cfg = cfg
         self.num_slots = num_slots
         self.page_size = page_size
-        self.blocks_per_slot = max(1, math.ceil(max_len / page_size))
-        self.max_len = self.blocks_per_slot * page_size
+        admit_blocks = max(1, math.ceil(max_len / page_size))
+        self.blocks_per_slot = admit_blocks + math.ceil(
+            margin_tokens / page_size)
+        self.max_len = admit_blocks * page_size
         if num_pages is None:
-            # full backing store + the reserved trash page
-            num_pages = 1 + num_slots * self.blocks_per_slot
+            # full backing store + the reserved trash page (margin blocks
+            # are never backed — they always point at the trash page)
+            num_pages = 1 + num_slots * admit_blocks
         self.num_pages = num_pages
 
         defs = tfm.paged_cache_defs(cfg, num_slots, num_pages, page_size)
@@ -108,16 +117,22 @@ class PagedKVCache:
                 and bool(self._free_slots)
                 and self.pages_needed(n_tokens) <= len(self._free_pages))
 
-    def alloc(self, n_tokens: int) -> Optional[int]:
+    def alloc(self, n_tokens: int, slot: Optional[int] = None
+              ) -> Optional[int]:
         """Reserve a slot plus pages for an ``n_tokens`` context.  Returns
-        the slot id, or None if slots/pages are exhausted."""
+        the slot id, or None if slots/pages are exhausted.  ``slot`` pins
+        a specific free slot — a draft-model cache mirroring the target
+        engine must pack its batch by the target's slot indices."""
         n_pages = self.pages_needed(n_tokens)
         if n_tokens > self.max_len:
             raise ValueError(f"request needs {n_tokens} tokens > "
                              f"max_len {self.max_len}")
         if not self._free_slots or n_pages > len(self._free_pages):
             return None
-        slot = self._free_slots.pop()
+        if slot is None:
+            slot = self._free_slots.pop()
+        else:
+            self._free_slots.remove(slot)
         pages = [self._free_pages.pop() for _ in range(n_pages)]
         self._slot_pages[slot] = pages
         row = np.zeros((self.blocks_per_slot,), np.int32)
@@ -192,7 +207,9 @@ class PagedKVCache:
         def f(pool, paged):
             if paged:
                 g = pool[:, row]                    # (reps, blocks, page, ...)
-                return g.reshape(g.shape[0], 1, self.max_len, *g.shape[3:])
+                return g.reshape(g.shape[0], 1,
+                                 self.blocks_per_slot * self.page_size,
+                                 *g.shape[3:])[:, :, : self.max_len]
             return jax.lax.dynamic_slice_in_dim(pool, slot, 1, axis=1)
 
         return [jax.tree.map(f, seg, flag)

@@ -1,0 +1,273 @@
+"""Draft-token proposers for the speculative-decoding subsystem.
+
+A proposer fills the ``k`` draft slots of each verification round (see
+serve/spec.py).  Two flavors, spanning the cost/quality space the
+roofline model cares about:
+
+* :class:`NgramProposer` — weight-free prompt-lookup (Saxena-style): the
+  last n-gram of the request's committed tokens is matched against its own
+  earlier context and the continuation is replayed.  Zero FLOPs, zero HBM
+  traffic, host-side; the proposal is deterministic, so its ``q`` is a
+  one-hot and the acceptance rule degenerates to ``min(1, p(d))``.
+  Strong on self-repetitive streams (code, extraction, summaries quoting
+  the prompt), silent otherwise — a silent round still verifies the one
+  committed token, costing one ordinary decode step scored at T tokens.
+
+* :class:`DraftModelProposer` — a small draft model sharing the engine
+  machinery wholesale: its own :class:`PagedKVCache` packed by the SAME
+  slot indices as the target engine, the same multi-token paged
+  verification step for catching up on committed tokens (the draft must
+  re-ingest whatever the target actually committed — accepted drafts,
+  corrected tokens, the bonus token — before drafting again; its own
+  stale speculative writes are simply overwritten), and the same fused
+  sampling helper, extended to return the full proposal distribution
+  ``q`` that the rejection-sampling acceptance rule needs.
+
+Both proposers return a :class:`Proposal`; slots the proposer has nothing
+for carry ``n_draft = 0`` and are verified as ordinary decode steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import (decode_step_paged, decode_step_verify_paged,
+                          prefill, prefill_padded)
+from repro.models.common import ModelConfig
+
+from . import sampling
+from .engine import _bucket_len
+from .kv_cache import PagedKVCache
+from .scheduler import Request
+
+# fold tag deriving the draft model's RNG stream from the request key —
+# draft draws must be independent of the target's token/accept streams
+DRAFT_FOLD = 0xd4af7
+
+
+@dataclasses.dataclass
+class Proposal:
+    """One round of drafts for the packed slot batch.
+
+    draft (num_slots, k) int32 — rows beyond ``n_draft`` are padding;
+    n_draft (num_slots,) int32; q_probs (num_slots, k, V) proposal
+    distributions on device, or None for a deterministic proposer (the
+    acceptance rule then treats q as the one-hot at the draft token);
+    n_catchup (num_slots,) tokens a draft model re-ingested this round
+    (0 for weight-free proposers) — the ledger's draft-phase accounting.
+    """
+    draft: np.ndarray
+    n_draft: np.ndarray
+    q_probs: Optional[jax.Array] = None
+    n_catchup: Optional[np.ndarray] = None
+
+
+def ngram_propose(tokens: np.ndarray, k: int, max_n: int = 3,
+                  min_n: int = 1) -> np.ndarray:
+    """Prompt-lookup: longest-suffix n-gram match against the request's own
+    context (prompt + generated).  Among occurrences, the most recent one
+    with a full k-token continuation wins (falling back to the most recent
+    overall, whose continuation may be shorter).  Returns up to k tokens
+    (possibly empty)."""
+    L = int(tokens.shape[0])
+    for n in range(min(max_n, L - 1), min_n - 1, -1):
+        pat = tokens[L - n:]
+        best = -1
+        for i in range(L - n - 1, -1, -1):
+            if i + n < L and np.array_equal(tokens[i:i + n], pat):
+                if i + n + k <= L:
+                    return np.asarray(tokens[i + n: i + n + k], np.int32)
+                best = max(best, i)
+        if best >= 0:
+            return np.asarray(tokens[best + n: best + n + k], np.int32)
+    return np.zeros((0,), np.int32)
+
+
+class NgramProposer:
+    """Weight-free prompt-lookup proposer (host-side, O(L * n) per slot)."""
+
+    kind = "ngram"
+
+    def __init__(self, num_slots: int, k: int, max_n: int = 3,
+                 min_n: int = 1):
+        self.num_slots = num_slots
+        self.k = k
+        self.max_n = max_n
+        self.min_n = min_n
+
+    def propose(self, running: List[Request]) -> Proposal:
+        B, k = self.num_slots, self.k
+        draft = np.zeros((B, k), np.int32)
+        n_draft = np.zeros((B,), np.int32)
+        for req in running:
+            cand = ngram_propose(req.tokens, k, self.max_n, self.min_n)
+            draft[req.slot, : cand.shape[0]] = cand
+            n_draft[req.slot] = cand.shape[0]
+        return Proposal(draft=draft, n_draft=n_draft)
+
+    def release(self, req: Request) -> None:
+        pass
+
+
+class DraftModelProposer:
+    """A small draft model run through the same engine machinery.
+
+    Owns a second :class:`PagedKVCache` whose slots mirror the target
+    engine's (``alloc(slot=...)`` pins the index so both packed batches
+    line up lane for lane).  Per round and per active slot it (1) catches
+    up: feeds the tokens the target committed since last round — a
+    variable-length (padded to k+1) multi-token paged forward, the same
+    ``decode_step_verify_paged`` the verifier uses — and (2) drafts k
+    tokens autoregressively with :func:`sampling.sample_with_probs`, so
+    the verifier receives the true proposal distribution ``q`` of every
+    drafted token.
+    """
+
+    kind = "draft"
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, num_slots: int,
+                 page_size: int, max_len: int, k: int,
+                 backend: Optional[str] = None,
+                 prefill_bucket: int = 8):
+        self.cfg = cfg
+        self.params = params
+        self.num_slots = num_slots
+        self.k = k
+        self.prefill_bucket = prefill_bucket
+        self.kv = PagedKVCache(cfg, num_slots, page_size, max_len,
+                               margin_tokens=k + 1)
+        self._slots: Dict[int, int] = {}        # request_id -> draft slot
+        self._fed: Dict[int, int] = {}          # request_id -> tokens fed
+        ksize = sampling.key_data(None).shape[0]
+        self._kd = np.zeros((num_slots, ksize), np.uint32)
+        self._dsteps = np.zeros((num_slots,), np.int32)
+        self._temps = np.zeros((num_slots,), np.float32)
+        self._top_ks = np.zeros((num_slots,), np.int32)
+        self._top_ps = np.zeros((num_slots,), np.float32)
+        ps, be = page_size, backend
+
+        # length-bucketed prefill needs per-token collected states: an MoE
+        # FFN's capacity cutoffs would see the pad tokens (the same guard
+        # as Engine._bucketable; mixers are already attn/MLA-only here)
+        self._bucketable = all(b.ffn != "moe" for b in cfg.block_pattern)
+        self._prefill_fn = jax.jit(
+            lambda p, toks, n: prefill_padded(p, cfg, toks, n))
+        self._prefill_exact_fn = jax.jit(
+            lambda p, toks: prefill(p, cfg, toks))
+        self._catchup_fn = jax.jit(
+            lambda p, pools, bt, toks, pos, act: decode_step_verify_paged(
+                p, cfg, pools, bt, toks, pos, act, page_size=ps,
+                backend=be))
+
+        def _draft_step(p, pools, bt, tok, pos, act, kd, steps, temps,
+                        top_ks, top_ps):
+            logits, pools = decode_step_paged(
+                p, cfg, pools, bt, tok, pos, act, page_size=ps, backend=be)
+            t, q = sampling.sample_with_probs(logits, kd, steps, temps,
+                                              top_ks, top_ps)
+            return t, q, pools
+
+        self._draft_fn = jax.jit(_draft_step)
+        self._sample_fn = jax.jit(sampling.sample_with_probs)
+
+    # -- per-request lifecycle --------------------------------------------
+
+    def _admit(self, req: Request) -> None:
+        slot = self.kv.alloc(req.budget, slot=req.slot)
+        if slot is None:
+            raise RuntimeError(
+                f"draft cache out of pages for request "
+                f"{req.request_id} (budget {req.budget}, "
+                f"{self.kv.free_page_count} free) — the draft pool must "
+                "mirror the target engine's sizing")
+        self._slots[req.request_id] = slot
+        L = req.prompt_len
+        if self._bucketable:
+            toks = np.zeros((1, _bucket_len(L, self.prefill_bucket)),
+                            np.int32)
+            toks[0, :L] = req.prompt
+            _, states = self._prefill_fn(self.params, jnp.asarray(toks),
+                                         jnp.int32(L))
+        else:
+            _, states = self._prefill_exact_fn(
+                self.params, jnp.asarray(req.prompt[None, :]))
+        self.kv.write_prefill_states(slot, states, L)
+        self._fed[req.request_id] = L
+        rng_d = (None if req.rng is None
+                 else jax.random.fold_in(req.rng, DRAFT_FOLD))
+        self._kd[slot] = sampling.key_data(rng_d)
+        self._temps[slot] = req.temperature if req.rng is not None else 0.0
+        self._top_ks[slot] = req.top_k
+        self._top_ps[slot] = req.top_p
+        self._dsteps[slot] = 0
+
+    def release(self, req: Request) -> None:
+        slot = self._slots.pop(req.request_id, None)
+        if slot is not None:
+            self.kv.free(slot)
+            self._fed.pop(req.request_id, None)
+
+    # -- one proposal round ------------------------------------------------
+
+    def propose(self, running: List[Request]) -> Proposal:
+        B, k = self.num_slots, self.k
+        Tc = k + 1
+        for req in running:
+            if req.request_id not in self._slots:
+                self._admit(req)
+
+        # 1. catch up on the tokens the target committed since last round
+        feed = np.zeros((B, Tc), np.int32)
+        pos = np.zeros((B,), np.int32)
+        n_pend = np.zeros((B,), np.int32)
+        act = np.zeros((B,), bool)
+        for req in running:
+            s = req.slot
+            fed = self._fed[req.request_id]
+            pend = req.tokens[fed:]
+            assert 1 <= pend.shape[0] <= Tc
+            feed[s, : pend.shape[0]] = pend
+            feed[s, pend.shape[0]:] = pend[-1]
+            pos[s] = fed
+            n_pend[s] = pend.shape[0]
+            act[s] = True
+            self._fed[req.request_id] = fed + pend.shape[0]
+        bt = self.kv.block_tables_for([r.slot for r in running])
+        logits, self.kv.pools = self._catchup_fn(
+            self.params, self.kv.pools, bt, jnp.asarray(feed),
+            jnp.asarray(pos), jnp.asarray(act))
+        last = jnp.take_along_axis(
+            logits, jnp.asarray(np.maximum(n_pend - 1, 0))[:, None, None],
+            axis=1)[:, 0]                                       # (B, V)
+
+        # 2. draft k tokens autoregressively, collecting q distributions
+        cur_pos = pos + n_pend                   # position of draft token 1
+        toks: List[jax.Array] = []
+        qs: List[jax.Array] = []
+        tok, q = self._sample_fn(
+            last, jnp.asarray(self._kd), jnp.asarray(self._dsteps),
+            jnp.asarray(self._temps), jnp.asarray(self._top_ks),
+            jnp.asarray(self._top_ps))
+        self._dsteps[act] += 1
+        toks.append(tok)
+        qs.append(q)
+        for i in range(1, k):
+            tok, q, self.kv.pools = self._draft_fn(
+                self.params, self.kv.pools, bt, tok[:, None],
+                jnp.asarray(cur_pos + i - 1), jnp.asarray(act),
+                jnp.asarray(self._kd), jnp.asarray(self._dsteps),
+                jnp.asarray(self._temps), jnp.asarray(self._top_ks),
+                jnp.asarray(self._top_ps))
+            self._dsteps[act] += 1
+            toks.append(tok)
+            qs.append(q)
+        draft = np.stack([np.asarray(t) for t in toks], axis=1)
+        n_draft = np.where(act, k, 0).astype(np.int32)
+        return Proposal(draft=draft.astype(np.int32), n_draft=n_draft,
+                        q_probs=jnp.stack(qs, axis=1),
+                        n_catchup=np.where(act, n_pend, 0).astype(np.int32))

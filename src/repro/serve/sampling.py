@@ -22,6 +22,17 @@ Semantics (per row ``b``):
   ``categorical`` commute with ``vmap``.
 * ``top_ks[b] > 0``  -> logits outside the top-k are masked to -inf before
   the draw (ties at the k-th value are all kept, the usual caveat).
+* ``0 < top_ps[b] < 1`` -> nucleus (top-p) filter: only the smallest set
+  of tokens whose probability mass reaches ``top_ps[b]`` survives.  Both
+  filters share ONE descending sort (the O(V log V) the top-k pass already
+  pays), so adding top-p costs a cumsum, not a second sort.
+
+This module also hosts the speculative-decoding acceptance rule
+(:func:`spec_accept`): the Leviathan/Chen rejection-sampling step that
+makes draft/verify serving distribution-preserving — greedy output is
+byte-identical to sequential decode, and sampled output is drawn from
+exactly the target (filtered, tempered) distribution whatever the
+proposal was.
 
 Key derivation is unified across engines: a whole-batch ``rng`` becomes
 per-row streams via ``fold_in(rng, row)`` (:func:`batch_key_data`), and
@@ -60,34 +71,76 @@ def batch_key_data(rng: Optional[jax.Array], batch: int) -> np.ndarray:
     return np.asarray(keys, np.uint32)
 
 
-def _top_k_mask(logits: jax.Array, top_ks: jax.Array) -> jax.Array:
-    """Mask logits outside each row's top-k (0 = keep all).
+def _filter_logits(logits: jax.Array, top_ks: jax.Array,
+                   top_ps: Optional[jax.Array] = None,
+                   temps: Optional[jax.Array] = None) -> jax.Array:
+    """Mask logits outside each row's top-k and/or nucleus (0 = keep all).
 
     ``top_ks`` is traced, so the k-th threshold comes from a full
     descending sort + per-row gather rather than ``lax.top_k`` (whose k
-    must be static).  O(V log V) per step — fine for the vocab sizes
-    served here; swap for a partitioned threshold pass if V ever dominates
-    the decode step.
+    must be static).  The top-p threshold rides the SAME sorted array: the
+    nucleus is the shortest prefix of the descending-probability order
+    whose mass reaches ``top_ps`` (the first token always survives), and
+    membership reduces to a per-row logit threshold.  Nucleus mass is
+    measured on the TEMPERED distribution — the one actually sampled from
+    (temperature-then-top-p, the HF/vLLM convention).  One O(V log V)
+    sort serves both filters — swap for a partitioned threshold pass if V
+    ever dominates the decode step.  Ties at either threshold are all
+    kept, the usual caveat.
     """
     V = logits.shape[-1]
     sorted_desc = -jnp.sort(-logits, axis=-1)
     idx = jnp.clip(top_ks.astype(jnp.int32) - 1, 0, V - 1)
     thresh = jnp.take_along_axis(sorted_desc, idx[:, None], axis=-1)
     keep = (top_ks[:, None] <= 0) | (logits >= thresh)
+    if top_ps is not None:
+        # sequential-filter semantics: the nucleus is measured on the
+        # top-k-masked, renormalized distribution.  In sorted order the
+        # top-k survivors are exactly the first k ranks, so the mask is a
+        # rank iota — no second sort.
+        scaled = sorted_desc.astype(jnp.float32)
+        if temps is not None:
+            safe_t = jnp.maximum(temps, 1e-6).astype(jnp.float32)
+            scaled = scaled / safe_t[:, None]
+        rank = jax.lax.broadcasted_iota(jnp.int32, scaled.shape, 1)
+        in_k = (top_ks[:, None] <= 0) | (rank < top_ks[:, None])
+        probs_desc = jax.nn.softmax(jnp.where(in_k, scaled, NEG_INF),
+                                    axis=-1)
+        mass_before = jnp.cumsum(probs_desc, axis=-1) - probs_desc
+        n_keep = jnp.sum(in_k & (mass_before < top_ps[:, None]),
+                         axis=-1)                                  # >= 1
+        p_thresh = jnp.take_along_axis(
+            sorted_desc, jnp.clip(n_keep - 1, 0, V - 1)[:, None], axis=-1)
+        off = (top_ps[:, None] <= 0.0) | (top_ps[:, None] >= 1.0)
+        keep = keep & (off | (logits >= p_thresh))
     return jnp.where(keep, logits, NEG_INF)
 
 
+def _maybe_filter(logits: jax.Array, top_ks: jax.Array,
+                  top_ps: Optional[jax.Array],
+                  temps: Optional[jax.Array] = None) -> jax.Array:
+    """Apply the filters only when some row asks for them (the sort sits
+    behind ``lax.cond`` so unfiltered batches never pay it)."""
+    want = jnp.any(top_ks > 0)
+    if top_ps is not None:
+        want = want | jnp.any((top_ps > 0.0) & (top_ps < 1.0))
+    return jax.lax.cond(
+        want, lambda l: _filter_logits(l, top_ks, top_ps, temps),
+        lambda l: l, logits)
+
+
 def sample_tokens(logits: jax.Array, key_data_rows: jax.Array,
-                  steps: jax.Array, temps: jax.Array, top_ks: jax.Array
-                  ) -> jax.Array:
-    """Batched greedy/temperature/top-k sampling.
+                  steps: jax.Array, temps: jax.Array, top_ks: jax.Array,
+                  top_ps: Optional[jax.Array] = None) -> jax.Array:
+    """Batched greedy/temperature/top-k/top-p sampling.
 
     logits (B, V) float; key_data_rows (B, key_size) uint32 per-row RNG
     streams; steps (B,) int32 fold-in indices (the request's generated
-    count); temps (B,) float32; top_ks (B,) int32.  Returns (B,) int32.
+    count); temps (B,) float32; top_ks (B,) int32; top_ps (B,) float32
+    nucleus mass (None / <=0 / >=1 = off).  Returns (B,) int32.
 
     An all-greedy batch (every temp <= 0 — the serving default) reduces
-    to argmax at runtime: the top-k sort and the Gumbel draws sit behind
+    to argmax at runtime: the filter sort and the Gumbel draws sit behind
     ``lax.cond`` so the fused decode step pays nothing for sampling
     machinery it is not using.
     """
@@ -99,9 +152,7 @@ def sample_tokens(logits: jax.Array, key_data_rows: jax.Array,
         return jax.random.categorical(k, row / temp).astype(jnp.int32)
 
     def drawn(_):
-        filtered = jax.lax.cond(
-            jnp.any(top_ks > 0),
-            lambda l: _top_k_mask(l, top_ks), lambda l: l, logits)
+        filtered = _maybe_filter(logits, top_ks, top_ps, temps)
         safe_t = jnp.maximum(temps, 1e-6).astype(jnp.float32)
         sampled = jax.vmap(draw)(key_data_rows, steps.astype(jnp.int32),
                                  filtered, safe_t)
@@ -111,20 +162,160 @@ def sample_tokens(logits: jax.Array, key_data_rows: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=())
-def _sample_tokens_jit(logits, key_data_rows, steps, temps, top_ks):
-    return sample_tokens(logits, key_data_rows, steps, temps, top_ks)
+def _sample_tokens_jit(logits, key_data_rows, steps, temps, top_ks, top_ps):
+    return sample_tokens(logits, key_data_rows, steps, temps, top_ks,
+                         top_ps)
 
 
 def sample_host(logits, key_data_rows: np.ndarray,
-                steps: np.ndarray, temps: np.ndarray, top_ks: np.ndarray
-                ) -> np.ndarray:
+                steps: np.ndarray, temps: np.ndarray, top_ks: np.ndarray,
+                top_ps: Optional[np.ndarray] = None) -> np.ndarray:
     """Host-callable wrapper (jitted) — used for prefill's first token and
     by the static engine; the continuous decode path fuses
     :func:`sample_tokens` into its jitted decode step instead.  ``logits``
     may be a device array (preferred — no host round-trip of the (B, V)
     buffer; only the (B,) token ids come back) or a numpy array."""
+    B = np.shape(steps)[0]
+    if top_ps is None:
+        top_ps = np.zeros((B,), np.float32)
     out = _sample_tokens_jit(
         jnp.asarray(logits), jnp.asarray(key_data_rows, jnp.uint32),
         jnp.asarray(steps, jnp.int32), jnp.asarray(temps, jnp.float32),
-        jnp.asarray(top_ks, jnp.int32))
+        jnp.asarray(top_ks, jnp.int32), jnp.asarray(top_ps, jnp.float32))
     return np.asarray(out)
+
+
+def sample_with_probs(logits: jax.Array, key_data_rows: jax.Array,
+                      steps: jax.Array, temps: jax.Array,
+                      top_ks: jax.Array, top_ps: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Sample one token per row AND return the proposal distribution it was
+    drawn from — what a draft model must hand the verifier so the
+    rejection-sampling correction (:func:`spec_accept`) sees the true
+    ``q``.  Greedy rows (temp <= 0) return a one-hot at the argmax (a
+    deterministic proposal); sampled rows return the filtered, tempered
+    softmax.  Returns (tokens (B,), probs (B, V) float32)."""
+    logits = logits.astype(jnp.float32)
+    B, V = logits.shape
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    filtered = _maybe_filter(logits, top_ks, top_ps, temps)
+    safe_t = jnp.maximum(temps, 1e-6).astype(jnp.float32)
+    probs = jax.nn.softmax(filtered / safe_t[:, None], axis=-1)
+
+    def draw(kd, step, row, temp):
+        k = jax.random.fold_in(jax.random.wrap_key_data(kd), step)
+        return jax.random.categorical(k, row / temp).astype(jnp.int32)
+
+    sampled = jax.vmap(draw)(key_data_rows, steps.astype(jnp.int32),
+                             filtered, safe_t)
+    use = temps > 0.0
+    toks = jnp.where(use, sampled, greedy)
+    probs = jnp.where(use[:, None], probs,
+                      jax.nn.one_hot(greedy, V, dtype=jnp.float32))
+    return toks, probs
+
+
+# --------------------------------------------------------------------------
+# Speculative acceptance (rejection sampling; Leviathan et al. 2022 alg. 1)
+# --------------------------------------------------------------------------
+
+# fold tag decoupling the accept/reject uniforms from the token draws that
+# share the per-row key stream (step indices occupy the low range)
+_ACCEPT_FOLD = 0x5bec0de
+
+
+def spec_accept(logits: jax.Array, draft: jax.Array,
+                q_probs: Optional[jax.Array], n_draft: jax.Array,
+                key_data_rows: jax.Array, steps: jax.Array,
+                temps: jax.Array, top_ks: jax.Array, top_ps: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Batched draft acceptance preserving the target distribution.
+
+    logits (B, T, V) — the verified step's target logits; position t is
+    the distribution AFTER feed token t (feed = [last committed,
+    d_1..d_k], T = k+1).  draft (B, k) the proposed tokens (d_{i+1} is
+    verified against position i); q_probs (B, k, V) the proposal
+    distributions, or None for a deterministic (one-hot) proposer such as
+    n-gram lookup; n_draft (B,) how many drafts are real (feed beyond is
+    padding).  steps (B,) is the request's generated count: committed
+    token j folds the row key with ``steps + j`` — the same derivation the
+    non-speculative fused step uses.
+
+    Returns (tokens (B, T), n_out (B,)): the first ``n_out[b]`` entries of
+    row b are the committed continuation (accepted drafts + one corrected
+    /bonus token — every verified step commits at least one token);
+    entries beyond are garbage.
+
+    Greedy rows (temp <= 0) shortcut to the argmax chain: accept d_{i+1}
+    while it equals argmax(logits_i), then take the first mismatching
+    argmax — byte-identical to sequential greedy decode.  Sampled rows run
+    the rejection rule: accept d with prob min(1, p(d)/q(d)); at the first
+    rejection resample from norm(max(p - q, 0)); if every real draft
+    survives, draw the bonus token from p at the last position.
+    """
+    B, T, V = logits.shape
+    k = T - 1
+    logits = logits.astype(jnp.float32)
+    greedy_t = jnp.argmax(logits, axis=-1).astype(jnp.int32)      # (B, T)
+    ii = jnp.arange(k, dtype=jnp.int32)[None, :]                  # (1, k)
+    real = ii < n_draft[:, None]                                  # (B, k)
+
+    def leading(acc):
+        return jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1), axis=1)
+
+    # greedy path: accept while the draft tracks the argmax chain
+    n_acc_g = leading((draft == greedy_t[:, :k]) & real)
+    out_g, n_out_g = greedy_t, n_acc_g + 1
+
+    def drawn(_):
+        flat = logits.reshape(B * T, V)
+        fl = _maybe_filter(flat, jnp.repeat(top_ks, T),
+                           jnp.repeat(top_ps, T),
+                           jnp.repeat(temps, T)).reshape(B, T, V)
+        safe_t = jnp.maximum(temps, 1e-6).astype(jnp.float32)
+        p = jax.nn.softmax(fl / safe_t[:, None, None], axis=-1)   # (B,T,V)
+        q = (jax.nn.one_hot(draft, V, dtype=jnp.float32)
+             if q_probs is None else q_probs.astype(jnp.float32))
+        p_at = jnp.take_along_axis(p[:, :k], draft[..., None],
+                                   axis=-1)[..., 0]               # (B, k)
+        q_at = jnp.take_along_axis(q, draft[..., None], axis=-1)[..., 0]
+
+        def u_row(kd, step):
+            def one(i):
+                key = jax.random.fold_in(
+                    jax.random.fold_in(jax.random.wrap_key_data(kd),
+                                       step + i), _ACCEPT_FOLD)
+                return jax.random.uniform(key)
+            return jax.vmap(one)(jnp.arange(k, dtype=jnp.int32))
+
+        u = jax.vmap(u_row)(key_data_rows, steps.astype(jnp.int32))
+        accept = (u * jnp.maximum(q_at, 1e-30) < p_at) & real
+        n_acc = leading(accept)                                   # (B,)
+        # token at output index n_acc: residual after a real rejection,
+        # bonus from p[n_acc] when the draft chain was exhausted
+        p_r = jnp.take_along_axis(p, n_acc[:, None, None],
+                                  axis=1)[:, 0]                   # (B, V)
+        q_r = jnp.take_along_axis(q, jnp.clip(n_acc, 0, k - 1)[:, None,
+                                               None], axis=1)[:, 0]
+        rejected = n_acc < jnp.minimum(n_draft, k)
+        res = jnp.where(rejected[:, None], jnp.maximum(p_r - q_r, 0.0),
+                        p_r)
+        res = res / jnp.maximum(jnp.sum(res, axis=-1, keepdims=True),
+                                1e-30)
+
+        def draw(kd, step, row):
+            key = jax.random.fold_in(jax.random.wrap_key_data(kd), step)
+            return jax.random.categorical(key, jnp.log(row)
+                                          ).astype(jnp.int32)
+
+        final = jax.vmap(draw)(key_data_rows,
+                               steps.astype(jnp.int32) + n_acc, res)
+        pad = jnp.concatenate([draft, jnp.zeros((B, 1), jnp.int32)], axis=1)
+        jj = jnp.arange(T, dtype=jnp.int32)[None, :]
+        out_s = jnp.where(jj < n_acc[:, None], pad, final[:, None])
+        use = temps > 0.0
+        return (jnp.where(use[:, None], out_s, out_g),
+                jnp.where(use, n_acc + 1, n_out_g))
+
+    return jax.lax.cond(jnp.any(temps > 0.0), drawn,
+                        lambda _: (out_g, n_out_g), None)

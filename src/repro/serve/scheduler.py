@@ -140,12 +140,28 @@ class RequestState(enum.Enum):
 
 @dataclasses.dataclass
 class RooflineLedger:
-    """Per-request W/Q accounting, folded into RooflineTerms at completion."""
+    """Per-request W/Q accounting, folded into RooflineTerms at completion.
+
+    Speculative decoding splits the decode stream into phases: *verify*
+    steps run on the target model (accounted into ``decode_flops`` /
+    ``decode_bytes`` so ``arithmetic_intensity`` reflects what the target
+    weights actually did: one weight read scores k+1 tokens) and *draft*
+    work runs on the proposer (tracked separately in ``draft_flops`` /
+    ``draft_bytes`` — it is overhead, not target throughput).
+    ``weight_passes`` counts target forward passes, so
+    ``tokens_per_pass`` is the measured speculative yield E[tokens/pass];
+    ``acceptance_rate`` is accepted drafts / proposed drafts.
+    """
     prefill_flops: float = 0.0
     decode_flops: float = 0.0
     decode_bytes: float = 0.0
     decode_tokens: int = 0
     decode_batch_sum: int = 0        # sum of co-resident batch sizes
+    weight_passes: int = 0           # target forward passes (decode+verify)
+    draft_flops: float = 0.0         # proposer-side work (draft model)
+    draft_bytes: float = 0.0
+    proposed: int = 0                # draft tokens offered for verification
+    accepted: int = 0                # draft tokens that survived
 
     def add_decode_token(self, cfg: ModelConfig, context_len: int,
                          active_batch: int) -> None:
@@ -154,10 +170,64 @@ class RooflineLedger:
                                                 active_batch)
         self.decode_tokens += 1
         self.decode_batch_sum += active_batch
+        self.weight_passes += 1
+
+    def add_verify_step(self, cfg: ModelConfig, context_len: int,
+                        n_fed: int, n_committed: int, n_accepted: int,
+                        n_proposed: int, active_batch: int) -> None:
+        """One multi-token verification step: ``n_fed`` = k+1 tokens scored
+        in one weight pass at context ``context_len``; ``n_committed``
+        tokens entered the request (``n_accepted`` of them surviving
+        drafts — the rest is the corrected/bonus token, unless the commit
+        was cut short by a stop token or the token budget).
+
+        W: each fed token t attends ``context_len + t`` keys.  Q: ONE
+        amortized weight read, one page walk over the context plus the
+        just-written draft lines — read ``context_len + n_fed - 1`` lines,
+        write ``n_fed`` — so Q barely moves while W scales by n_fed: the
+        measured intensity gain speculative decoding buys.
+        """
+        line = kv_line_bytes(cfg)
+        self.decode_flops += sum(
+            decode_token_flops(cfg, context_len + t) for t in range(n_fed))
+        self.decode_bytes += (
+            params_bytes_active(cfg) / max(active_batch, 1)
+            + (context_len + 2 * n_fed - 1) * line
+            + 2 * state_bytes(cfg))
+        self.decode_tokens += n_committed
+        self.decode_batch_sum += n_committed * active_batch
+        self.weight_passes += 1
+        self.proposed += n_proposed
+        self.accepted += n_accepted
+
+    def add_draft_cost(self, draft_cfg: ModelConfig, context_len: int,
+                       n_fed: int, n_decodes: int, active_batch: int
+                       ) -> None:
+        """Proposer-side work for one round on a draft model: a catch-up
+        pass over ``n_fed`` tokens (the previous round's commits, one
+        weight pass) plus ``n_decodes`` single-token draft steps."""
+        line = kv_line_bytes(draft_cfg)
+        w = params_bytes_active(draft_cfg) / max(active_batch, 1)
+        self.draft_flops += sum(
+            decode_token_flops(draft_cfg, context_len + t)
+            for t in range(n_fed + n_decodes))
+        self.draft_bytes += (
+            w + (context_len + 2 * n_fed - 1) * line
+            + n_decodes * (w + (context_len + n_fed + n_decodes) * line))
 
     @property
     def mean_batch(self) -> float:
         return self.decode_batch_sum / max(self.decode_tokens, 1)
+
+    @property
+    def tokens_per_pass(self) -> float:
+        """Measured tokens committed per target weight pass (1.0 for
+        non-speculative decode; the speculative yield otherwise)."""
+        return self.decode_tokens / max(self.weight_passes, 1)
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / max(self.proposed, 1)
 
     @property
     def arithmetic_intensity(self) -> float:
@@ -183,6 +253,7 @@ class Request:
     max_new_tokens: int = 32
     temperature: float = 0.0
     top_k: int = 0
+    top_p: float = 0.0                       # nucleus mass (0 / >=1 = off)
     stop_token: Optional[int] = None
     rng: Optional[jax.Array] = None
     request_id: int = 0
@@ -193,10 +264,35 @@ class Request:
     generated: List[int] = dataclasses.field(default_factory=list)
     finish_reason: str = ""
     ledger: RooflineLedger = dataclasses.field(default_factory=RooflineLedger)
+    # latency trace: wall-clock stamps from the serving host.  submit_time
+    # is set by Engine.submit; one entry lands in token_times per committed
+    # token (speculative commits share one stamp — their inter-token gap
+    # really is ~0, that is the point).
+    submit_time: float = 0.0
+    token_times: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token (s); NaN before the first commit."""
+        if not self.token_times:
+            return float("nan")
+        return self.token_times[0] - self.submit_time
+
+    def latency_stats(self) -> Dict[str, float]:
+        """TTFT + inter-token latency percentiles for this request."""
+        gaps = np.diff(np.asarray(self.token_times))
+        return {
+            "ttft_s": self.ttft,
+            "itl_p50_s": float(np.percentile(gaps, 50)) if gaps.size else
+            float("nan"),
+            "itl_p95_s": float(np.percentile(gaps, 95)) if gaps.size else
+            float("nan"),
+            "n_tokens": float(len(self.token_times)),
+        }
 
     @property
     def context_len(self) -> int:

@@ -132,3 +132,35 @@ def test_supports_paging_flags():
     assert not supports_paging(smoke(get_config("llama-3.2-vision-90b")))
     with pytest.raises(NotImplementedError):
         PagedKVCache(smoke(get_config("whisper-small")), 2, 4, 8)
+
+
+def test_margin_tokens_widen_tables_without_backing():
+    """Speculative verification margin: block tables grow past the
+    admission ceiling, margin entries stay on the trash page, and neither
+    max_len nor the backing-pool size moves."""
+    cfg = smoke(get_config("qwen3-0.6b"))
+    base = PagedKVCache(cfg, num_slots=2, page_size=4, max_len=16)
+    kv = PagedKVCache(cfg, num_slots=2, page_size=4, max_len=16,
+                      margin_tokens=5)
+    assert kv.max_len == base.max_len == 16
+    assert kv.num_pages == base.num_pages
+    assert kv.blocks_per_slot == base.blocks_per_slot + 2   # ceil(5/4)
+    s = kv.alloc(16)                       # full admission budget
+    assert np.all(kv.block_tables[s][-2:] == 0), "margin entries are trash"
+    assert kv.block_tables[s].shape[0] == kv.blocks_per_slot
+    # dense_view still returns the admission-sized window
+    view = kv.dense_view(s)
+    leaf = jax.tree.leaves(view[0])[0]
+    assert leaf.shape[2] == 16
+
+
+def test_alloc_pins_requested_slot():
+    """A draft-model cache mirrors the target engine's slot indices."""
+    cfg = smoke(get_config("qwen3-0.6b"))
+    kv = PagedKVCache(cfg, num_slots=3, page_size=4, max_len=8)
+    assert kv.alloc(8, slot=1) == 1
+    assert kv.alloc(8, slot=0) == 0
+    with pytest.raises(ValueError):
+        kv.alloc(8, slot=1)                # already taken
+    kv.free(1)
+    assert kv.alloc(8, slot=1) == 1

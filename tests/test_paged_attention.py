@@ -107,9 +107,74 @@ def test_mla_kernel_matches_reference(B, H, r, dr, page, nb):
                                rtol=2e-5, atol=2e-6)
 
 
+@pytest.mark.parametrize("B,T,KV,G,hd,page,nb", [
+    (3, 4, 2, 2, 16, 4, 5),   # GQA, odd block count
+    (2, 2, 4, 1, 32, 8, 3),   # MHA (G=1)
+    (2, 5, 1, 8, 64, 16, 2),  # MQA-style single KV head
+])
+def test_gqa_verify_kernel_matches_reference(B, T, KV, G, hd, page, nb):
+    """Multi-token verification kernel vs the gather reference, ragged
+    contexts: all T query rows share one page walk, per-row causal mask
+    ``k_pos <= pos + t``."""
+    P = 1 + B * nb
+    ks = jax.random.split(jax.random.key(B * 17 + T), 3)
+    q = jax.random.normal(ks[0], (B, T, KV, G, hd))
+    kp = jax.random.normal(ks[1], (P, page, KV, hd))
+    vp = jax.random.normal(ks[2], (P, page, KV, hd))
+    bt, pos = _ragged_tables(np.random.RandomState(B + T), B, nb, page, P)
+    scale = hd ** -0.5
+    ref = pa.paged_attention_verify_reference(q, kp, vp, bt, pos,
+                                              scale=scale, soft_cap=20.0)
+    out = pa.paged_attention_verify(q, kp, vp, bt, pos, scale=scale,
+                                    soft_cap=20.0, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("B,T,H,r,dr,page,nb", [
+    (3, 3, 4, 32, 8, 4, 4),
+    (2, 5, 8, 64, 16, 8, 2),
+])
+def test_mla_verify_kernel_matches_reference(B, T, H, r, dr, page, nb):
+    P = 1 + B * nb
+    ks = jax.random.split(jax.random.key(B * 19 + T), 4)
+    ql = jax.random.normal(ks[0], (B, T, H, r))
+    qr = jax.random.normal(ks[1], (B, T, H, dr))
+    cp = jax.random.normal(ks[2], (P, page, r))
+    rp = jax.random.normal(ks[3], (P, page, dr))
+    bt, pos = _ragged_tables(np.random.RandomState(B + T + 1), B, nb, page,
+                             P)
+    scale = (r + dr) ** -0.5
+    ref = pa.mla_paged_attention_verify_reference(ql, qr, cp, rp, bt, pos,
+                                                  scale=scale)
+    out = pa.mla_paged_attention_verify(ql, qr, cp, rp, bt, pos,
+                                        scale=scale, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_verify_t1_matches_decode_reference():
+    """A 1-token verification IS a decode step: both references must agree
+    exactly (the contract that lets T=1 reasoning carry over)."""
+    B, KV, G, hd, page, nb = 2, 2, 2, 16, 4, 3
+    P = 1 + B * nb
+    ks = jax.random.split(jax.random.key(23), 3)
+    q = jax.random.normal(ks[0], (B, 1, KV, G, hd))
+    kp = jax.random.normal(ks[1], (P, page, KV, hd))
+    vp = jax.random.normal(ks[2], (P, page, KV, hd))
+    bt, pos = _ragged_tables(np.random.RandomState(7), B, nb, page, P)
+    dec = pa.paged_attention_reference(q[:, 0], kp, vp, bt, pos,
+                                       scale=hd ** -0.5)
+    ver = pa.paged_attention_verify_reference(q, kp, vp, bt, pos,
+                                              scale=hd ** -0.5)[:, 0]
+    np.testing.assert_allclose(np.asarray(ver), np.asarray(dec),
+                               rtol=1e-6, atol=1e-7)
+
+
 def test_registry_resolves_backends():
     impls = ops.registered_kernels()
     assert {"paged_attention", "mla_paged_attention",
+            "paged_attention_verify", "mla_paged_attention_verify",
             "flash_attention"} <= set(impls)
     assert ops.resolve("paged_attention", "jnp") \
         is pa.paged_attention_reference

@@ -71,9 +71,107 @@ def test_scope_substitution_replaces_gather_traffic(engine_mid_decode):
 
 def test_kernel_bytes_model_matches_ledger_kv_term():
     """substitute.paged_attention_kernel_bytes prices exactly the ledger's
-    (L + 1) * kv_line KV term."""
+    (L + 1) * kv_line KV term; the multi-token (n_q) variant prices the
+    verify ledger's (L + 2T - 1) term and reduces to decode at n_q=1."""
     cfg = smoke(get_config("qwen3-0.6b"))
     line = kv_line_bytes(cfg)
     contexts = [7, 12, 30]
     assert paged_attention_kernel_bytes(contexts, line) == sum(
         (L + 1) * line for L in contexts)
+    T = 4
+    assert paged_attention_kernel_bytes(contexts, line, n_q=T) == sum(
+        (L + 2 * T - 1) * line for L in contexts)
+    assert paged_attention_kernel_bytes(contexts, line, n_q=1) == \
+        paged_attention_kernel_bytes(contexts, line)
+
+
+# -- MLA (deepseek) arch ---------------------------------------------------
+
+def _mla_cfg():
+    from repro.models.common import BlockDef
+    cfg = smoke(get_config("deepseek-v2-236b"))
+    # dense-FFN MLA at a weights-dominated width: the analytic ledger
+    # ignores activation traffic and MoE routing gathers, so the 10% bar
+    # needs weights >> activations and capacity effects out of the picture
+    return dataclasses.replace(
+        cfg, name="mla-dense-xcheck", d_model=256, d_ff=512,
+        n_experts=0, moe_top_k=0, moe_d_ff=0, n_shared_experts=0,
+        moe_first_dense=0, n_layers=2,
+        block_pattern=(BlockDef("mla", "dense"),),
+        q_lora_rank=64, kv_lora_rank=64, rope_head_dim=16,
+        nope_head_dim=32, v_head_dim=32)
+
+
+@pytest.fixture(scope="module")
+def mla_engine_mid_decode():
+    cfg = _mla_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    eng = Engine(cfg, params, EngineConfig(num_slots=4, page_size=4,
+                                           max_len=32,
+                                           kernel_backend="jnp"))
+    gen = GenerateConfig(max_new_tokens=16)
+    for i in range(4):
+        eng.submit(np.asarray(jax.random.randint(
+            jax.random.key(i), (16,), 0, cfg.vocab_size)), gen)
+    for _ in range(8):
+        eng.step()
+    assert len(eng._sched.decode_requests()) == 4
+    return eng
+
+
+@pytest.mark.slow
+def test_mla_ledger_matches_hlo_within_10pct(mla_engine_mid_decode):
+    """The analytic ledger's latent-cache pricing (kv_lora + rope_hd per
+    token per layer) must agree with the compiled MLA decode step."""
+    out = crosscheck.crosscheck_decode(mla_engine_mid_decode)
+    assert out["substituted"], "paged_attention scope missing from HLO"
+    assert out["flops_ratio"] == pytest.approx(1.0, abs=0.10), out
+    assert out["bytes_ratio"] == pytest.approx(1.0, abs=0.10), out
+
+
+# -- speculative verify step ----------------------------------------------
+
+def _spec_engine(cfg):
+    from repro.serve import SpecConfig, SpecEngine
+    params = init_params(cfg, jax.random.key(0))
+    eng = SpecEngine(cfg, params,
+                     EngineConfig(num_slots=4, page_size=4, max_len=32,
+                                  kernel_backend="jnp"),
+                     SpecConfig(k=3, proposer="ngram"))
+    gen = GenerateConfig(max_new_tokens=16)
+    for i in range(4):
+        eng.submit(np.asarray(jax.random.randint(
+            jax.random.key(i), (16,), 0, cfg.vocab_size)), gen)
+    for _ in range(4):
+        eng.step()
+    assert len(eng._sched.decode_requests()) == 4
+    return eng
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("make_cfg", [
+    lambda: dataclasses.replace(smoke(get_config("qwen3-0.6b")),
+                                d_model=512, d_ff=1024),
+    # verify activations scale with T, so the MLA config needs the wider
+    # weights-dominated shape here (the decode fixture stays at 256)
+    lambda: dataclasses.replace(_mla_cfg(), name="mla-dense-xcheck-512",
+                                d_model=512, d_ff=1024, q_lora_rank=96,
+                                kv_lora_rank=96),
+], ids=["qwen-gqa", "deepseek-mla"])
+def test_verify_step_crosscheck(make_cfg):
+    """Draft/verify phase split: the compiled multi-token verification
+    step's HLO must confirm the speculative roofline claim — W scales by
+    T = k+1 (flops within 10% of the analytic sum) while Q stays ~flat, so
+    the measured step intensity lands well above the decode step's.
+    Bytes get a looser 25% bar: activation traffic scales with T and the
+    analytic model deliberately prices only weights + KV lines."""
+    eng = _spec_engine(make_cfg())
+    ver = crosscheck.crosscheck_verify(eng)
+    assert ver["substituted"]
+    assert ver["n_tokens"] == 4
+    assert ver["flops_ratio"] == pytest.approx(1.0, abs=0.10), ver
+    assert ver["bytes_ratio"] == pytest.approx(1.0, abs=0.25), ver
+    dec = crosscheck.crosscheck_decode(eng)
+    ai_dec = dec["hlo_flops"] / dec["hlo_bytes"]
+    ai_ver = ver["hlo_flops"] / ver["hlo_bytes"]
+    assert ai_ver > 2.5 * ai_dec, (ai_ver, ai_dec)

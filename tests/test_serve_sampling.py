@@ -79,6 +79,52 @@ def test_top_k_masks_tail():
     np.testing.assert_array_equal(full, none)
 
 
+def test_top_p_nucleus_bounds_support():
+    """top_p ~ 0 is greedy; top_p >= 1 (or 0) is unfiltered; in between,
+    draws never leave the smallest prefix of the descending-probability
+    order whose mass reaches p."""
+    B, V = 4, 32
+    logits = np.asarray(jax.random.normal(jax.random.key(5), (B, V))) * 2.0
+    kd = sampling.batch_key_data(jax.random.key(6), B)
+    t = np.full((B,), 1.0, np.float32)
+    ks0 = np.zeros((B,), np.int32)
+    tiny = sampling.sample_host(logits, kd, ks0, t, ks0,
+                                np.full((B,), 1e-6, np.float32))
+    np.testing.assert_array_equal(tiny, np.argmax(logits, axis=-1))
+    off = sampling.sample_host(logits, kd, ks0, t, ks0,
+                               np.full((B,), 1.0, np.float32))
+    none = sampling.sample_host(logits, kd, ks0, t, ks0,
+                                np.zeros((B,), np.float32))
+    np.testing.assert_array_equal(off, none)
+    p = 0.6
+    for step in range(8):
+        steps = np.full((B,), step, np.int32)
+        got = sampling.sample_host(logits, kd, steps, t, ks0,
+                                   np.full((B,), p, np.float32))
+        for b in range(B):
+            probs = np.exp(logits[b] - logits[b].max())
+            probs /= probs.sum()
+            order = np.argsort(-probs)
+            m = int(np.sum(np.cumsum(probs[order]) - probs[order] < p))
+            nucleus = set(order[:m])
+            assert int(got[b]) in nucleus
+
+
+def test_top_p_composes_with_top_k():
+    """Both filters share one sort; applying top-k=2 with a generous top-p
+    still never leaves the top-2 set."""
+    B, V = 3, 24
+    logits = np.asarray(jax.random.normal(jax.random.key(8), (B, V))) * 3.0
+    kd = sampling.batch_key_data(jax.random.key(9), B)
+    t = np.full((B,), 1.0, np.float32)
+    for step in range(6):
+        got = sampling.sample_host(
+            logits, kd, np.full((B,), step, np.int32), t,
+            np.full((B,), 2, np.int32), np.full((B,), 0.99, np.float32))
+        for b in range(B):
+            assert int(got[b]) in set(np.argsort(logits[b])[-2:])
+
+
 # -- engine integration ----------------------------------------------------
 
 def test_continuous_temperature_matches_pre_fusion_semantics(qwen):
@@ -135,6 +181,22 @@ def test_generate_top_k_greedy_equivalence(qwen):
         rng=jax.random.key(9))
     np.testing.assert_array_equal(np.asarray(greedy["tokens"]),
                                   np.asarray(top1["tokens"]))
+
+
+def test_generate_top_p_greedy_equivalence(qwen):
+    """A vanishing nucleus at temperature > 0 must reproduce the greedy
+    stream end to end (the --top-p engine threading)."""
+    cfg, params = qwen
+    prompts = jnp.asarray(np.stack([_prompt(cfg, 72, 5),
+                                    _prompt(cfg, 73, 5)]))
+    greedy = Engine(cfg, params).generate(
+        prompts, GenerateConfig(max_new_tokens=4))
+    nucleus = Engine(cfg, params).generate(
+        prompts, GenerateConfig(max_new_tokens=4, temperature=1.0,
+                                top_p=1e-6),
+        rng=jax.random.key(9))
+    np.testing.assert_array_equal(np.asarray(greedy["tokens"]),
+                                  np.asarray(nucleus["tokens"]))
 
 
 # -- prompt-length bucketing ----------------------------------------------

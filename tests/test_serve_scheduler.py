@@ -157,3 +157,23 @@ def test_oversized_request_rejected_in_flight(qwen):
         engine.submit(_prompt(cfg, 61, 30),
                       GenerateConfig(max_new_tokens=30))
     engine.run()
+
+
+def test_request_latency_trace(qwen):
+    """Every committed token carries a wall-clock stamp: TTFT measures
+    submit -> first commit, inter-token gaps are monotone, and
+    latency_stats() is well-formed (the bench_serve surface)."""
+    cfg, params = qwen
+    engine = Engine(cfg, params, EngineConfig(num_slots=2, page_size=4,
+                                              max_len=32))
+    gen = GenerateConfig(max_new_tokens=5)
+    reqs = [engine.submit(_prompt(cfg, 40 + i, 5), gen) for i in range(2)]
+    engine.run()
+    for r in reqs:
+        assert len(r.token_times) == len(r.generated) == 5
+        assert r.ttft > 0
+        assert np.all(np.diff(np.asarray(r.token_times)) >= 0)
+        stats = r.latency_stats()
+        assert set(stats) == {"ttft_s", "itl_p50_s", "itl_p95_s",
+                              "n_tokens"}
+        assert stats["itl_p95_s"] >= stats["itl_p50_s"] >= 0
