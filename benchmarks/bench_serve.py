@@ -18,14 +18,26 @@ the paged continuous-batching engine end to end and reports, per run:
   ledger arithmetic intensity against the one-token-per-pass baseline,
   and the predicted memory-bound speedup (serve.spec.spec_speedup_model).
 
-``--smoke`` (the CI run) benches the baseline engine AND an n-gram
-speculative pass over self-repetitive prompts, and asserts the
-speculative ledger intensity is strictly above the baseline's — the
-roofline claim the subsystem exists to cash in.
+``--shared-prefix`` switches to the block-pool capacity workload: every
+request shares one long system prompt and adds a short unique tail.  With
+``--prefix-cache`` the pool's content-hash index aliases the shared pages
+(copy-on-write guards divergence), so N requests admit into a pool sized
+for ~1 copy of the prefix; the run reports peak pages, pages
+deduplicated, copy-on-write copies, and preemption count next to
+tokens/s.
+
+``--smoke`` (the CI run) benches the baseline engine, an n-gram
+speculative pass over self-repetitive prompts (asserting the speculative
+ledger intensity is strictly above the baseline's), AND a shared-prefix
+pair — prefix cache off vs on — asserting the cached run peaks at fewer
+pages while emitting byte-identical greedy tokens: the memory-capacity
+claim the block pool exists to cash in.
 
     PYTHONPATH=src python -m benchmarks.bench_serve --arch qwen3-0.6b \
         --requests 8 --slots 4 --new-tokens 16
     PYTHONPATH=src python -m benchmarks.bench_serve --spec ngram
+    PYTHONPATH=src python -m benchmarks.bench_serve --shared-prefix \
+        --prefix-cache
     PYTHONPATH=src python -m benchmarks.bench_serve --smoke   # CI-sized
     PYTHONPATH=src python -m benchmarks.run --only serve --smoke
 """
@@ -43,19 +55,30 @@ from repro.core.roofline.hardware import HOST_CPU_FALLBACK, TPU_V5E
 from repro.models import init_params
 from repro.serve import (Engine, EngineConfig, GenerateConfig, SpecConfig,
                          SpecEngine)
+from repro.serve.crosscheck import capacity_report
 from repro.serve.scheduler import decode_token_bytes
 from repro.serve.spec import speculative_summary
 
 from .common import emit
 
 
-def _prompts(cfg, requests: int, prompt_len: int, repetitive: bool):
-    """Random prompts, or self-repetitive ones (a short motif tiled to
-    length) — the prompt-lookup proposer's honest demo workload."""
+def _prompts(cfg, requests: int, prompt_len: int, repetitive: bool,
+             shared_prefix: bool = False):
+    """Random prompts; self-repetitive ones (a short motif tiled to
+    length) — the prompt-lookup proposer's honest demo workload; or
+    shared-prefix ones (one long system prompt + short unique tails) —
+    the prefix-dedup capacity workload."""
     rng = jax.random.key(1)
+    shared = np.asarray(jax.random.randint(
+        jax.random.key(2), (prompt_len,), 0, cfg.vocab_size), np.int32)
     out = []
     for i in range(requests):
-        if repetitive:
+        if shared_prefix:
+            tail = np.asarray(jax.random.randint(
+                jax.random.fold_in(rng, i), (max(prompt_len // 4, 2),), 0,
+                cfg.vocab_size), np.int32)
+            p = np.concatenate([shared, tail])
+        elif repetitive:
             motif = np.asarray(jax.random.randint(
                 jax.random.fold_in(rng, i), (max(prompt_len // 4, 2),), 0,
                 cfg.vocab_size))
@@ -71,33 +94,47 @@ def _prompts(cfg, requests: int, prompt_len: int, repetitive: bool):
 def run_bench(arch: str, *, requests: int, slots: int, page_size: int,
               prompt_len: int, new_tokens: int, prefill_chunk: int,
               chip_name: str, backend: str = None, spec: str = "none",
-              spec_k: int = 4, draft_arch: str = "qwen3-0.6b") -> dict:
+              spec_k: int = 4, draft_arch: str = "qwen3-0.6b",
+              spec_k_adaptive: bool = False, shared_prefix: bool = False,
+              prefix_cache: bool = False, num_pages: int = 0,
+              watermark: float = 0.0, preempt: str = "swap",
+              warmup: bool = True) -> dict:
     cfg = smoke(get_config(arch))
     params = init_params(cfg, jax.random.key(0))
     chip = TPU_V5E if chip_name == "tpu_v5e" else HOST_CPU_FALLBACK
+    # shared-prefix prompts carry a unique tail past the shared system
+    # prompt, so the context ceiling must cover prompt + tail + new tokens
+    tail = max(prompt_len // 4, 2) if shared_prefix else 0
     ecfg = EngineConfig(num_slots=slots, page_size=page_size,
-                        max_len=prompt_len + new_tokens,
+                        max_len=prompt_len + tail + new_tokens,
                         prefill_chunk=prefill_chunk, chip=chip,
-                        kernel_backend=backend)
+                        kernel_backend=backend, prefix_cache=prefix_cache,
+                        num_pages=num_pages or None, watermark=watermark,
+                        preempt_mode=preempt)
     scfg = None
     if spec != "none":
         if spec == "draft":
             dcfg = smoke(get_config(draft_arch))
             scfg = SpecConfig(k=spec_k, proposer="draft", draft_cfg=dcfg,
                               draft_params=init_params(dcfg,
-                                                       jax.random.key(4)))
+                                                       jax.random.key(4)),
+                              adaptive=spec_k_adaptive)
         else:
-            scfg = SpecConfig(k=spec_k, proposer="ngram")
+            scfg = SpecConfig(k=spec_k, proposer="ngram",
+                              adaptive=spec_k_adaptive)
         engine = SpecEngine(cfg, params, ecfg, scfg)
     else:
         engine = Engine(cfg, params, ecfg)
 
-    prompts = _prompts(cfg, requests, prompt_len, repetitive=spec != "none")
+    prompts = _prompts(cfg, requests, prompt_len, repetitive=spec != "none",
+                       shared_prefix=shared_prefix)
     gen = GenerateConfig(max_new_tokens=new_tokens)
-    for p in prompts:
-        engine.submit(p, gen)
-    # warm the decode/prefill compile caches with one throwaway pass
-    engine.run()
+    if warmup:
+        # warm the decode/prefill compile caches with one throwaway pass
+        # (skipped for capacity runs: pool stats must reflect one pass)
+        for p in prompts:
+            engine.submit(p, gen)
+        engine.run()
     for p in prompts:
         engine.submit(p, gen)
     t0 = time.perf_counter()
@@ -120,16 +157,30 @@ def run_bench(arch: str, *, requests: int, slots: int, page_size: int,
          for r in done if len(r.token_times) > 1] or [np.zeros((0,))])
     itl_p50 = float(np.percentile(gaps, 50)) if gaps.size else float("nan")
     itl_p95 = float(np.percentile(gaps, 95)) if gaps.size else float("nan")
+    cap = capacity_report(engine)
     out = {"tokens_per_s": tps, "ceiling_tokens_per_s": ceiling_tps,
            "roofline_fraction": frac, "arithmetic_intensity": ai,
            "bound_class": bound, "requests": len(done),
-           "ttft_s": ttft, "itl_p50_s": itl_p50, "itl_p95_s": itl_p95}
+           "ttft_s": ttft, "itl_p50_s": itl_p50, "itl_p95_s": itl_p95,
+           "pages_peak": cap["pages_peak"],
+           "pages_deduped": cap["pages_deduped"],
+           "cow_copies": cap["cow_copies"],
+           "preemptions": cap["preemptions"],
+           "capacity_max_batch": cap["capacity_max_batch"],
+           "generated": [list(r.generated) for r in
+                         sorted(done, key=lambda r: r.request_id)]}
     derived = (f"tok/s={tps:.1f};ceiling={ceiling_tps:.0f};"
                f"frac={frac:.4f};AI={ai:.2f};{bound};"
                f"mean_batch={mean_batch:.2f};ttft_ms={ttft * 1e3:.1f};"
                f"itl_p50_ms={itl_p50 * 1e3:.2f};"
                f"itl_p95_ms={itl_p95 * 1e3:.2f}")
     name = f"serve_{arch}_b{slots}"
+    if shared_prefix:
+        name += "_shared" + ("_cached" if prefix_cache else "")
+        derived += (f";pages_peak={cap['pages_peak']};"
+                    f"deduped={cap['pages_deduped']};"
+                    f"cow={cap['cow_copies']};"
+                    f"preempt={cap['preemptions']}")
     if spec != "none":
         out.update(speculative_summary(cfg, done, spec_k,
                                        prompt_len + new_tokens // 2,
@@ -161,12 +212,27 @@ def main(argv=None):
                     help="speculative decoding proposer (serve/spec.py)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="drafted tokens per verify round")
+    ap.add_argument("--spec-k-adaptive", action="store_true",
+                    help="EWMA acceptance tracking adapts drafted length")
     ap.add_argument("--draft-arch", default="qwen3-0.6b",
                     help="draft model arch for --spec draft")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="capacity workload: requests share one long "
+                         "system prompt + short unique tails")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-hash prefix sharing + copy-on-write")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="block-pool size incl. trash page (0 = fully "
+                         "backed; smaller exercises preemption)")
+    ap.add_argument("--watermark", type=float, default=0.0,
+                    help="admission slack as a fraction of pool pages")
+    ap.add_argument("--preempt", choices=["swap", "recompute"],
+                    default="swap")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized defaults: 4 requests, 2 slots, 8 new "
-                         "tokens, baseline + ngram speculative pass "
-                         "(explicit flags still win)")
+                         "tokens; baseline + ngram speculative pass + "
+                         "shared-prefix capacity pair (explicit flags "
+                         "still win)")
     args = ap.parse_args(argv)
     sizes = (dict(requests=4, slots=2, page_size=4, prompt_len=8,
                   new_tokens=8) if args.smoke else
@@ -181,8 +247,19 @@ def main(argv=None):
                   prefill_chunk=args.prefill_chunk,
                   chip_name="tpu_v5e" if args.chip == "tpu_v5e" else "host",
                   backend=args.backend, spec_k=args.spec_k,
-                  draft_arch=args.draft_arch)
-    out = run_bench(args.arch, spec=args.spec, **kwargs)
+                  draft_arch=args.draft_arch,
+                  spec_k_adaptive=args.spec_k_adaptive)
+    out = run_bench(args.arch, spec=args.spec,
+                    shared_prefix=args.shared_prefix,
+                    prefix_cache=args.prefix_cache,
+                    num_pages=args.num_pages, watermark=args.watermark,
+                    preempt=args.preempt,
+                    warmup=not args.shared_prefix, **kwargs)
+    if args.shared_prefix:
+        print(f"[bench_serve/capacity] pages_peak={out['pages_peak']} "
+              f"deduped={out['pages_deduped']} cow={out['cow_copies']} "
+              f"preemptions={out['preemptions']} "
+              f"(capacity-implied max batch {out['capacity_max_batch']})")
     print(f"[bench_serve] {out['requests']} requests "
           f"{out['tokens_per_s']:.1f} tok/s "
           f"(memory-bound ceiling {out['ceiling_tokens_per_s']:.0f} tok/s, "
@@ -213,6 +290,31 @@ def main(argv=None):
                 "speculative ledger intensity did not exceed the one-token"
                 f"-per-pass baseline: {spec_out['arithmetic_intensity']} "
                 f"<= {out['arithmetic_intensity']}")
+        # capacity acceptance bar: the shared-prefix workload with prefix
+        # sharing on must peak at FEWER pool pages than the unshared
+        # baseline while emitting byte-identical greedy tokens
+        sp = {k: v for k, v in kwargs.items() if k not in
+              ("spec_k", "draft_arch", "spec_k_adaptive")}
+        base_sp = run_bench(args.arch, shared_prefix=True,
+                            prefix_cache=False, warmup=False, **sp)
+        dedup_sp = run_bench(args.arch, shared_prefix=True,
+                             prefix_cache=True, warmup=False, **sp)
+        print(f"[bench_serve/capacity] shared-prefix pages_peak "
+              f"{dedup_sp['pages_peak']} (cached) vs "
+              f"{base_sp['pages_peak']} (unshared), "
+              f"deduped={dedup_sp['pages_deduped']} "
+              f"cow={dedup_sp['cow_copies']}")
+        if dedup_sp["generated"] != base_sp["generated"]:
+            raise RuntimeError(
+                "prefix sharing changed greedy outputs: shared-prefix "
+                "cached run must be byte-identical to the unshared run")
+        if not dedup_sp["pages_peak"] < base_sp["pages_peak"]:
+            raise RuntimeError(
+                "prefix sharing did not reduce peak pool pages: "
+                f"{dedup_sp['pages_peak']} >= {base_sp['pages_peak']}")
+        if not dedup_sp["pages_deduped"] > 0:
+            raise RuntimeError("prefix cache recorded no dedup hits on "
+                               "the shared-prefix workload")
 
 
 if __name__ == "__main__":

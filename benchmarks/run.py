@@ -29,6 +29,8 @@ ALL = {
     "arch_roofline": bench_arch_roofline.main,  # 40-cell §Roofline table
     "serve": lambda smoke=False: bench_serve.main(
         ["--smoke"] if smoke else []),         # continuous-batching decode
+    # (--smoke also covers the speculative ngram pass and the block-pool
+    # shared-prefix capacity assertion; see bench_serve.py)
 }
 
 _SMOKEABLE = ("serve",)

@@ -7,6 +7,15 @@ Speculative decoding (draft/verify; serve/spec.py):
 
     ... --spec ngram --spec-k 4              # weight-free prompt lookup
     ... --spec draft --draft-arch qwen3-0.6b # small-model drafting
+    ... --spec draft --spec-k-adaptive       # EWMA-adapted draft length
+
+Block-pool memory management (serve/block_pool.py): pages are allocated
+on demand as contexts grow, ``--prefix-cache`` dedups shared prompt
+prefixes via content-hash page aliasing (+ copy-on-write on divergence),
+and an undersized pool (``--num-pages``) exercises LRU preemption with
+``--preempt swap`` (host round-trip) or ``--preempt recompute``:
+
+    ... --prefix-cache --num-pages 24 --watermark 0.1 --preempt swap
 
 Each run prints measured tokens/s plus the per-request decode roofline
 ledger (arithmetic intensity, bound class, roofline ceiling); speculative
@@ -29,6 +38,7 @@ from repro.core.roofline.hardware import HOST_CPU_FALLBACK, TPU_V5E
 from repro.models import init_params
 from repro.serve import (Engine, EngineConfig, GenerateConfig, SpecConfig,
                          SpecEngine, supports_paging, supports_spec)
+from repro.serve.crosscheck import capacity_report
 from repro.serve.spec import speculative_summary
 
 
@@ -49,9 +59,24 @@ def main():
                     help="speculative decoding proposer (serve/spec.py)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="drafted tokens per verify round")
+    ap.add_argument("--spec-k-adaptive", action="store_true",
+                    help="EWMA acceptance tracking shrinks/grows the "
+                         "drafted length within the fixed verify shape")
     ap.add_argument("--draft-arch", default="qwen3-0.6b",
                     help="draft model arch for --spec draft (shrunk with "
                          "--smoke like the target)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-hash prefix sharing + copy-on-write "
+                         "(serve/block_pool.py)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="block-pool size incl. trash page (0 = fully "
+                         "backed; smaller exercises preemption)")
+    ap.add_argument("--watermark", type=float, default=0.0,
+                    help="admission slack as a fraction of pool pages")
+    ap.add_argument("--preempt", choices=["swap", "recompute"],
+                    default="swap",
+                    help="pool-dry preemption: swap pages to host or "
+                         "drop + recompute on resume")
     ap.add_argument("--slots", type=int, default=0,
                     help="decode slots (0 = one per request)")
     ap.add_argument("--page-size", type=int, default=16)
@@ -73,7 +98,10 @@ def main():
         num_slots=slots, page_size=args.page_size,
         max_len=args.prompt_len + args.new_tokens,
         prefill_chunk=args.prefill_chunk, chip=chip,
-        kernel_backend=args.backend)
+        kernel_backend=args.backend,
+        prefix_cache=args.prefix_cache,
+        num_pages=args.num_pages or None,
+        watermark=args.watermark, preempt_mode=args.preempt)
     scfg = None
     if args.spec != "off":
         if not supports_spec(cfg):
@@ -86,9 +114,11 @@ def main():
             scfg = SpecConfig(k=args.spec_k, proposer="draft",
                               draft_cfg=dcfg,
                               draft_params=init_params(
-                                  dcfg, jax.random.key(4)))
+                                  dcfg, jax.random.key(4)),
+                              adaptive=args.spec_k_adaptive)
         else:
-            scfg = SpecConfig(k=args.spec_k, proposer="ngram")
+            scfg = SpecConfig(k=args.spec_k, proposer="ngram",
+                              adaptive=args.spec_k_adaptive)
         engine = SpecEngine(cfg, params, ecfg, scfg)
     else:
         engine = Engine(cfg, params, ecfg)
@@ -143,6 +173,13 @@ def main():
               f"ttft={lat['ttft_s'] * 1e3:.1f}ms "
               f"itl_p50={lat['itl_p50_s'] * 1e3:.2f}ms "
               f"p95={lat['itl_p95_s'] * 1e3:.2f}ms")
+    cap = capacity_report(engine)
+    print(f"[serve/capacity] pages peak={cap['pages_peak']}"
+          f"/{cap['pages_total']} ({cap['page_bytes']} B/page), "
+          f"deduped={cap['pages_deduped']} cow={cap['cow_copies']} "
+          f"preemptions={cap['preemptions']}, effective batch "
+          f"{cap['effective_batch']} vs capacity-implied max "
+          f"{cap['capacity_max_batch']} on {chip.name}")
     if args.spec != "off":
         s = speculative_summary(cfg, done, args.spec_k,
                                 args.prompt_len + args.new_tokens // 2,

@@ -1,17 +1,22 @@
 from . import sampling
+from .block_pool import BlockPool, PoolStats, chain_hash, token_chain_hashes
 from .engine import Engine, EngineConfig, GenerateConfig, StaticEngine
-from .kv_cache import PagedKVCache, supports_paging
+from .kv_cache import (PagedKVCache, SwapSnapshot, supports_paging,
+                       supports_prefix_cache)
 from .proposer import DraftModelProposer, NgramProposer, Proposal
 from .scheduler import Request, RequestState, RooflineLedger, Scheduler
-from .spec import (SpecConfig, SpecEngine, spec_expected_tokens_per_pass,
-                   spec_speedup_model, supports_spec)
+from .spec import (SpecConfig, SpecEngine, adaptive_k,
+                   spec_expected_tokens_per_pass, spec_speedup_model,
+                   supports_spec)
 
 __all__ = [
     "Engine", "EngineConfig", "GenerateConfig", "StaticEngine",
-    "PagedKVCache", "supports_paging",
+    "BlockPool", "PoolStats", "chain_hash", "token_chain_hashes",
+    "PagedKVCache", "SwapSnapshot", "supports_paging",
+    "supports_prefix_cache",
     "Request", "RequestState", "RooflineLedger", "Scheduler",
     "DraftModelProposer", "NgramProposer", "Proposal",
-    "SpecConfig", "SpecEngine", "spec_expected_tokens_per_pass",
-    "spec_speedup_model", "supports_spec",
+    "SpecConfig", "SpecEngine", "adaptive_k",
+    "spec_expected_tokens_per_pass", "spec_speedup_model", "supports_spec",
     "sampling",
 ]

@@ -30,6 +30,17 @@ substitute.paged_attention_kernel_bytes ``n_q``), so the cross-check
 confirms the claim the whole subsystem rests on: W scales by T while Q
 stays ~flat, i.e. measured arithmetic intensity really does approach
 T * I_decode.
+
+HBM-capacity axis: :func:`capacity_report` extends the accounting from
+bandwidth (bytes *moved* per token) to capacity (bytes *resident* per
+request) — the hierarchy level "Hierarchical Roofline Performance
+Analysis" treats per memory tier.  Decode throughput is memory-BOUND, so
+at fixed intensity the only lever left is concurrency; concurrency is
+capped by how many KV pages fit beside the weights in HBM.  The report
+prices one physical page across every cache leaf, counts pages in use /
+deduplicated by prefix sharing / reclaimed by preemption, and compares
+the engine's effective batch against the capacity-implied maximum — the
+throughput-per-byte-saved view the block pool exists to improve.
 """
 
 from __future__ import annotations
@@ -42,6 +53,7 @@ import jax.numpy as jnp
 from repro.core.roofline import extract
 from repro.core.roofline.substitute import substitute_paged_attention
 from repro.models import decode_step_paged, decode_step_verify_paged
+from repro.models.common import param_counts
 
 from .scheduler import (decode_token_bytes, decode_token_flops,
                         kv_line_bytes, params_bytes_active, state_bytes)
@@ -102,6 +114,48 @@ def crosscheck_decode(engine, requests: Optional[List] = None) -> Dict:
         "bytes_ratio": analytic_bytes / max(hlo["hbm_bytes_dev"], 1.0),
         "substituted": sub is not None,
         "contexts": contexts,
+    }
+
+
+def capacity_report(engine) -> Dict:
+    """The HBM-capacity axis of the serving roofline (see module
+    docstring): page economics of the engine's live block pool.
+
+    ``capacity_max_batch`` is the concurrency ceiling the target chip's
+    HBM implies at this engine's ``max_len``:
+
+        B_max = (HBM - params_bytes) / (pages_per_request * page_bytes)
+
+    ``effective_batch`` (live decode slots) compared against it says
+    whether the deployment is slot-limited or capacity-limited; every
+    deduplicated or on-demand-deferred page moves B_max's denominator.
+    """
+    if engine._kv is None:
+        raise ValueError("engine has no live pool; submit work or reset()")
+    kv, cfg, chip = engine._kv, engine.cfg, engine.ecfg.chip
+    pool = kv.pool
+    pb = kv.page_bytes
+    pages_per_req = kv.pages_needed(kv.max_len)
+    params_b = param_counts(cfg)["total"] * jnp.dtype(cfg.dtype).itemsize
+    hbm_for_kv = max(chip.hbm_bytes - params_b, 0.0)
+    cap_batch = int(hbm_for_kv // max(pages_per_req * pb, 1))
+    active = [r for r in engine._sched.active.values()] \
+        if engine._sched else []
+    return {
+        "page_bytes": pb,
+        "pages_total": kv.num_pages - 1,            # minus the trash page
+        "pages_in_use": pool.pages_in_use,
+        "pages_peak": pool.stats.peak_in_use,
+        "pages_cached": pool.pages_cached,
+        "pages_deduped": pool.stats.dedup_hits,
+        "cow_copies": pool.stats.cow_copies,
+        "evictions": pool.stats.evictions,
+        "preemptions": engine._sched.preempt_count if engine._sched else 0,
+        "pool_bytes": pb * (kv.num_pages - 1),
+        "params_bytes": float(params_b),
+        "pages_per_request": pages_per_req,
+        "effective_batch": len(active),
+        "capacity_max_batch": cap_batch,
     }
 
 

@@ -67,6 +67,9 @@ class EngineConfig:
     chip: ChipSpec = TPU_V5E          # roofline ledger target hardware
     prefill_bucket: int = 8           # min whole-prompt bucket (0 = off)
     kernel_backend: Optional[str] = None  # "pallas"|"jnp"|"auto"|None
+    prefix_cache: bool = False        # content-hash prefix sharing + CoW
+    watermark: float = 0.0            # admission slack, fraction of pool
+    preempt_mode: str = "swap"        # "swap" | "recompute" on pool-dry
 
 
 def _bucket_len(n: int, floor: int) -> int:
@@ -206,9 +209,13 @@ class Engine:
             self.ecfg = e
         self._kv = PagedKVCache(self.cfg, e.num_slots, e.page_size,
                                 e.max_len, num_pages=e.num_pages,
-                                margin_tokens=self._kv_margin())
+                                margin_tokens=self._kv_margin(),
+                                prefix_cache=e.prefix_cache,
+                                eager_freeze=e.prefill_chunk <= 0)
         self._sched = Scheduler(self.cfg, self._kv,
-                                prefill_chunk=e.prefill_chunk)
+                                prefill_chunk=e.prefill_chunk,
+                                watermark=e.watermark,
+                                preempt_mode=e.preempt_mode)
         self._next_token = np.zeros((e.num_slots,), np.int32)
         self._pos = np.zeros((e.num_slots,), np.int32)
         # per-slot sampling state, consumed by the fused decode+sample step
@@ -274,25 +281,31 @@ class Engine:
         return self._sched.submit(req)
 
     def step(self) -> List[Request]:
-        """One scheduler iteration: admit, prefill one chunk per admitted
-        request, one packed decode step.  Returns requests finished here."""
+        """One scheduler iteration: admit (resuming preempted requests
+        first), prefill one chunk per admitted request, one packed decode
+        step.  Returns requests finished here."""
         sched = self._sched
         n_done = len(sched.finished)
         admitted = sched.admit()
         for req in admitted:
             self._init_sampling_row(req)
+            if req.state is RequestState.RUNNING:
+                self._restore_decode_row(req)        # swap-resume
         work = sched.prefill_work()
         for req, start, end in work:
             self._run_prefill(req, start, end)
         running = sched.decode_requests()
         if running:
             self._run_decode(running)
-        elif not admitted and not work and sched.waiting:
-            head = sched.waiting[0]
+        elif (not admitted and not work
+                and (sched.waiting or sched.preempted)):
+            head = (sched.preempted + list(sched.waiting))[0]
             raise RuntimeError(
                 f"request {head.request_id} (budget {head.budget}) cannot "
                 f"be admitted: engine max_len {self._kv.max_len}, "
-                f"{self._kv.free_page_count} free pages")
+                f"{self._kv.available_page_count} obtainable pages "
+                f"(watermark {sched.watermark_pages}), "
+                f"{len(sched.preempted)} preempted waiting to resume")
         self.step_count += 1
         return sched.finished[n_done:]
 
@@ -314,35 +327,45 @@ class Engine:
 
     def _run_prefill(self, req: Request, start: int, end: int) -> None:
         kv, cfg = self._kv, self.cfg
-        whole = start == 0 and end == req.prompt_len
+        fill = req.fill_tokens
+        fill_len = len(fill)
+        # chunk writes can hit a prefix-shared page (copy-on-write needs a
+        # fresh page) — back the span first, preempting if the pool is dry
+        if not self._grow_spans([req], lambda r: (start, end)):
+            return                          # req itself was preempted
+        whole = start == 0 and end == fill_len
         if whole and self._bucketable and self.ecfg.prefill_bucket > 0:
             # length-bucketed jitted prefill: pad the prompt to the next
             # power of two; causal masking makes the prefix rows (and the
             # logits at true_len-1) byte-identical to the unpadded run, so
             # at most O(log max_len) shapes ever compile
-            L = req.prompt_len
-            pl_ = _bucket_len(L, self.ecfg.prefill_bucket)
+            pl_ = _bucket_len(fill_len, self.ecfg.prefill_bucket)
             toks = np.zeros((1, pl_), np.int32)
-            toks[0, :L] = req.prompt
+            toks[0, :fill_len] = fill
             self.prefill_shapes.add(pl_)
             last_logits, states = self._prefill_full_fn(
-                self.params, jnp.asarray(toks), jnp.int32(L))
-            kv.write_prefill_states(req.slot, states, L)
+                self.params, jnp.asarray(toks), jnp.int32(fill_len))
+            kv.write_prefill_states(req.slot, states, fill_len)
         elif whole:
             # one-chunk path: identical computation to the static engine
             last_logits, states = prefill(self.params, cfg,
-                                          jnp.asarray(req.prompt[None, :]))
-            kv.write_prefill_states(req.slot, states, req.prompt_len)
+                                          jnp.asarray(fill[None, :]))
+            kv.write_prefill_states(req.slot, states, fill_len)
         else:
             btr = jnp.asarray(kv.block_tables[req.slot])
-            toks = jnp.asarray(req.prompt[None, start:end])
+            toks = jnp.asarray(fill[None, start:end])
             last_logits, kv.pools = self._prefill_fn(
                 self.params, kv.pools, btr, jnp.int32(req.slot), toks,
                 jnp.int32(start))
         req.prefill_pos = end
-        if end == req.prompt_len:
-            req.ledger.prefill_flops += model_flops(cfg, req.prompt_len, 1,
+        if end == fill_len:
+            # charge only the compute actually run: a prefix-cache hit
+            # skipped the first ``prefill_skip`` tokens entirely
+            req.ledger.prefill_flops += model_flops(cfg, fill_len, 1,
                                                     "prefill")
+            if req.prefill_skip:
+                req.ledger.prefill_flops -= model_flops(
+                    cfg, req.prefill_skip, 1, "prefill")
             if req.max_new_tokens <= 0:
                 # prefill-only scoring: same shape contract as StaticEngine
                 self._sched.finish(req, "length")
@@ -350,8 +373,49 @@ class Engine:
             tok = self._sample_first(last_logits, req)
             self._commit_token(req, tok, first=True)
 
+    def _grow_spans(self, reqs: List[Request], span) -> List[Request]:
+        """Back every request's write span ``span(req) -> (start, end)``
+        before a device step runs: on-demand page growth plus copy-on-write
+        privatization.  When the pool runs dry (even after evicting cached
+        pages) the newest-admitted RUNNING request is preempted and the
+        growth retried; requests that got preempted (possibly the one being
+        grown) drop out of the returned list."""
+        for req in sorted(reqs, key=lambda r: r.admit_seq):
+            s, e = span(req)
+            while (req.state is not RequestState.PREEMPTED
+                   and not self._kv.ensure_writable(req.slot, s, e)):
+                victim = self._sched.preempt_victim()
+                if victim is None:
+                    raise RuntimeError(
+                        f"block pool exhausted: request {req.request_id} "
+                        f"cannot grow to token {e} with "
+                        f"{self._kv.available_page_count} obtainable pages "
+                        "and no running victim to preempt; raise "
+                        "EngineConfig.num_pages or lower num_slots")
+                self._preempt(victim)
+        return [r for r in reqs if r.state is not RequestState.PREEMPTED]
+
+    def _preempt(self, req: Request) -> None:
+        """Scheduler preemption plus engine-side hooks (subclasses release
+        per-request companion state, e.g. the draft proposer's slot)."""
+        self._sched.preempt(req)
+
+    def _restore_decode_row(self, req: Request) -> None:
+        """Re-point the packed decode rows at a swap-resumed request: the
+        next step feeds its last committed token at its old position, so
+        the token stream continues exactly where preemption cut it."""
+        self._next_token[req.slot] = req.generated[-1]
+        self._pos[req.slot] = req.context_len - 1
+        self._steps[req.slot] = len(req.generated)
+
     def _run_decode(self, running: List[Request]) -> None:
         kv = self._kv
+        # the step writes each request's newest KV line at context_len - 1:
+        # back that position (page growth / copy-on-write) before launching
+        running = self._grow_spans(
+            running, lambda r: (r.context_len - 1, r.context_len))
+        if not running:
+            return
         slots = [r.slot for r in running]
         bt = kv.block_tables_for(slots)
         active = np.zeros((self.ecfg.num_slots,), bool)
@@ -379,6 +443,12 @@ class Engine:
         req.token_times.append(time.perf_counter())
         if first:
             req.state = RequestState.RUNNING
+        if self._kv.prefix_cache:
+            # pages whose every position is now final become
+            # prefix-shareable (content-hash registered); gated here so
+            # the O(context) req.tokens concat stays off the hot path
+            self._kv.freeze_committed(req.slot, req.tokens,
+                                      req.context_len - 1)
         if req.stop_token is not None and tok == req.stop_token:
             self._sched.finish(req, "stop")
         elif len(req.generated) >= req.max_new_tokens:

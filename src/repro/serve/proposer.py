@@ -100,12 +100,16 @@ class NgramProposer:
         self.max_n = max_n
         self.min_n = min_n
 
-    def propose(self, running: List[Request]) -> Proposal:
+    def propose(self, running: List[Request],
+                k_eff: Optional[np.ndarray] = None) -> Proposal:
+        """``k_eff`` (num_slots,) caps the drafted length per slot (the
+        adaptive-k path); drafts stay padded to the fixed width k."""
         B, k = self.num_slots, self.k
         draft = np.zeros((B, k), np.int32)
         n_draft = np.zeros((B,), np.int32)
         for req in running:
-            cand = ngram_propose(req.tokens, k, self.max_n, self.min_n)
+            kr = k if k_eff is None else int(k_eff[req.slot])
+            cand = ngram_propose(req.tokens, kr, self.max_n, self.min_n)
             draft[req.slot, : cand.shape[0]] = cand
             n_draft[req.slot] = cand.shape[0]
         return Proposal(draft=draft, n_draft=n_draft)
@@ -178,24 +182,30 @@ class DraftModelProposer:
     # -- per-request lifecycle --------------------------------------------
 
     def _admit(self, req: Request) -> None:
-        slot = self.kv.alloc(req.budget, slot=req.slot)
+        # prefill everything committed EXCEPT the newest token, so the
+        # catch-up feed below always has exactly one pending token — at
+        # first admission that is the target's prefill-sampled token, and
+        # after a preemption it re-ingests the whole resumed context the
+        # same way.  Pages grow on demand from here (ensure_writable).
+        fill = np.asarray(req.tokens[:-1], np.int32)
+        L = int(fill.shape[0])
+        slot = self.kv.alloc(L, slot=req.slot, budget=req.budget)
         if slot is None:
             raise RuntimeError(
                 f"draft cache out of pages for request "
-                f"{req.request_id} (budget {req.budget}, "
+                f"{req.request_id} ({L} tokens, "
                 f"{self.kv.free_page_count} free) — the draft pool must "
                 "mirror the target engine's sizing")
         self._slots[req.request_id] = slot
-        L = req.prompt_len
         if self._bucketable:
             toks = np.zeros((1, _bucket_len(L, self.prefill_bucket)),
                             np.int32)
-            toks[0, :L] = req.prompt
+            toks[0, :L] = fill
             _, states = self._prefill_fn(self.params, jnp.asarray(toks),
                                          jnp.int32(L))
         else:
             _, states = self._prefill_exact_fn(
-                self.params, jnp.asarray(req.prompt[None, :]))
+                self.params, jnp.asarray(fill[None, :]))
         self.kv.write_prefill_states(slot, states, L)
         self._fed[req.request_id] = L
         rng_d = (None if req.rng is None
@@ -204,7 +214,7 @@ class DraftModelProposer:
         self._temps[slot] = req.temperature if req.rng is not None else 0.0
         self._top_ks[slot] = req.top_k
         self._top_ps[slot] = req.top_p
-        self._dsteps[slot] = 0
+        self._dsteps[slot] = len(req.generated) - 1
 
     def release(self, req: Request) -> None:
         slot = self._slots.pop(req.request_id, None)
@@ -214,12 +224,16 @@ class DraftModelProposer:
 
     # -- one proposal round ------------------------------------------------
 
-    def propose(self, running: List[Request]) -> Proposal:
+    def propose(self, running: List[Request],
+                k_eff: Optional[np.ndarray] = None) -> Proposal:
         B, k = self.num_slots, self.k
         Tc = k + 1
         for req in running:
             if req.request_id not in self._slots:
                 self._admit(req)
+        k_hi = k if k_eff is None else max(
+            (int(k_eff[r.slot]) for r in running), default=k)
+        k_hi = max(k_hi, 1)
 
         # 1. catch up on the tokens the target committed since last round
         feed = np.zeros((B, Tc), np.int32)
@@ -237,6 +251,15 @@ class DraftModelProposer:
             n_pend[s] = pend.shape[0]
             act[s] = True
             self._fed[req.request_id] = fed + pend.shape[0]
+            # catch-up writes [fed, fed+pend) and the autoregressive draft
+            # steps write up to k_hi - 1 lines past it: grow the slot's
+            # pages on demand (past-budget overflow clips to trash margin)
+            if not self.kv.ensure_writable(
+                    s, fed, fed + int(pend.shape[0]) + k_hi - 1):
+                raise RuntimeError(
+                    f"draft cache out of pages growing request "
+                    f"{req.request_id} ({self.kv.free_page_count} free) — "
+                    "the draft pool must mirror the target engine's sizing")
         bt = self.kv.block_tables_for([r.slot for r in running])
         logits, self.kv.pools = self._catchup_fn(
             self.params, self.kv.pools, bt, jnp.asarray(feed),
@@ -245,7 +268,9 @@ class DraftModelProposer:
             logits, jnp.asarray(np.maximum(n_pend - 1, 0))[:, None, None],
             axis=1)[:, 0]                                       # (B, V)
 
-        # 2. draft k tokens autoregressively, collecting q distributions
+        # 2. draft k_hi tokens autoregressively, collecting q distributions
+        # (adaptive k: fewer draft steps of the SAME jitted fn; the draft
+        # and q arrays stay padded to width k so verify never recompiles)
         cur_pos = pos + n_pend                   # position of draft token 1
         toks: List[jax.Array] = []
         qs: List[jax.Array] = []
@@ -256,7 +281,7 @@ class DraftModelProposer:
         self._dsteps[act] += 1
         toks.append(tok)
         qs.append(q)
-        for i in range(1, k):
+        for i in range(1, k_hi):
             tok, q, self.kv.pools = self._draft_fn(
                 self.params, self.kv.pools, bt, tok[:, None],
                 jnp.asarray(cur_pos + i - 1), jnp.asarray(act),
@@ -266,8 +291,15 @@ class DraftModelProposer:
             self._dsteps[act] += 1
             toks.append(tok)
             qs.append(q)
-        draft = np.stack([np.asarray(t) for t in toks], axis=1)
-        n_draft = np.where(act, k, 0).astype(np.int32)
-        return Proposal(draft=draft.astype(np.int32), n_draft=n_draft,
-                        q_probs=jnp.stack(qs, axis=1),
+        draft = np.zeros((B, k), np.int32)
+        draft[:, :k_hi] = np.stack([np.asarray(t) for t in toks], axis=1)
+        q_hi = jnp.stack(qs, axis=1)                       # (B, k_hi, V)
+        q_probs = (q_hi if k_hi == k else jnp.pad(
+            q_hi, ((0, 0), (0, k - k_hi), (0, 0))))
+        if k_eff is None:
+            n_draft = np.where(act, k, 0).astype(np.int32)
+        else:
+            n_draft = np.where(act, np.minimum(k_eff, k_hi), 0).astype(
+                np.int32)
+        return Proposal(draft=draft, n_draft=n_draft, q_probs=q_probs,
                         n_catchup=np.where(act, n_pend, 0).astype(np.int32))

@@ -2,21 +2,33 @@
 
 Scheduling
 ----------
-Requests move WAITING -> PREFILL -> RUNNING -> FINISHED.  Each engine step:
+Requests move WAITING -> PREFILL -> RUNNING -> FINISHED, with a
+PREEMPTED detour when the block pool runs dry.  Each engine step:
 
-1. *admit*: pop waiting requests into free decode slots while the paged KV
-   cache can reserve their full ``prompt + max_new_tokens`` page budget —
-   admission happens mid-flight, into slots freed by earlier completions.
+1. *admit*: resume preempted requests first (swap-in or
+   recompute-re-prefill), then pop waiting requests into free decode
+   slots under *watermark admission*: a request is admitted when the pool
+   can back its PROMPT plus a configurable free-page watermark — not the
+   full ``prompt + max_new_tokens`` budget.  Slots then grow one page at
+   a time as decode crosses page boundaries (kv_cache.ensure_writable);
+   the watermark is the slack that keeps growth from immediately starving.
 2. *prefill*: every PREFILL request advances one chunk of at most
-   ``prefill_chunk`` prompt tokens (0 = the whole prompt in one chunk).
+   ``prefill_chunk`` prompt tokens (0 = the whole prompt in one chunk),
+   starting past whatever prefix the block pool's content-hash index
+   already holds (prefix sharing skips both the pages and the compute).
    Chunks attend to the request's previously written pages, so chunked and
    whole-prompt prefill are mathematically identical for dense archs.
    (MoE caveat: expert-capacity cutoffs scale with tokens-per-call, so a
    chunked MoE prefill can drop different tokens than a whole-prompt one —
-   the same GShard discontinuity batched decode already accepts.)
+   the same GShard discontinuity batched decode already accepts; prefix
+   sharing is gated off for MoE for the same reason.)
 3. *decode*: one jitted step over the packed slot batch produces the next
    token for every RUNNING request; finished requests (stop token or token
-   budget) are evicted and their pages recycled.
+   budget) are evicted and their pages recycled.  When a slot cannot grow
+   (pool dry even after evicting cached pages), the newest-admitted
+   running request is *preempted* — its pages either swapped to host
+   memory or dropped for recompute-on-resume — and re-queued ahead of all
+   waiting work.
 
 Decode roofline ledger (paper eq. 1: ``P = min(pi, I * beta)``)
 ---------------------------------------------------------------
@@ -48,7 +60,8 @@ import collections
 import dataclasses
 import enum
 import functools
-from typing import Deque, Dict, List, Optional, Tuple
+import math
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -135,6 +148,7 @@ class RequestState(enum.Enum):
     WAITING = "waiting"
     PREFILL = "prefill"
     RUNNING = "running"
+    PREEMPTED = "preempted"
     FINISHED = "finished"
 
 
@@ -151,6 +165,14 @@ class RooflineLedger:
     ``weight_passes`` counts target forward passes, so
     ``tokens_per_pass`` is the measured speculative yield E[tokens/pass];
     ``acceptance_rate`` is accepted drafts / proposed drafts.
+
+    The HBM-capacity axis: ``preemptions`` counts the times this request
+    was kicked out of its slot under pool pressure, ``swap_bytes`` the
+    host<->device traffic its swap round-trips moved,
+    ``prefix_cached_tokens`` the prompt tokens admission found already
+    resident in the block pool's content-hash index (pages AND prefill
+    compute saved), and ``pages_peak`` the most physical pages the request
+    ever held.
     """
     prefill_flops: float = 0.0
     decode_flops: float = 0.0
@@ -162,6 +184,10 @@ class RooflineLedger:
     draft_bytes: float = 0.0
     proposed: int = 0                # draft tokens offered for verification
     accepted: int = 0                # draft tokens that survived
+    preemptions: int = 0             # times evicted under pool pressure
+    swap_bytes: float = 0.0          # host<->device swap traffic
+    prefix_cached_tokens: int = 0    # prompt tokens served from the index
+    pages_peak: int = 0              # most physical pages held at once
 
     def add_decode_token(self, cfg: ModelConfig, context_len: int,
                          active_batch: int) -> None:
@@ -260,10 +286,17 @@ class Request:
 
     state: RequestState = RequestState.WAITING
     slot: int = -1
-    prefill_pos: int = 0                     # prompt tokens already prefilled
+    prefill_pos: int = 0                     # fill tokens already prefilled
     generated: List[int] = dataclasses.field(default_factory=list)
     finish_reason: str = ""
     ledger: RooflineLedger = dataclasses.field(default_factory=RooflineLedger)
+    admit_seq: int = -1                      # admission order (victim pick)
+    prefill_skip: int = 0                    # fill tokens prefix-cache hit
+    # preemption state: recompute-on-resume re-prefills prefill_src (the
+    # context snapshotted at preemption); swap-on-resume restores the
+    # parked SwapSnapshot instead
+    prefill_src: Optional[np.ndarray] = None
+    swap_snapshot: Optional[Any] = None
     # latency trace: wall-clock stamps from the serving host.  submit_time
     # is set by Engine.submit; one entry lands in token_times per committed
     # token (speculative commits share one stamp — their inter-token gap
@@ -274,6 +307,13 @@ class Request:
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
+
+    @property
+    def fill_tokens(self) -> np.ndarray:
+        """Tokens the prefill phase must feed: the prompt, or — after a
+        recompute-on-resume preemption — the full context at preemption
+        (prompt + everything generated by then)."""
+        return self.prompt if self.prefill_src is None else self.prefill_src
 
     @property
     def ttft(self) -> float:
@@ -309,17 +349,36 @@ class Request:
 
 
 class Scheduler:
-    """Admission + queue bookkeeping over a :class:`PagedKVCache`."""
+    """Admission + queue bookkeeping over a :class:`PagedKVCache`.
+
+    ``watermark`` is the fraction of the pool's pages admission must leave
+    obtainable AFTER backing a new request's prompt — the slack that lets
+    already-running slots grow on demand without instantly preempting.
+    ``preempt_mode`` picks what :meth:`preempt` does with a victim's
+    pages: ``"swap"`` parks them in host memory, ``"recompute"`` drops
+    them and re-prefills the snapshotted context on resume."""
 
     def __init__(self, cfg: ModelConfig, kv: PagedKVCache,
-                 prefill_chunk: int = 0):
+                 prefill_chunk: int = 0, watermark: float = 0.0,
+                 preempt_mode: str = "swap"):
+        if preempt_mode not in ("swap", "recompute"):
+            raise ValueError(f"unknown preempt_mode {preempt_mode!r}")
         self.cfg = cfg
         self.kv = kv
         self.prefill_chunk = prefill_chunk
+        self.watermark = watermark
+        self.preempt_mode = preempt_mode
         self.waiting: Deque[Request] = collections.deque()
+        self.preempted: List[Request] = []            # resume-priority queue
         self.active: Dict[int, Request] = {}          # slot -> request
         self.finished: List[Request] = []
+        self.preempt_count = 0
         self._next_id = 0
+        self._admit_seq = 0
+
+    @property
+    def watermark_pages(self) -> int:
+        return int(math.ceil(self.watermark * (self.kv.num_pages - 1)))
 
     def submit(self, req: Request) -> Request:
         req.request_id = self._next_id
@@ -329,23 +388,103 @@ class Scheduler:
         return req
 
     def has_work(self) -> bool:
-        return bool(self.waiting or self.active)
+        return bool(self.waiting or self.preempted or self.active)
 
     # -- phases ------------------------------------------------------------
 
-    def admit(self) -> List[Request]:
-        """FIFO admission while a slot + the full page budget are free."""
-        admitted = []
-        while self.waiting and self.kv.can_admit(self.waiting[0].budget):
-            req = self.waiting.popleft()
-            slot = self.kv.alloc(req.budget)
-            assert slot is not None
-            req.slot = slot
+    def _place(self, req: Request, slot: int, prefilling: bool) -> None:
+        req.slot = slot
+        req.admit_seq = self._admit_seq
+        self._admit_seq += 1
+        self.active[slot] = req
+        if prefilling:
             req.state = RequestState.PREFILL
-            req.prefill_pos = 0
-            self.active[slot] = req
+            req.prefill_pos = self.kv.prefix_cached_tokens(slot)
+            req.prefill_skip = req.prefill_pos
+            req.ledger.prefix_cached_tokens = max(
+                req.ledger.prefix_cached_tokens, req.prefill_pos)
+        else:
+            req.state = RequestState.RUNNING
+        req.ledger.pages_peak = max(req.ledger.pages_peak,
+                                    self.kv.slot_pages(slot))
+
+    def _resume(self, req: Request) -> bool:
+        """Bring one preempted request back; False if it does not fit."""
+        if req.swap_snapshot is not None:
+            snap = req.swap_snapshot
+            if (not self.kv.free_slot_count
+                    or self.kv.swap_in_pages_needed(snap)
+                    > self.kv.available_page_count):
+                return False
+            slot = self.kv.swap_in(snap)
+            if slot is None:
+                return False
+            req.swap_snapshot = None
+            req.ledger.swap_bytes += snap.nbytes
+            self._place(req, slot, prefilling=False)
+            return True
+        fill = req.fill_tokens
+        if not self.kv.can_admit_tokens(fill, self.watermark_pages):
+            return False
+        slot = self.kv.alloc(len(fill), budget=req.budget, tokens=fill)
+        if slot is None:
+            return False
+        self._place(req, slot, prefilling=True)
+        return True
+
+    def admit(self) -> List[Request]:
+        """Resume preempted requests first (they hold admission priority —
+        FIFO by arrival), then FIFO-admit waiting requests while a slot
+        plus prompt pages plus the watermark are obtainable."""
+        admitted = []
+        self.preempted.sort(key=lambda r: r.request_id)
+        while self.preempted and self._resume(self.preempted[0]):
+            admitted.append(self.preempted.pop(0))
+        if self.preempted:
+            return admitted                 # do not admit past the queue
+        while self.waiting:
+            req = self.waiting[0]
+            fill = req.fill_tokens
+            if not self.kv.can_admit_tokens(fill, self.watermark_pages):
+                break
+            slot = self.kv.alloc(len(fill), budget=req.budget, tokens=fill)
+            if slot is None:
+                break
+            self.waiting.popleft()
+            self._place(req, slot, prefilling=True)
             admitted.append(req)
         return admitted
+
+    def preempt(self, req: Request) -> None:
+        """Evict a running request under pool pressure: swap its pages to
+        host memory or (recompute mode) drop them after snapshotting its
+        committed context for re-prefill.  The request re-enters via
+        :meth:`admit` ahead of all waiting work."""
+        assert req.state in (RequestState.PREFILL, RequestState.RUNNING)
+        del self.active[req.slot]
+        if self.preempt_mode == "swap" and req.state is RequestState.RUNNING:
+            snap = self.kv.swap_out(req.slot)
+            req.swap_snapshot = snap
+            req.ledger.swap_bytes += snap.nbytes
+        else:
+            # recompute (or mid-prefill eviction): snapshot the committed
+            # context; resume re-prefills it from scratch
+            req.prefill_src = req.tokens
+            self.kv.free(req.slot)
+        req.slot = -1
+        req.state = RequestState.PREEMPTED
+        req.ledger.preemptions += 1
+        self.preempt_count += 1
+        self.preempted.append(req)
+
+    def preempt_victim(self) -> Optional[Request]:
+        """Newest-admitted running request — the standard last-in victim
+        (it has the least sunk decode work and frees pages fastest)."""
+        cands = [r for r in self.active.values()
+                 if r.state is RequestState.RUNNING]
+        if not cands:
+            return None
+        return max(cands, key=lambda r: r.admit_seq)
 
     def prefill_work(self) -> List[Tuple[Request, int, int]]:
         """(request, start, end) chunks to prefill this step — one chunk
@@ -354,9 +493,10 @@ class Scheduler:
         for req in self.active.values():
             if req.state is not RequestState.PREFILL:
                 continue
+            fill_len = len(req.fill_tokens)
             start = req.prefill_pos
-            end = req.prompt_len if self.prefill_chunk <= 0 else min(
-                req.prompt_len, start + self.prefill_chunk)
+            end = fill_len if self.prefill_chunk <= 0 else min(
+                fill_len, start + self.prefill_chunk)
             out.append((req, start, end))
         return out
 
@@ -367,6 +507,8 @@ class Scheduler:
     def finish(self, req: Request, reason: str) -> None:
         req.state = RequestState.FINISHED
         req.finish_reason = reason
+        req.ledger.pages_peak = max(req.ledger.pages_peak,
+                                    self.kv.slot_pages(req.slot))
         self.kv.free(req.slot)
         del self.active[req.slot]
         req.slot = -1

@@ -66,6 +66,29 @@ class SpecConfig:
     draft_params: Any = None
     ngram_max: int = 3                 # longest suffix n-gram to match
     ngram_min: int = 1
+    # adaptive drafted length: a host-side EWMA of each request's per-draft
+    # acceptance rate picks k_eff <= k every round (the verify step keeps
+    # its fixed (num_slots, k+1) shape — shorter drafts are padding).
+    # EXPERIMENTS.md §Speculative roofline: the marginal draft survives
+    # with prob ~a^j, so drafting past a^j < adapt_floor wastes draft work
+    # and verify FLOPs on tokens that almost never commit.
+    adaptive: bool = False
+    ewma_beta: float = 0.4             # weight of the newest observation
+    adapt_floor: float = 0.25          # keep drafting while a^j >= floor
+    k_min: int = 1                     # never shrink below this
+
+
+def adaptive_k(alpha: float, k_max: int, floor: float = 0.25,
+               k_min: int = 1) -> int:
+    """Drafted length maximizing useful work at acceptance rate ``alpha``:
+    the j-th draft commits with probability ~``alpha^j``, so draft while
+    that survival probability clears ``floor``."""
+    if alpha >= 1.0:
+        return k_max
+    if alpha <= 0.0:
+        return k_min
+    j = int(np.floor(np.log(floor) / np.log(alpha)))
+    return int(np.clip(j, k_min, k_max))
 
 
 def spec_expected_tokens_per_pass(alpha: float, k: int) -> float:
@@ -174,6 +197,9 @@ class SpecEngine(Engine):
             raise ValueError(f"unknown proposer {self.scfg.proposer!r}")
         self.proposer = None
         self.verify_steps = 0
+        # request_id -> EWMA of per-draft acceptance (adaptive k); starts
+        # optimistic so fresh requests draft at full k
+        self._accept_ewma: Dict[int, float] = {}
 
     # -- wiring ------------------------------------------------------------
 
@@ -225,11 +251,25 @@ class SpecEngine(Engine):
     def _run_decode(self, running: List[Request]) -> None:
         kv, s = self._kv, self.scfg
         k, T = s.k, s.k + 1
+        # the verify step writes T KV lines from context_len - 1 on:
+        # back the whole span (growth + copy-on-write) so speculative
+        # scribbles can never land on a shared page; past-budget overflow
+        # is clipped onto the trash-margin entries as before
+        running = self._grow_spans(
+            running, lambda r: (r.context_len - 1, r.context_len - 1 + T))
+        if not running:
+            return
         slots = [r.slot for r in running]
         bt = kv.block_tables_for(slots)
         active = np.zeros((self.ecfg.num_slots,), bool)
         active[slots] = True
-        prop = self.proposer.propose(running)
+        k_eff = None
+        if s.adaptive:
+            k_eff = np.full((self.ecfg.num_slots,), k, np.int32)
+            for req in running:
+                a = self._accept_ewma.get(req.request_id, 1.0)
+                k_eff[req.slot] = adaptive_k(a, k, s.adapt_floor, s.k_min)
+        prop = self.proposer.propose(running, k_eff=k_eff)
 
         feed = np.zeros((self.ecfg.num_slots, T), np.int32)
         feed[:, 0] = np.where(active, self._next_token, 0)
@@ -266,13 +306,26 @@ class SpecEngine(Engine):
             accepted = committed - 1 if committed == n else committed
             req.ledger.add_verify_step(self.cfg, L, T, committed, accepted,
                                        nd, n_active)
+            if s.adaptive and nd > 0:
+                prev = self._accept_ewma.get(req.request_id, 1.0)
+                obs = accepted / nd
+                self._accept_ewma[req.request_id] = (
+                    (1.0 - s.ewma_beta) * prev + s.ewma_beta * obs)
             if s.proposer == "draft":
                 n_fed = int(prop.n_catchup[slot])
-                req.ledger.add_draft_cost(s.draft_cfg, L, n_fed, k - 1,
+                n_decodes = max(int(prop.n_draft[slot]) - 1, 0)
+                req.ledger.add_draft_cost(s.draft_cfg, L, n_fed, n_decodes,
                                           n_active)
+
+    def _preempt(self, req: Request) -> None:
+        # the draft proposer's mirrored slot must go with the target's —
+        # it re-admits (re-prefilling the committed context) on resume
+        self.proposer.release(req)
+        super()._preempt(req)
 
     def step(self) -> List[Request]:
         done = super().step()
         for req in done:
             self.proposer.release(req)
+            self._accept_ewma.pop(req.request_id, None)
         return done

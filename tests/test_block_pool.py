@@ -1,0 +1,174 @@
+"""Block-pool manager invariants: refcount lifecycle with double-free
+guards, content-hash freeze/lookup dedup, LRU eviction of cached pages,
+copy-on-write decisions, and page conservation under interleaved
+alloc/free (the fragmentation path)."""
+
+import numpy as np
+import pytest
+
+from repro.serve import BlockPool, chain_hash, token_chain_hashes
+
+
+def test_acquire_release_lifecycle():
+    pool = BlockPool(num_pages=4, page_size=4)
+    assert pool.free_page_count == 3          # page 0 is the trash page
+    a = pool.acquire()
+    b = pool.acquire()
+    assert a != b and 0 not in (a, b)
+    assert pool.refcount(a) == 1
+    assert pool.pages_in_use == 2
+    pool.incref(a)
+    assert pool.refcount(a) == 2
+    pool.release(a)
+    assert pool.pages_in_use == 2             # still one reference
+    pool.release(a)
+    assert pool.pages_in_use == 1
+    assert pool.free_page_count == 2
+    assert pool.stats.peak_in_use == 2
+
+
+def test_double_free_and_bad_refs_raise():
+    pool = BlockPool(num_pages=4, page_size=4)
+    a = pool.acquire()
+    pool.release(a)
+    with pytest.raises(ValueError, match="double free"):
+        pool.release(a)
+    with pytest.raises(ValueError, match="unreferenced"):
+        pool.incref(a)
+    with pytest.raises(ValueError, match="trash"):
+        pool.release(0)
+    with pytest.raises(ValueError, match="trash"):
+        pool.incref(0)
+    with pytest.raises(ValueError, match="unreferenced"):
+        pool.freeze(a, 123)
+
+
+def test_freeze_lookup_dedup():
+    pool = BlockPool(num_pages=5, page_size=4)
+    a = pool.acquire()
+    key = chain_hash(None, [1, 2, 3, 4])
+    pool.freeze(a, key)
+    assert pool.is_frozen(a)
+    assert not pool.writable(a), "frozen pages are never written in place"
+    # a second reference via lookup — no copy, refcount bump
+    assert pool.lookup(key) == a
+    assert pool.refcount(a) == 2
+    assert pool.stats.dedup_hits == 1
+    # releasing all references parks the page in the reuse cache, where a
+    # later lookup revives it
+    pool.release(a)
+    pool.release(a)
+    assert pool.pages_cached == 1
+    assert pool.free_page_count == 3
+    assert pool.lookup(key) == a
+    assert pool.refcount(a) == 1
+    assert pool.peek(chain_hash(None, [9, 9, 9, 9])) is None
+    assert pool.lookup(0xdead) is None
+
+
+def test_lru_eviction_under_pressure():
+    pool = BlockPool(num_pages=4, page_size=4)      # 3 usable pages
+    keys = [chain_hash(None, [i] * 4) for i in range(3)]
+    pages = []
+    for k in keys:
+        p = pool.acquire()
+        pool.freeze(p, k)
+        pool.release(p)                             # -> cached LRU
+        pages.append(p)
+    assert pool.pages_cached == 3 and pool.free_page_count == 0
+    assert pool.available_page_count == 3
+    # acquiring evicts the LEAST recently cached page and drops its hash
+    got = pool.acquire()
+    assert got == pages[0]
+    assert pool.stats.evictions == 1
+    assert pool.lookup(keys[0]) is None, "evicted hash entry must drop"
+    assert pool.lookup(keys[1]) == pages[1], "survivors stay addressable"
+
+
+def test_duplicate_key_freeze_keeps_index_bijective():
+    """Two pages freezing identical content (same chain hash): the loser
+    stays an ordinary unregistered page — it frees normally instead of
+    parking unreachable in the cache, and its reclamation can never drop
+    the live owner's index entry."""
+    pool = BlockPool(num_pages=5, page_size=4)
+    a = pool.acquire()
+    b = pool.acquire()
+    key = chain_hash(None, [5, 6, 7, 8])
+    pool.freeze(a, key)
+    pool.freeze(b, key)                       # duplicate content: declined
+    assert not pool.is_frozen(b)
+    pool.release(b)
+    assert pool.pages_cached == 0, "unindexed duplicate must not cache"
+    # drain free pages so the next acquire would have to evict
+    while pool.free_page_count:
+        pool.acquire()
+    assert pool.peek(key) == a, "owner's index entry must survive"
+    pool.release(a)
+    pool.acquire()                            # evicts a (the only cached)
+    assert pool.peek(key) is None
+
+
+def test_cow_decision():
+    pool = BlockPool(num_pages=5, page_size=4)
+    a = pool.acquire()
+    assert pool.writable(a) and not pool.cow_needed(a)
+    pool.incref(a)
+    assert pool.cow_needed(a), "shared pages need copy-on-write"
+    pool.release(a)
+    assert pool.writable(a)
+    pool.freeze(a, 42)
+    assert pool.cow_needed(a), "frozen content must stay byte-stable"
+    assert not pool.cow_needed(0), "trash-page writes are free-for-all"
+
+
+def test_chain_hash_prefix_sensitivity():
+    h1 = chain_hash(None, [1, 2, 3, 4])
+    assert h1 == chain_hash(None, [1, 2, 3, 4])
+    assert h1 != chain_hash(None, [1, 2, 3, 5])
+    # same page tokens under different prefixes must not collide: KV
+    # content depends on the whole prefix
+    assert chain_hash(h1, [7, 8]) != chain_hash(chain_hash(None, [0, 0, 0, 0]), [7, 8])
+    toks = np.arange(10, dtype=np.int32)
+    hs = token_chain_hashes(toks, 4)
+    assert len(hs) == 2                      # only FULL pages are hashed
+    assert hs[0] == chain_hash(None, toks[:4])
+    assert hs[1] == chain_hash(hs[0], toks[4:8])
+
+
+def test_conservation_under_interleaved_alloc_free():
+    """Fragmentation path: pages keep being conserved (none leaked, none
+    duplicated) through an adversarial interleaving of acquires, aliases,
+    freezes, and releases."""
+    rng = np.random.default_rng(0)
+    pool = BlockPool(num_pages=17, page_size=4)
+    held = []                                # (page, n_refs)
+    next_key = iter(range(10_000))
+    for step in range(600):
+        op = rng.integers(0, 4)
+        if op == 0 or not held:
+            p = pool.acquire()
+            if p is not None:
+                held.append([p, 1])
+        elif op == 1:
+            ent = held[rng.integers(len(held))]
+            pool.incref(ent[0])
+            ent[1] += 1
+        elif op == 2:
+            ent = held[rng.integers(len(held))]
+            if not pool.is_frozen(ent[0]):
+                pool.freeze(ent[0], next(next_key))
+        else:
+            i = rng.integers(len(held))
+            held[i][1] -= 1
+            pool.release(held[i][0])
+            if held[i][1] == 0:
+                held.pop(i)
+        refs = {}
+        for p, n in held:
+            refs[p] = n
+        pool.check(refs)
+    for p, n in held:
+        for _ in range(n):
+            pool.release(p)
+    pool.check({})
+    assert pool.available_page_count == 16, "all pages must recycle"

@@ -1,6 +1,6 @@
 """Paged KV cache: write/read round-trips equal the dense cache, and the
-slot/page allocator keeps its invariants (reserved trash page, reuse,
-exhaustion)."""
+block-pool view keeps its invariants (reserved trash page, reuse,
+exhaustion, on-demand growth, prefix sharing + copy-on-write, swap)."""
 
 import jax
 import jax.numpy as jnp
@@ -10,7 +10,8 @@ import pytest
 from repro.configs import get_config, smoke
 from repro.models import decode_step, decode_step_paged, init_cache, \
     init_params, prefill
-from repro.serve import PagedKVCache, supports_paging
+from repro.serve import (PagedKVCache, supports_paging,
+                         supports_prefix_cache)
 from repro.serve.engine import _place_prefill_states
 
 
@@ -164,3 +165,155 @@ def test_alloc_pins_requested_slot():
         kv.alloc(8, slot=1)                # already taken
     kv.free(1)
     assert kv.alloc(8, slot=1) == 1
+
+
+# -- block-pool refactor: on-demand growth, sharing, CoW, swap -------------
+
+def test_on_demand_growth_and_budget_clip():
+    """A slot backed only for its prompt grows one page at a time as the
+    write frontier advances; past-budget positions clip to the trash
+    margin and never consume pages."""
+    cfg = smoke(get_config("qwen3-0.6b"))
+    kv = PagedKVCache(cfg, num_slots=2, page_size=4, max_len=16,
+                      margin_tokens=3)
+    s = kv.alloc(5, budget=14)             # 2 pages now, 4 at full budget
+    assert kv.slot_pages(s) == 2
+    free0 = kv.free_page_count
+    assert np.all(kv.block_tables[s][2:] == 0)
+    assert kv.ensure_writable(s, 5, 6)     # within page 2: no growth
+    assert kv.slot_pages(s) == 2 and kv.free_page_count == free0
+    assert kv.ensure_writable(s, 8, 9)     # crosses into block 2
+    assert kv.slot_pages(s) == 3
+    assert kv.block_tables[s][2] != 0
+    # a verify-style span pushing past the budget allocates only the
+    # blocks the budget covers (14 tokens -> 4 blocks), trash beyond
+    assert kv.ensure_writable(s, 12, 17)
+    assert kv.slot_pages(s) == 4
+    assert kv.block_tables[s][4] == 0, "past-budget entries stay trash"
+    kv.pool.check(kv.table_refs())
+
+
+def test_free_guards_double_free():
+    cfg = smoke(get_config("qwen3-0.6b"))
+    kv = PagedKVCache(cfg, num_slots=2, page_size=4, max_len=8)
+    s = kv.alloc(8)
+    kv.free(s)
+    with pytest.raises(ValueError, match="double free"):
+        kv.free(s)
+    kv.pool.check(kv.table_refs())
+
+
+def test_prefix_sharing_aliases_pages():
+    """Two slots admitted with the same prompt share its full pages: the
+    second alloc takes references instead of pages, and the pool's
+    refcounts agree with the block tables."""
+    cfg = smoke(get_config("qwen3-0.6b"))
+    assert supports_prefix_cache(cfg)
+    kv = PagedKVCache(cfg, num_slots=3, page_size=4, max_len=16,
+                      prefix_cache=True)
+    toks = np.arange(10, dtype=np.int32)    # 2 full pages + 2 tail tokens
+    a = kv.alloc(10, budget=16, tokens=toks)
+    free_after_a = kv.free_page_count
+    b = kv.alloc(10, budget=16, tokens=toks)
+    assert kv.prefix_cached_tokens(a) == 0
+    assert kv.prefix_cached_tokens(b) == 8
+    assert free_after_a - kv.free_page_count == 1, \
+        "the aliasing slot only needs its own tail page"
+    np.testing.assert_array_equal(kv.block_tables[a][:2],
+                                  kv.block_tables[b][:2])
+    assert kv.block_tables[a][2] != kv.block_tables[b][2]
+    assert kv.pool.stats.dedup_hits == 2
+    kv.pool.check(kv.table_refs())
+    # freeing the owner keeps the shared pages alive for the alias
+    kv.free(a)
+    kv.pool.check(kv.table_refs())
+    assert kv.pool.refcount(int(kv.block_tables[b][0])) == 1
+
+
+def test_prefix_cache_rejects_unsupported_arch():
+    cfg = smoke(get_config("xlstm-350m"))
+    assert not supports_prefix_cache(cfg)
+    with pytest.raises(NotImplementedError, match="prefix"):
+        PagedKVCache(cfg, 2, 4, 8, prefix_cache=True)
+
+
+def test_cow_isolates_divergent_writes():
+    """A write into a shared page copies it first: the writer gets a
+    private page with identical bytes, the sibling's view never moves."""
+    S = 8                                    # page-aligned prompt
+    cfg, params, prompt, _, states = _prefilled("qwen3-0.6b", S)
+    kv = PagedKVCache(cfg, num_slots=2, page_size=4, max_len=16,
+                      prefix_cache=True)
+    toks = np.asarray(prompt[0])
+    a = kv.alloc(S, budget=16, tokens=toks)
+    kv.write_prefill_states(a, states, S)
+    b = kv.alloc(S, budget=16, tokens=toks)
+    assert kv.prefix_cached_tokens(b) == S - 1, \
+        "aligned full match recomputes exactly the last token"
+    np.testing.assert_array_equal(kv.block_tables[a][:2],
+                                  kv.block_tables[b][:2])
+    before_a = jax.tree.leaves(kv.dense_view(a)[0])[0].copy()
+    # b's first write lands in the shared final page -> copy-on-write
+    assert kv.ensure_writable(b, S - 1, S)
+    assert kv.pool.stats.cow_copies == 1
+    assert kv.block_tables[a][1] != kv.block_tables[b][1]
+    after_a = jax.tree.leaves(kv.dense_view(a)[0])[0]
+    np.testing.assert_array_equal(np.asarray(before_a), np.asarray(after_a))
+    # the copy carried the original bytes
+    va = jax.tree.leaves(kv.dense_view(a)[0])[0]
+    vb = jax.tree.leaves(kv.dense_view(b)[0])[0]
+    np.testing.assert_array_equal(np.asarray(va[:, :, :S]),
+                                  np.asarray(vb[:, :, :S]))
+    kv.pool.check(kv.table_refs())
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "xlstm-350m"])
+def test_swap_roundtrip_restores_bytes(arch):
+    """swap_out -> swap_in round-trips a slot's pages (and recurrent state
+    rows for hybrid archs) through host memory byte-exactly, possibly
+    into a different slot."""
+    S = 6
+    cfg, params, prompt, _, states = _prefilled(arch, S)
+    kv = PagedKVCache(cfg, num_slots=3, page_size=4, max_len=12)
+    s = kv.alloc(S, budget=12)
+    kv.write_prefill_states(s, states, S)
+    kv.ensure_writable(s, S, S + 1)          # grow one decode page
+    before = [np.asarray(x) for x in jax.tree.leaves(kv.dense_view(s))]
+    n_pages = kv.slot_pages(s)
+    free0 = kv.free_page_count
+    snap = kv.swap_out(s)
+    assert snap.nbytes > 0
+    assert kv.free_page_count == free0 + n_pages
+    # occupy the old slot so the restore must land elsewhere
+    blocker = kv.alloc(4, slot=s)
+    s2 = kv.swap_in(snap)
+    assert s2 is not None and s2 != s
+    after = [np.asarray(x) for x in jax.tree.leaves(kv.dense_view(s2))]
+    for x, y in zip(before, after):
+        np.testing.assert_array_equal(x, y)
+    assert kv.slot_pages(s2) == n_pages
+    kv.free(blocker)
+    kv.free(s2)
+    kv.pool.check(kv.table_refs())
+
+
+def test_swap_in_rededuplicates_frozen_prefix():
+    """Frozen prefix pages that survive in the index are re-aliased on
+    swap-in instead of copied back: the resume consumes fewer fresh
+    pages than it released."""
+    S = 8
+    cfg, params, prompt, _, states = _prefilled("qwen3-0.6b", S)
+    kv = PagedKVCache(cfg, num_slots=2, page_size=4, max_len=16,
+                      prefix_cache=True)
+    toks = np.asarray(prompt[0])
+    s = kv.alloc(S, budget=16, tokens=toks)
+    kv.write_prefill_states(s, states, S)
+    snap = kv.swap_out(s)
+    assert snap.frozen_blocks == 2
+    # both frozen pages still sit in the reuse cache -> zero fresh pages
+    assert kv.swap_in_pages_needed(snap) == 0
+    free0 = kv.free_page_count
+    s2 = kv.swap_in(snap)
+    assert s2 is not None
+    assert kv.free_page_count == free0, "re-aliased, not re-acquired"
+    kv.pool.check(kv.table_refs())

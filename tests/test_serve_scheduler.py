@@ -15,6 +15,7 @@ from repro.configs import get_config, smoke
 from repro.models import init_params
 from repro.serve import (Engine, EngineConfig, GenerateConfig, RequestState,
                          StaticEngine)
+from repro.serve.crosscheck import capacity_report
 
 
 @pytest.fixture(scope="module")
@@ -157,6 +158,120 @@ def test_oversized_request_rejected_in_flight(qwen):
         engine.submit(_prompt(cfg, 61, 30),
                       GenerateConfig(max_new_tokens=30))
     engine.run()
+
+
+@pytest.mark.parametrize("mode", ["swap", "recompute"])
+def test_preempt_resume_byte_identity(qwen, mode):
+    """An undersized block pool forces preemption mid-decode (on-demand
+    growth runs dry); the victim resumes — swap restores its pages from
+    host, recompute re-prefills its committed context — and every
+    request's greedy tokens still equal its solo static run."""
+    cfg, params = qwen
+    gen = GenerateConfig(max_new_tokens=8)
+    prompts = [_prompt(cfg, 80 + i, 6) for i in range(2)]
+    refs = [_static_tokens(cfg, params, p, gen) for p in prompts]
+    # budget 14 tokens = 4 pages/request; 5 usable pages cannot hold two
+    # full-grown requests -> someone gets preempted
+    engine = Engine(cfg, params, EngineConfig(
+        num_slots=2, page_size=4, max_len=16, num_pages=6,
+        preempt_mode=mode))
+    reqs = [engine.submit(p, gen) for p in prompts]
+    engine.run()
+    for req, ref in zip(reqs, refs):
+        np.testing.assert_array_equal(np.asarray(req.generated), ref)
+    assert engine._sched.preempt_count > 0, "the pool never ran dry"
+    assert sum(r.ledger.preemptions for r in reqs) == \
+        engine._sched.preempt_count
+    if mode == "swap":
+        assert any(r.ledger.swap_bytes > 0 for r in reqs)
+    engine._kv.pool.check(engine._kv.table_refs())
+
+
+def test_watermark_serializes_admission(qwen):
+    """Watermark admission holds the second request back until the pool
+    can absorb growth: no preemption happens, requests serialize, and
+    outputs stay byte-identical to static."""
+    cfg, params = qwen
+    gen = GenerateConfig(max_new_tokens=8)
+    prompts = [_prompt(cfg, 90 + i, 6) for i in range(2)]
+    refs = [_static_tokens(cfg, params, p, gen) for p in prompts]
+    engine = Engine(cfg, params, EngineConfig(
+        num_slots=2, page_size=4, max_len=16, num_pages=6, watermark=0.4))
+    reqs = [engine.submit(p, gen) for p in prompts]
+    engine.run()
+    for req, ref in zip(reqs, refs):
+        np.testing.assert_array_equal(np.asarray(req.generated), ref)
+    assert engine._sched.preempt_count == 0, \
+        "watermark admission should have prevented preemption"
+    assert all(r.ledger.mean_batch == 1.0 for r in reqs), \
+        "requests should have serialized through the small pool"
+
+
+def test_admission_refused_when_pool_too_small(qwen):
+    """A request whose prompt alone exceeds the pool + watermark is
+    refused with a clear error instead of deadlocking the engine."""
+    cfg, params = qwen
+    engine = Engine(cfg, params, EngineConfig(
+        num_slots=2, page_size=4, max_len=16, num_pages=3))
+    engine.submit(_prompt(cfg, 95, 12), GenerateConfig(max_new_tokens=2))
+    with pytest.raises(RuntimeError, match="cannot be admitted"):
+        engine.run()
+
+
+def test_prefix_cache_engine_byte_identity_and_dedup(qwen):
+    """Shared-system-prompt workload through the prefix-cached engine:
+    every request's greedy tokens equal its solo static run, the pool
+    records dedup hits, and peak page usage drops below the unshared
+    engine's."""
+    cfg, params = qwen
+    shared = _prompt(cfg, 100, 8)
+    prompts = [np.concatenate([shared, _prompt(cfg, 101 + i, 2)])
+               for i in range(4)]
+    gen = GenerateConfig(max_new_tokens=6)
+    refs = [_static_tokens(cfg, params, p, gen) for p in prompts]
+
+    def run(pc):
+        engine = Engine(cfg, params, EngineConfig(
+            num_slots=2, page_size=4, max_len=18, prefix_cache=pc))
+        reqs = [engine.submit(p, gen) for p in prompts]
+        engine.run()
+        return engine, reqs
+
+    engine_c, reqs_c = run(True)
+    for req, ref in zip(reqs_c, refs):
+        np.testing.assert_array_equal(np.asarray(req.generated), ref)
+    cap_c = capacity_report(engine_c)
+    assert cap_c["pages_deduped"] > 0
+    assert any(r.ledger.prefix_cached_tokens >= 8 for r in reqs_c[1:])
+    engine_u, _ = run(False)
+    cap_u = capacity_report(engine_u)
+    assert cap_c["pages_peak"] < cap_u["pages_peak"], \
+        (cap_c["pages_peak"], cap_u["pages_peak"])
+    engine_c._kv.pool.check(engine_c._kv.table_refs())
+
+
+@pytest.mark.parametrize("mode", ["swap", "recompute"])
+def test_prefix_cache_with_preemption_byte_identity(qwen, mode):
+    """The acceptance-criteria stressor: shared-prefix requests in an
+    undersized pool — aliased pages, copy-on-write, preemption, and
+    resume all compose, and greedy outputs still equal the solo static
+    runs (swap-in re-aliases whatever survived in the prefix index)."""
+    cfg, params = qwen
+    shared = _prompt(cfg, 130, 8)
+    prompts = [np.concatenate([shared, _prompt(cfg, 131 + i, 2)])
+               for i in range(3)]
+    gen = GenerateConfig(max_new_tokens=6)
+    refs = [_static_tokens(cfg, params, p, gen) for p in prompts]
+    engine = Engine(cfg, params, EngineConfig(
+        num_slots=2, page_size=4, max_len=16, num_pages=6,
+        prefix_cache=True, preempt_mode=mode))
+    reqs = [engine.submit(p, gen) for p in prompts]
+    engine.run()
+    for req, ref in zip(reqs, refs):
+        np.testing.assert_array_equal(np.asarray(req.generated), ref)
+    assert engine._sched.preempt_count > 0, "the pool never ran dry"
+    assert engine._kv.pool.stats.dedup_hits > 0, "prefix never shared"
+    engine._kv.pool.check(engine._kv.table_refs())
 
 
 def test_request_latency_trace(qwen):

@@ -14,8 +14,9 @@ import pytest
 from repro.configs import get_config, smoke
 from repro.models import init_params
 from repro.serve import (Engine, EngineConfig, GenerateConfig, SpecConfig,
-                         SpecEngine, sampling, spec_expected_tokens_per_pass,
-                         spec_speedup_model, supports_spec)
+                         SpecEngine, adaptive_k, sampling,
+                         spec_expected_tokens_per_pass, spec_speedup_model,
+                         supports_spec)
 from repro.serve.proposer import ngram_propose
 
 
@@ -268,6 +269,81 @@ def test_spec_ledger_phase_splits(qwen):
     m2 = spec_speedup_model(cfg, 3, 1.0, context_len=16, active_batch=2,
                             draft_cfg=cfg)
     assert m2["speedup"] < m["speedup"]
+
+
+def test_adaptive_k_rule():
+    """The EWMA -> drafted-length rule: full k at perfect acceptance,
+    floor at zero, monotone in between, clamped to [k_min, k]."""
+    assert adaptive_k(1.0, 4) == 4
+    assert adaptive_k(0.0, 4) == 1
+    assert adaptive_k(0.9, 8) > adaptive_k(0.3, 8)
+    assert adaptive_k(0.5, 8, floor=0.25) == 2      # 0.5^2 = floor
+    assert adaptive_k(1e-9, 8, k_min=2) == 2
+    for a in np.linspace(0.01, 0.99, 23):
+        assert 1 <= adaptive_k(float(a), 5) <= 5
+
+
+@pytest.mark.parametrize("proposer", ["ngram", "draft"])
+def test_adaptive_k_byte_identity(qwen, proposer):
+    """--spec-k-adaptive shrinks the drafted length inside the fixed
+    (num_slots, k+1) verify shape; greedy outputs must stay byte-identical
+    to the non-speculative engine whatever length the EWMA picks."""
+    cfg, params = qwen
+    prompts = [_prompt(cfg, 110 + i, L) for i, L in enumerate([5, 8, 6])]
+    gen = GenerateConfig(max_new_tokens=8)
+    base = Engine(cfg, params, EngineConfig(num_slots=2, page_size=4,
+                                            max_len=32))
+    breqs = _run(base, prompts, gen)
+    scfg = (SpecConfig(k=3, proposer="draft", draft_cfg=cfg,
+                       draft_params=params, adaptive=True,
+                       ewma_beta=0.6)
+            if proposer == "draft" else
+            SpecConfig(k=3, proposer="ngram", adaptive=True, ewma_beta=0.6))
+    eng = SpecEngine(cfg, params, EngineConfig(num_slots=2, page_size=4,
+                                               max_len=32), scfg)
+    sreqs = _run(eng, prompts, gen)
+    for b, s in zip(breqs, sreqs):
+        np.testing.assert_array_equal(np.asarray(b.generated),
+                                      np.asarray(s.generated))
+    # the EWMA actually tracked something and was cleaned up at finish
+    assert not eng._accept_ewma
+    if proposer == "ngram":
+        # random prompts give the n-gram proposer a poor acceptance rate:
+        # at least one request must have been drafting below full k by
+        # the end (the whole point of shrinking)
+        assert any(r.ledger.acceptance_rate < 1.0 for r in sreqs
+                   if r.ledger.proposed)
+
+
+def test_spec_cow_rollback_with_shared_prefix(qwen):
+    """Prefix sharing under speculative decoding: requests with identical
+    page-aligned prompts alias the same physical pages, the first
+    divergent write copies (CoW fires), and draft-rollback scribbles can
+    never corrupt a sibling — greedy outputs stay byte-identical to the
+    unshared non-speculative engine."""
+    cfg, params = qwen
+    motif = _prompt(cfg, 120, 2)
+    prompt = np.tile(motif, 4).astype(np.int32)     # 8 tokens, self-similar
+    prompts = [prompt.copy() for _ in range(3)]
+    gen = GenerateConfig(max_new_tokens=8)
+    base = Engine(cfg, params, EngineConfig(num_slots=2, page_size=4,
+                                            max_len=16))
+    breqs = _run(base, prompts, gen)
+    eng = SpecEngine(cfg, params,
+                     EngineConfig(num_slots=2, page_size=4, max_len=16,
+                                  prefix_cache=True),
+                     SpecConfig(k=3, proposer="ngram"))
+    sreqs = _run(eng, prompts, gen)
+    for b, s in zip(breqs, sreqs):
+        np.testing.assert_array_equal(np.asarray(b.generated),
+                                      np.asarray(s.generated))
+    pool = eng._kv.pool
+    assert pool.stats.dedup_hits > 0, "identical prompts must alias"
+    assert pool.stats.cow_copies > 0, \
+        "the aligned shared frontier page must copy on first write"
+    # rejections happened, so rollback writes really exercised the span
+    assert any(r.ledger.accepted < r.ledger.proposed for r in sreqs)
+    pool.check(eng._kv.table_refs())
 
 
 def test_spec_latency_trace(qwen):
