@@ -53,9 +53,9 @@ import numpy as np
 from repro.configs import ALL_ARCHS, get_config, smoke
 from repro.core.roofline.hardware import HOST_CPU_FALLBACK, TPU_V5E
 from repro.models import init_params
-from repro.serve import (Engine, EngineConfig, GenerateConfig, SpecConfig,
-                         SpecEngine)
-from repro.serve.crosscheck import capacity_report
+from repro.serve import (EngineConfig, GenerateConfig, SpecConfig,
+                         make_engine, parse_mesh, tp_sharding_error)
+from repro.serve.crosscheck import capacity_report, crosscheck_collectives
 from repro.serve.scheduler import decode_token_bytes
 from repro.serve.spec import speculative_summary
 
@@ -98,7 +98,7 @@ def run_bench(arch: str, *, requests: int, slots: int, page_size: int,
               spec_k_adaptive: bool = False, shared_prefix: bool = False,
               prefix_cache: bool = False, num_pages: int = 0,
               watermark: float = 0.0, preempt: str = "swap",
-              warmup: bool = True) -> dict:
+              warmup: bool = True, mesh=(1, 1)) -> dict:
     cfg = smoke(get_config(arch))
     params = init_params(cfg, jax.random.key(0))
     chip = TPU_V5E if chip_name == "tpu_v5e" else HOST_CPU_FALLBACK
@@ -122,9 +122,7 @@ def run_bench(arch: str, *, requests: int, slots: int, page_size: int,
         else:
             scfg = SpecConfig(k=spec_k, proposer="ngram",
                               adaptive=spec_k_adaptive)
-        engine = SpecEngine(cfg, params, ecfg, scfg)
-    else:
-        engine = Engine(cfg, params, ecfg)
+    engine = make_engine(cfg, params, ecfg, scfg, mesh_shape=mesh)
 
     prompts = _prompts(cfg, requests, prompt_len, repetitive=spec != "none",
                        shared_prefix=shared_prefix)
@@ -158,7 +156,13 @@ def run_bench(arch: str, *, requests: int, slots: int, page_size: int,
     itl_p50 = float(np.percentile(gaps, 50)) if gaps.size else float("nan")
     itl_p95 = float(np.percentile(gaps, 95)) if gaps.size else float("nan")
     cap = capacity_report(engine)
-    out = {"tokens_per_s": tps, "ceiling_tokens_per_s": ceiling_tps,
+    tp = mesh[1]
+    ici_dev = float(np.mean([t.ici_wire_bytes_dev for t in ledgers]))
+    out = {"tp": tp, "ici_bytes_dev": ici_dev,
+           "binding_roof": ledgers[0].binding_roof,
+           "collective_crosscheck": (crosscheck_collectives(engine)
+                                     if tp > 1 else None),
+           "tokens_per_s": tps, "ceiling_tokens_per_s": ceiling_tps,
            "roofline_fraction": frac, "arithmetic_intensity": ai,
            "bound_class": bound, "requests": len(done),
            "ttft_s": ttft, "itl_p50_s": itl_p50, "itl_p95_s": itl_p95,
@@ -175,6 +179,11 @@ def run_bench(arch: str, *, requests: int, slots: int, page_size: int,
                f"itl_p50_ms={itl_p50 * 1e3:.2f};"
                f"itl_p95_ms={itl_p95 * 1e3:.2f}")
     name = f"serve_{arch}_b{slots}"
+    if tp > 1:
+        name += f"_tp{tp}"
+        derived += (f";tp={tp};ici_B={ici_dev:.0f};"
+                    f"I_ici={ledgers[0].ici_intensity:.1f};"
+                    f"binds={out['binding_roof']}")
     if shared_prefix:
         name += "_shared" + ("_cached" if prefix_cache else "")
         derived += (f";pages_peak={cap['pages_peak']};"
@@ -185,12 +194,60 @@ def run_bench(arch: str, *, requests: int, slots: int, page_size: int,
         out.update(speculative_summary(cfg, done, spec_k,
                                        prompt_len + new_tokens // 2,
                                        draft_cfg=scfg.draft_cfg))
-        name = f"serve_{arch}_b{slots}_spec_{spec}{spec_k}"
+        name = (f"serve_{arch}_b{slots}"
+                + (f"_tp{tp}" if tp > 1 else "")
+                + f"_spec_{spec}{spec_k}")
         derived += (f";accept={out['acceptance_rate']:.2f};"
                     f"tok_per_pass={out['tokens_per_pass']:.2f};"
                     f"pred_speedup={out['predicted_speedup']:.2f}")
     emit(name, dt / max(n_tokens, 1) * 1e6, derived)
     return out
+
+
+def run_mesh_compare(args, mesh, kwargs) -> None:
+    """The --mesh leg (CI: forced-8-device smoke): run the single-device
+    baseline and the tensor-parallel engine over the same prompts, then
+    assert the sharding seam holds — byte-identical greedy outputs, a
+    ledger that charges nonzero collective bytes, and ledger/HLO
+    agreement on those bytes within 15% (the acceptance bar of the
+    communication roofline; serve/crosscheck.crosscheck_collectives).
+    The full workload surface forwards — spec / shared-prefix /
+    prefix-cache / pool-pressure flags shape both legs identically."""
+    kwargs = dict(kwargs, spec=args.spec,
+                  shared_prefix=args.shared_prefix,
+                  prefix_cache=args.prefix_cache,
+                  num_pages=args.num_pages, watermark=args.watermark,
+                  preempt=args.preempt, warmup=not args.shared_prefix)
+    base = run_bench(args.arch, mesh=(1, 1), **kwargs)
+    if mesh[1] <= 1:
+        # a 1x1 "mesh" IS the baseline (ShardedEngine wraps nothing):
+        # there is no second engine to compare and no wire to crosscheck
+        if base["ici_bytes_dev"] != 0:
+            raise RuntimeError("1x1 ledger charged collective bytes")
+        print("[bench_serve/mesh] tp=1: nothing sharded — the 1x1 mesh "
+              "is the single-device engine byte-for-byte")
+        return
+    shrd = run_bench(args.arch, mesh=mesh, **kwargs)
+    cc = shrd["collective_crosscheck"]
+    print(f"[bench_serve/mesh] tp={mesh[1]}: "
+          f"{shrd['tokens_per_s']:.1f} tok/s, "
+          f"ici_bytes/dev={shrd['ici_bytes_dev']:.0f}, "
+          f"binding roof={shrd['binding_roof']}, collective crosscheck "
+          f"analytic={cc['analytic_ici_bytes']:.0f}B vs "
+          f"hlo={cc['hlo_ici_bytes']:.0f}B "
+          f"(ratio {cc['ici_ratio']:.3f}, {cc['by_kind']})")
+    if shrd["generated"] != base["generated"]:
+        raise RuntimeError(
+            f"sharded greedy outputs diverged from single-device at "
+            f"mesh {mesh}: {shrd['generated']} vs {base['generated']}")
+    if not shrd["ici_bytes_dev"] > 0:
+        raise RuntimeError("sharded ledger charged no collective bytes")
+    if not 1 / 1.15 <= cc["ici_ratio"] <= 1.15:
+        raise RuntimeError(
+            "ledger collective bytes disagree with the HLO crosscheck "
+            f"beyond 15%: ratio {cc['ici_ratio']:.3f}")
+    if base["ici_bytes_dev"] != 0:
+        raise RuntimeError("single-device ledger charged collective bytes")
 
 
 def main(argv=None):
@@ -228,11 +285,19 @@ def main(argv=None):
                     help="admission slack as a fraction of pool pages")
     ap.add_argument("--preempt", choices=["swap", "recompute"],
                     default="swap")
+    ap.add_argument("--mesh", default=None,
+                    help="device mesh 'dp,tp' (serve/shard.py): runs the "
+                         "tensor-parallel engine AND the single-device "
+                         "baseline, asserting byte-identical greedy "
+                         "output + ledger/HLO collective agreement "
+                         "(forced-CPU meshes need XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized defaults: 4 requests, 2 slots, 8 new "
                          "tokens; baseline + ngram speculative pass + "
                          "shared-prefix capacity pair (explicit flags "
-                         "still win)")
+                         "still win); with --mesh, the sharded-vs-single "
+                         "comparison replaces those legs")
     args = ap.parse_args(argv)
     sizes = (dict(requests=4, slots=2, page_size=4, prompt_len=8,
                   new_tokens=8) if args.smoke else
@@ -249,6 +314,14 @@ def main(argv=None):
                   backend=args.backend, spec_k=args.spec_k,
                   draft_arch=args.draft_arch,
                   spec_k_adaptive=args.spec_k_adaptive)
+    if args.mesh is not None:
+        mesh = parse_mesh(args.mesh)
+        cfg = smoke(get_config(args.arch))
+        err = tp_sharding_error(cfg, mesh[1])
+        if err:
+            raise SystemExit(f"--mesh {args.mesh}: {err}")
+        run_mesh_compare(args, mesh, kwargs)
+        return
     out = run_bench(args.arch, spec=args.spec,
                     shared_prefix=args.shared_prefix,
                     prefix_cache=args.prefix_cache,

@@ -27,10 +27,12 @@ ALL = {
     "gelu": bench_gelu.main,                   # paper fig. 8 + §3.4
     "layernorm": bench_layernorm.main,         # paper appendix
     "arch_roofline": bench_arch_roofline.main,  # 40-cell §Roofline table
-    "serve": lambda smoke=False: bench_serve.main(
-        ["--smoke"] if smoke else []),         # continuous-batching decode
+    "serve": lambda smoke=False, mesh=None: bench_serve.main(
+        (["--smoke"] if smoke else [])
+        + (["--mesh", mesh] if mesh else [])),  # continuous-batching decode
     # (--smoke also covers the speculative ngram pass and the block-pool
-    # shared-prefix capacity assertion; see bench_serve.py)
+    # shared-prefix capacity assertion; --mesh dp,tp runs the sharded
+    # engine against the single-device baseline; see bench_serve.py)
 }
 
 _SMOKEABLE = ("serve",)
@@ -41,6 +43,9 @@ def main() -> None:
     ap.add_argument("--only", choices=sorted(ALL), default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized runs for benches that support it")
+    ap.add_argument("--mesh", default=None,
+                    help="forwarded to the serve bench: 'dp,tp' device "
+                         "mesh for the tensor-parallel engine")
     args = ap.parse_args()
     failed = []
     names = [args.only] if args.only else list(ALL)
@@ -48,7 +53,9 @@ def main() -> None:
     for name in names:
         print(f"\n===== bench: {name} =====", flush=True)
         try:
-            if args.smoke and name in _SMOKEABLE:
+            if name == "serve" and (args.smoke or args.mesh):
+                ALL[name](smoke=args.smoke, mesh=args.mesh)
+            elif args.smoke and name in _SMOKEABLE:
                 ALL[name](smoke=True)
             else:
                 ALL[name]()

@@ -127,6 +127,18 @@ def chip_scope(chip: ChipSpec = TPU_V5E) -> ScopeSpec:
     return ScopeSpec("chip", chip, 1, "none")
 
 
+def tp_scope(chip: ChipSpec = TPU_V5E, n_chips: int = 1) -> ScopeSpec:
+    """Tensor-parallel serving scope: ``n_chips`` ICI-connected chips
+    acting as ONE decode platform (weights and KV sharded, activations
+    all-reduced every block).  The paper's NUMA analogue: one socket's
+    threads sharing a working set through the cross-socket link — the
+    scope where the interconnect ceiling can out-bind the HBM ceiling
+    (see RooflineTerms.binding_roof)."""
+    if n_chips <= 1:
+        return chip_scope(chip)
+    return ScopeSpec(f"tp{n_chips}", chip, n_chips, "ici")
+
+
 def pod_scope(chip: ChipSpec = TPU_V5E, n_chips: int = 256) -> ScopeSpec:
     """One ICI-connected pod — the paper's 'single socket' rung."""
     return ScopeSpec("pod", chip, n_chips, "ici")

@@ -107,11 +107,57 @@ class RooflineTerms:
 
     @property
     def attainable_flops(self) -> float:
-        """P = min(pi, I*beta) per chip."""
+        """P = min(pi, I*beta) per chip (the classic two-term roofline)."""
         return min(
             self.chip.flops_for(self.dtype),
             self.arithmetic_intensity * self.chip.hbm_bw,
         )
+
+    # --- communication roofline (the paper's NUMA local-vs-remote roofs) --
+    @property
+    def ici_intensity(self) -> float:
+        """FLOP per ICI wire byte — I_comm for the intra-pod interconnect.
+        Infinite when the step moves no ICI bytes (the roof is absent)."""
+        if self.ici_wire_bytes_dev <= 0:
+            return float("inf")
+        return self.flops_dev / self.ici_wire_bytes_dev
+
+    @property
+    def dcn_intensity(self) -> float:
+        """FLOP per DCN wire byte — I_comm for the cross-pod link."""
+        if self.dcn_wire_bytes_dev <= 0:
+            return float("inf")
+        return self.flops_dev / self.dcn_wire_bytes_dev
+
+    def roofs(self) -> Dict[str, float]:
+        """Per-chip attainable-performance ceilings, one per resource:
+        ``compute`` = pi, ``hbm`` = I * beta_hbm, and (when the step moves
+        wire bytes) ``ici`` = I_comm * beta_ici / ``dcn`` = I_comm *
+        beta_dcn.  The paper builds exactly this family for its NUMA
+        scopes — the ceiling that sits lowest is the one that binds."""
+        out = {
+            "compute": self.chip.flops_for(self.dtype),
+            "hbm": self.arithmetic_intensity * self.chip.hbm_bw,
+        }
+        if self.ici_wire_bytes_dev > 0:
+            out["ici"] = self.ici_intensity * self.chip.ici_bw
+        if self.dcn_wire_bytes_dev > 0:
+            out["dcn"] = self.dcn_intensity * self.chip.dcn_bw
+        return out
+
+    @property
+    def attainable_flops_comm(self) -> float:
+        """P = min(pi, I*beta_hbm, I_comm*beta_comm) per chip — the
+        communication-aware attainable performance (paper eq. 1 extended
+        with the interconnect ceilings, as the NUMA construction does for
+        remote-memory traffic)."""
+        return min(self.roofs().values())
+
+    @property
+    def binding_roof(self) -> str:
+        """Name of the ceiling that binds: compute | hbm | ici | dcn."""
+        r = self.roofs()
+        return min(r, key=r.get)
 
     # --- usefulness / score ------------------------------------------------
     @property

@@ -56,6 +56,31 @@ TERMS_HEADER = [
 ]
 
 
+def comm_terms_row(label: str, t: RooflineTerms) -> List[str]:
+    """One row of the communication-roofline table: the HBM intensity next
+    to the interconnect intensity I_comm, each roof's per-chip ceiling,
+    and which one binds — the per-scope view the paper's NUMA
+    construction reports (local vs remote-traffic ceilings)."""
+    roofs = t.roofs()
+    ici_i = t.ici_intensity
+    return [
+        label,
+        t.scope,
+        f"{t.arithmetic_intensity:.1f}",
+        "inf" if ici_i == float("inf") else f"{ici_i:.1f}",
+        _fmt_si(roofs["hbm"], "F/s"),
+        _fmt_si(roofs["ici"], "F/s") if "ici" in roofs else "-",
+        t.binding_roof,
+        _fmt_si(t.attainable_flops_comm, "F/s"),
+    ]
+
+
+COMM_HEADER = [
+    "cell", "scope", "I_hbm", "I_ici", "hbm roof", "ici roof",
+    "binds", "attainable",
+]
+
+
 def markdown_table(rows: Sequence[Sequence[str]], header: Sequence[str]) -> str:
     out = ["| " + " | ".join(header) + " |",
            "|" + "|".join(["---"] * len(header)) + "|"]

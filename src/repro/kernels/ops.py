@@ -90,13 +90,26 @@ def use_backend(backend: str):
         set_default_backend(prev)
 
 
-def resolve(name: str, backend: Optional[str] = None) -> Callable:
-    """Resolve a registered op to a concrete callable for this process."""
+def resolve(name: str, backend: Optional[str] = None, *,
+            sharded: bool = False) -> Callable:
+    """Resolve a registered op to a concrete callable for this process.
+
+    ``sharded=True`` marks a call made from inside ``shard_map`` (the
+    tensor-parallel serve path, serve/shard.py): the kernel sees per-shard
+    operands (local KV heads, local page pools).  On TPU the Pallas kernel
+    runs per shard as usual; off-TPU the ``auto`` backend resolves to the
+    jnp reference instead of the interpreted kernel — interpret mode
+    re-traces the whole grid per shard, and the reference IS the oracle
+    the kernels are byte-checked against.  An explicit ``backend="pallas"``
+    still forces the kernel.
+    """
     backend = backend or _default_backend
     if backend not in _BACKENDS:
         raise ValueError(f"backend {backend!r} not in {_BACKENDS}")
     impls = _REGISTRY[name]
     if backend == "jnp":
+        return impls["jnp"]
+    if backend == "auto" and sharded and _interpret_default():
         return impls["jnp"]
     return functools.partial(impls["pallas"], interpret=_interpret_default())
 
@@ -128,52 +141,56 @@ register_kernel("flash_attention",
 
 
 def paged_attention(q, k_pool, v_pool, block_tables, pos, *, scale,
-                    soft_cap: float = 0.0, backend: Optional[str] = None):
+                    soft_cap: float = 0.0, backend: Optional[str] = None,
+                    sharded: bool = False):
     """Dispatching GQA paged-decode attention (see kernels/paged_attention).
 
     q (B, KV, G, hd); pools (P, page, KV, hd); block_tables (B, n_blocks);
     pos (B,).  Returns (B, KV, G, hd).
     """
-    impl = resolve("paged_attention", backend)
+    impl = resolve("paged_attention", backend, sharded=sharded)
     return impl(q, k_pool, v_pool, block_tables, pos, scale=scale,
                 soft_cap=soft_cap)
 
 
 def mla_paged_attention(q_lat, q_rope, c_pool, r_pool, block_tables, pos, *,
-                        scale, backend: Optional[str] = None):
+                        scale, backend: Optional[str] = None,
+                        sharded: bool = False):
     """Dispatching MLA paged-decode attention over the compressed cache.
 
     q_lat (B, H, r); q_rope (B, H, dr); pools (P, page, r) / (P, page, dr);
     block_tables (B, n_blocks); pos (B,).  Returns o_lat (B, H, r).
     """
-    impl = resolve("mla_paged_attention", backend)
+    impl = resolve("mla_paged_attention", backend, sharded=sharded)
     return impl(q_lat, q_rope, c_pool, r_pool, block_tables, pos,
                 scale=scale)
 
 
 def paged_attention_verify(q, k_pool, v_pool, block_tables, pos, *, scale,
                            soft_cap: float = 0.0,
-                           backend: Optional[str] = None):
+                           backend: Optional[str] = None,
+                           sharded: bool = False):
     """Dispatching GQA multi-token paged verification (spec decoding).
 
     q (B, T, KV, G, hd) — T draft-chain query tokens at positions
     ``pos + t``; pools (P, page, KV, hd); block_tables (B, n_blocks);
     pos (B,) first-query position.  Returns (B, T, KV, G, hd).
     """
-    impl = resolve("paged_attention_verify", backend)
+    impl = resolve("paged_attention_verify", backend, sharded=sharded)
     return impl(q, k_pool, v_pool, block_tables, pos, scale=scale,
                 soft_cap=soft_cap)
 
 
 def mla_paged_attention_verify(q_lat, q_rope, c_pool, r_pool, block_tables,
                                pos, *, scale,
-                               backend: Optional[str] = None):
+                               backend: Optional[str] = None,
+                               sharded: bool = False):
     """Dispatching MLA multi-token paged verification over the latent cache.
 
     q_lat (B, T, H, r); q_rope (B, T, H, dr); pools (P, page, r) /
     (P, page, dr); pos (B,) first-query position.  Returns (B, T, H, r).
     """
-    impl = resolve("mla_paged_attention_verify", backend)
+    impl = resolve("mla_paged_attention_verify", backend, sharded=sharded)
     return impl(q_lat, q_rope, c_pool, r_pool, block_tables, pos,
                 scale=scale)
 

@@ -36,8 +36,9 @@ import numpy as np
 from repro.configs import ALL_ARCHS, get_config, smoke
 from repro.core.roofline.hardware import HOST_CPU_FALLBACK, TPU_V5E
 from repro.models import init_params
-from repro.serve import (Engine, EngineConfig, GenerateConfig, SpecConfig,
-                         SpecEngine, supports_paging, supports_spec)
+from repro.serve import (EngineConfig, GenerateConfig, SpecConfig,
+                         make_engine, parse_mesh, supports_paging,
+                         supports_spec, tp_sharding_error)
 from repro.serve.crosscheck import capacity_report
 from repro.serve.spec import speculative_summary
 
@@ -86,11 +87,21 @@ def main():
                     default=None,
                     help="paged-attention kernel backend (kernels/ops.py "
                          "registry; default = registry 'auto')")
+    ap.add_argument("--mesh", default="1,1",
+                    help="device mesh 'dp,tp' for tensor-parallel decode "
+                         "(serve/shard.py; needs dp*tp visible devices — "
+                         "on CPU force them with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke(cfg)
+    mesh_shape = parse_mesh(args.mesh)
+    if mesh_shape[1] > 1:
+        err = tp_sharding_error(cfg, mesh_shape[1])
+        if err:
+            raise SystemExit(f"--mesh {args.mesh}: {err}")
     params = init_params(cfg, jax.random.key(0))
     chip = TPU_V5E if args.chip == "tpu_v5e" else HOST_CPU_FALLBACK
     slots = args.slots or args.batch
@@ -119,9 +130,7 @@ def main():
         else:
             scfg = SpecConfig(k=args.spec_k, proposer="ngram",
                               adaptive=args.spec_k_adaptive)
-        engine = SpecEngine(cfg, params, ecfg, scfg)
-    else:
-        engine = Engine(cfg, params, ecfg)
+    engine = make_engine(cfg, params, ecfg, scfg, mesh_shape=mesh_shape)
 
     prompts = jax.random.randint(jax.random.key(1),
                                  (args.batch, args.prompt_len), 0,
@@ -173,6 +182,17 @@ def main():
               f"ttft={lat['ttft_s'] * 1e3:.1f}ms "
               f"itl_p50={lat['itl_p50_s'] * 1e3:.2f}ms "
               f"p95={lat['itl_p95_s'] * 1e3:.2f}ms")
+    if mesh_shape[1] > 1:
+        # which roof binds decode at this TP width (serve/shard.py):
+        # the communication-roofline table over the finished requests
+        from repro.core.roofline.report import (COMM_HEADER,
+                                                comm_terms_row, text_table)
+        rows = [comm_terms_row(f"req {r.request_id}",
+                               engine.roofline_terms(r))
+                for r in sorted(done, key=lambda r: r.request_id)[:4]]
+        print("[serve/mesh] communication roofline "
+              f"(tp={mesh_shape[1]}):")
+        print(text_table(rows, COMM_HEADER))
     cap = capacity_report(engine)
     print(f"[serve/capacity] pages peak={cap['pages_peak']}"
           f"/{cap['pages_total']} ({cap['page_bytes']} B/page), "

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kernel_ops
+from repro.parallel import collectives as coll
 from repro.parallel.sharding import ParamDef, constrain
 from .common import ModelConfig
 from .layers import apply_rope, rms_head_norm, rope_cos_sin
@@ -221,8 +222,12 @@ def decode_attention_paged(
         o = kernel_ops.paged_attention(
             q.reshape(B, KV, G, hd), pool_k, pool_v, block_tables, pos,
             scale=1.0 / (hd ** 0.5), soft_cap=cfg.attn_logit_soft_cap,
-            backend=backend).reshape(B, 1, H, hd)
+            backend=backend, sharded=cfg.tp_axis is not None
+            ).reshape(B, 1, H, hd)
     out = jnp.einsum("bqhx,hxd->bqd", o.astype(x.dtype), p["wo"])
+    if cfg.tp_axis is not None:
+        # head-parallel shard: the o-proj contracted local heads only
+        out = coll.row_parallel_psum(out, cfg.tp_axis)
     return constrain(out, "batch", "seq", "d_model"), {"k": pool_k, "v": pool_v}
 
 
@@ -259,8 +264,11 @@ def decode_verify_paged(
         o = kernel_ops.paged_attention_verify(
             q.reshape(B, T, KV, G, hd), pool_k, pool_v, block_tables, pos,
             scale=1.0 / (hd ** 0.5), soft_cap=cfg.attn_logit_soft_cap,
-            backend=backend).reshape(B, T, H, hd)
+            backend=backend, sharded=cfg.tp_axis is not None
+            ).reshape(B, T, H, hd)
     out = jnp.einsum("bqhx,hxd->bqd", o.astype(x.dtype), p["wo"])
+    if cfg.tp_axis is not None:
+        out = coll.row_parallel_psum(out, cfg.tp_axis)
     return constrain(out, "batch", "seq", "d_model"), {"k": pool_k,
                                                        "v": pool_v}
 

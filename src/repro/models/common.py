@@ -91,6 +91,14 @@ class ModelConfig:
     # §Perf levers (off in the paper-faithful baseline)
     tp_attn_inner: bool = False      # row-parallel o-proj over flat (H*hd)
 
+    # tensor-parallel serving (serve/shard.py): set ONLY on the per-shard
+    # local config that runs inside shard_map.  Names the mesh axis that
+    # row-parallel partial sums are psum'd over (and vocab-sharded logits
+    # all-gathered over); None = ordinary unsharded execution.  The local
+    # config also carries the per-shard head/ffn counts, so model code is
+    # oblivious to sharding except at these explicit collective edges.
+    tp_axis: Optional[str] = None
+
     # serving
     subquadratic: bool = False       # may run long_500k
 

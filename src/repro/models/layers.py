@@ -12,6 +12,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.parallel import collectives as coll
 from repro.parallel.sharding import ParamDef, constrain
 from .common import ModelConfig
 
@@ -104,7 +105,11 @@ def apply_mlp(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
         h = constrain(h, "batch", "seq", "d_ff")
     else:  # (tokens, d_ff) — MoE shared-expert path
         h = constrain(h, "batch", "d_ff")
-    return h @ p["w_down"]
+    out = h @ p["w_down"]
+    if cfg.tp_axis is not None:
+        # per-shard d_ff slice: the down-proj contracts a partial inner dim
+        out = coll.row_parallel_psum(out, cfg.tp_axis)
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -143,6 +148,11 @@ def logits_from_hidden(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
         else:
             w = p["head"]
         out = x @ w
+        if cfg.tp_axis is not None and out.shape[-1] != cfg.vocab_size:
+            # vocab-sharded head: each shard computed V/n logit columns
+            # (tied embeddings stay replicated for the lookup, so their
+            # logits are already full-width)
+            out = coll.all_gather_cols(out, cfg.tp_axis)
         return constrain(out, "batch", "seq", "vocab")
 
 

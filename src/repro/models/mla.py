@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kernel_ops
+from repro.parallel import collectives as coll
 from repro.parallel.sharding import ParamDef, constrain
 from .common import ModelConfig
 from .layers import rope_cos_sin
@@ -215,9 +216,15 @@ def mla_decode_paged(p, x: jax.Array, pool: Dict[str, jax.Array],
     with jax.named_scope("paged_attention"):
         o_lat = kernel_ops.mla_paged_attention(
             q_lat[:, 0], q_rope[:, 0], pool_c, pool_r, block_tables, pos,
-            scale=scale, backend=backend)[:, None]              # (B,1,H,r)
+            scale=scale, backend=backend,
+            sharded=cfg.tp_axis is not None)[:, None]           # (B,1,H,r)
     o = jnp.einsum("bqhr,rhk->bqhk", o_lat.astype(x.dtype), p["wv_b"])
     out = jnp.einsum("bqhk,hkd->bqd", o, p["wo"])
+    if cfg.tp_axis is not None:
+        # head-parallel shard over the latent: replicated c_kv/k_rope
+        # pages, partitioned q/o projections — the o-proj contracted
+        # local heads only
+        out = coll.row_parallel_psum(out, cfg.tp_axis)
     out = constrain(out, "batch", "seq", "d_model")
     return out, {"c_kv": pool_c, "k_rope": pool_r}
 
@@ -254,9 +261,12 @@ def mla_decode_verify_paged(p, x: jax.Array, pool: Dict[str, jax.Array],
     with jax.named_scope("paged_attention"):
         o_lat = kernel_ops.mla_paged_attention_verify(
             q_lat, q_rope, pool_c, pool_r, block_tables, pos,
-            scale=scale, backend=backend)                       # (B,T,H,r)
+            scale=scale, backend=backend,
+            sharded=cfg.tp_axis is not None)                    # (B,T,H,r)
     o = jnp.einsum("bqhr,rhk->bqhk", o_lat.astype(x.dtype), p["wv_b"])
     out = jnp.einsum("bqhk,hkd->bqd", o, p["wo"])
+    if cfg.tp_axis is not None:
+        out = coll.row_parallel_psum(out, cfg.tp_axis)
     out = constrain(out, "batch", "seq", "d_model")
     return out, {"c_kv": pool_c, "k_rope": pool_r}
 

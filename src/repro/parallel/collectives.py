@@ -23,6 +23,25 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 
+def row_parallel_psum(partial: jax.Array, axis: str) -> jax.Array:
+    """All-reduce epilogue of a row-parallel (contraction-sharded) matmul
+    inside ``shard_map``: each shard contracts its slice of the inner dim
+    (attention o-proj over local heads, FFN down-proj over local d_ff) and
+    the partial products are summed over ``axis``.  This is the Megatron
+    ``g-bar`` edge — 2 of these per transformer block is the entire ICI
+    cost of tensor-parallel decode, and exactly what the serve ledger's
+    communication term prices (scheduler.decode_step_ici_bytes)."""
+    return jax.lax.psum(partial, axis)
+
+
+def all_gather_cols(x: jax.Array, axis: str) -> jax.Array:
+    """Gather a column-sharded activation to its full last dim inside
+    ``shard_map`` (tiled all-gather) — the vocab-sharded logits edge of
+    tensor-parallel decode: every shard computes V/n logit columns, the
+    sampler needs the full row."""
+    return jax.lax.all_gather(x, axis, axis=x.ndim - 1, tiled=True)
+
+
 def ring_allgather_matmul(x: jax.Array, w: jax.Array, mesh: Mesh,
                           axis: str = "model") -> jax.Array:
     """``all_gather(x, axis) @ w`` without materializing the gather.

@@ -104,6 +104,20 @@ class ShardingRules:
 
 DEFAULT = ShardingRules(DEFAULT_RULES)
 
+# Tensor-parallel serve decode (serve/shard.py): heads / kv_heads / d_ff /
+# vocab split over ``model`` as usual, but everything tied to the paged
+# cache layout stays replicated — a page is the unit of the block-table
+# indirection, so the kv_seq (page) dims must never shard, and the packed
+# slot batch is one decode step on every chip (no data axis inside the
+# step).  Sequence-parallel fallbacks are meaningless at decode (Sq = 1).
+# The tied embedding table is force-replicated separately (the token
+# lookup needs every row); an untied head stays vocab-sharded and the
+# logits edge all-gathers (layers.logits_from_hidden).
+DECODE_TP_RULES = DEFAULT.override(
+    kv_seq=((),), seq_sp=((),), seq_fb=((),),
+    batch=((),), expert_cap=((),), experts=((),),
+)
+
 
 # --------------------------------------------------------------------------
 # Legalization

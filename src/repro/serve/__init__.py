@@ -5,6 +5,9 @@ from .kv_cache import (PagedKVCache, SwapSnapshot, supports_paging,
                        supports_prefix_cache)
 from .proposer import DraftModelProposer, NgramProposer, Proposal
 from .scheduler import Request, RequestState, RooflineLedger, Scheduler
+from .shard import (ShardedEngine, ShardedSpecEngine, make_engine,
+                    parse_mesh, supports_tp, tp_local_config,
+                    tp_sharding_error)
 from .spec import (SpecConfig, SpecEngine, adaptive_k,
                    spec_expected_tokens_per_pass, spec_speedup_model,
                    supports_spec)
@@ -16,6 +19,8 @@ __all__ = [
     "supports_prefix_cache",
     "Request", "RequestState", "RooflineLedger", "Scheduler",
     "DraftModelProposer", "NgramProposer", "Proposal",
+    "ShardedEngine", "ShardedSpecEngine", "make_engine", "parse_mesh",
+    "supports_tp", "tp_local_config", "tp_sharding_error",
     "SpecConfig", "SpecEngine", "adaptive_k",
     "spec_expected_tokens_per_pass", "spec_speedup_model", "supports_spec",
     "sampling",

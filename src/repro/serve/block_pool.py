@@ -74,6 +74,11 @@ class PoolStats:
     cow_copies: int = 0          # copy-on-write page copies performed
     evictions: int = 0           # cached pages reclaimed under pressure
     freezes: int = 0             # pages registered in the hash index
+    # swap-out compaction (kv_cache.swap_out): per-leaf page gathers are
+    # packed into ONE contiguous device->host DMA per swap; the second
+    # counter is how many separate transfers the packing avoided
+    swap_dmas: int = 0           # compacted device->host swap transfers
+    swap_transfers_saved: int = 0
 
 
 class BlockPool:

@@ -55,7 +55,8 @@ from repro.core.roofline.substitute import substitute_paged_attention
 from repro.models import decode_step_paged, decode_step_verify_paged
 from repro.models.common import param_counts
 
-from .scheduler import (decode_token_bytes, decode_token_flops,
+from .scheduler import (decode_collective_count, decode_step_ici_bytes,
+                        decode_token_bytes, decode_token_flops,
                         kv_line_bytes, params_bytes_active, state_bytes)
 
 
@@ -156,6 +157,42 @@ def capacity_report(engine) -> Dict:
         "pages_per_request": pages_per_req,
         "effective_batch": len(active),
         "capacity_max_batch": cap_batch,
+    }
+
+
+def crosscheck_collectives(engine) -> Dict:
+    """Ledger <-> HLO cross-check for the COMMUNICATION roofline axis.
+
+    The sharded engine's ledger charges each decode step an analytic
+    per-device ICI wire cost (scheduler.decode_step_ici_bytes: one ring
+    all-reduce per row-parallel matmul epilogue, one tiled all-gather for
+    an untied vocab-sharded head).  This closes the loop the same way the
+    decode cross-check does for HBM traffic: compile the engine's LIVE
+    shard_map decode step, parse the partitioned module's collective ops
+    (core/roofline/hlo — the "uncore counter" of the distributed
+    machine), attribute them to mesh axes, and compare per-device wire
+    bytes.  ``engine`` must be a serve.shard.ShardedEngine (or subclass)
+    on a tp > 1 mesh.
+    """
+    mesh = getattr(engine, "mesh", None)
+    if mesh is None:
+        raise ValueError("engine has no tp > 1 mesh; build a "
+                         "ShardedEngine(mesh_shape=(1, tp)) and submit "
+                         "work first")
+    cfg, e = engine.cfg, engine.ecfg
+    analytic = decode_step_ici_bytes(cfg, e.num_slots, engine.tp)
+    compiled = engine.decode_step_compiled()
+    char = extract.characterize(compiled, mesh=mesh)
+    hlo_ici = char.collectives.ici_wire_bytes
+    return {
+        "analytic_ici_bytes": analytic,
+        "hlo_ici_bytes": hlo_ici,
+        "hlo_dcn_bytes": char.collectives.dcn_wire_bytes,
+        "ici_ratio": analytic / max(hlo_ici, 1.0),
+        "n_collective_ops": char.collectives.n_ops,
+        "by_kind": dict(char.collectives.by_kind),
+        "collective_count_analytic": decode_collective_count(cfg),
+        "tp": engine.tp,
     }
 
 

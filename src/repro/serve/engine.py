@@ -225,16 +225,9 @@ class Engine:
         self._temps = np.zeros((e.num_slots,), np.float32)
         self._top_ks = np.zeros((e.num_slots,), np.int32)
         self._top_ps = np.zeros((e.num_slots,), np.float32)
-        cfg, ps, be = self.cfg, e.page_size, e.kernel_backend
+        cfg, ps = self.cfg, e.page_size
 
-        def _decode_sample(p, pools, bt, tok, pos, act, kd, steps, temps,
-                           top_ks, top_ps):
-            logits, pools = decode_step_paged(
-                p, cfg, pools, bt, tok, pos, act, page_size=ps, backend=be)
-            return sampling.sample_tokens(logits, kd, steps, temps,
-                                          top_ks, top_ps), pools
-
-        self._decode_fn = jax.jit(_decode_sample)
+        self._decode_fn = jax.jit(self._decode_callable(cfg))
         # jit handles per-chunk-length retracing under one cache
         self._prefill_fn = jax.jit(
             lambda p, pools, btr, slot, toks, off: prefill_chunk_paged(
@@ -256,6 +249,33 @@ class Engine:
         subclass widens this so verify writes near the budget edge stay on
         legal (trash) table entries."""
         return 0
+
+    def _decode_callable(self, cfg: ModelConfig):
+        """The fused decode+sample step body over a given config.  Factored
+        so the tensor-parallel engine (serve/shard.py) can wrap the SAME
+        body in ``shard_map`` with the per-shard local config — the seam
+        that keeps the 1x1 mesh byte-identical to this engine."""
+        ps, be = self.ecfg.page_size, self.ecfg.kernel_backend
+
+        def _decode_sample(p, pools, bt, tok, pos, act, kd, steps, temps,
+                           top_ks, top_ps):
+            logits, pools = decode_step_paged(
+                p, cfg, pools, bt, tok, pos, act, page_size=ps, backend=be)
+            return sampling.sample_tokens(logits, kd, steps, temps,
+                                          top_ks, top_ps), pools
+
+        return _decode_sample
+
+    def _step_collective_bytes(self, n_tokens: int) -> float:
+        """Per-device collective wire bytes one packed device step moves
+        (0 on a single chip; the sharded engine prices its psum/all-gather
+        edges — scheduler.decode_step_ici_bytes)."""
+        return 0.0
+
+    def _ledger_chips(self) -> int:
+        """Chips the per-request ledger's W/Q are split across (the TP
+        width for the sharded engine)."""
+        return 1
 
     def _ensure(self, budget: int) -> None:
         if self._kv is None:
@@ -311,8 +331,10 @@ class Engine:
 
     def roofline_terms(self, req: Request):
         """The request's decode RooflineTerms on this engine's target chip
-        (``EngineConfig.chip``)."""
-        return req.ledger.terms(self.cfg, self.ecfg.chip)
+        (``EngineConfig.chip``) — at the engine's TP scope, so a sharded
+        engine's terms carry the ICI ceiling next to the HBM one."""
+        return req.ledger.terms(self.cfg, self.ecfg.chip,
+                                n_chips=self._ledger_chips())
 
     def run(self) -> List[Request]:
         """Drain all queued work; returns requests finished by this call."""
@@ -357,6 +379,14 @@ class Engine:
             last_logits, kv.pools = self._prefill_fn(
                 self.params, kv.pools, btr, jnp.int32(req.slot), toks,
                 jnp.int32(start))
+            if kv.prefix_cache:
+                # chunked-prefill-safe eager registration: every full page
+                # this chunk finalized holds canonical prompt content NOW,
+                # so it is index-shareable steps before the request commits
+                # its first token (alloc-time registration stays gated to
+                # whole-prompt prefill — those pages are only promised, not
+                # yet written)
+                kv.freeze_committed(req.slot, fill, end)
         req.prefill_pos = end
         if end == fill_len:
             # charge only the compute actually run: a prefix-cache hit
@@ -433,8 +463,10 @@ class Engine:
         self.decode_steps += 1
         tok_np = np.asarray(next_tok)
         n_active = len(running)
+        ici_share = self._step_collective_bytes(1) / n_active
         for req in running:
-            req.ledger.add_decode_token(self.cfg, req.context_len, n_active)
+            req.ledger.add_decode_token(self.cfg, req.context_len, n_active,
+                                        ici_bytes=ici_share)
             self._commit_token(req, int(tok_np[req.slot]))
 
     def _commit_token(self, req: Request, tok: int, first: bool = False)\

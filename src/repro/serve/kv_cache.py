@@ -420,19 +420,27 @@ class PagedKVCache:
         """Copy the slot's pages (and recurrent rows) to host memory and
         free them — LRU preemption's swap path.  The snapshot remembers
         the frozen prefix's chain hashes so :meth:`swap_in` can re-alias
-        any page still in the prefix index instead of copying it back."""
+        any page still in the prefix index instead of copying it back.
+
+        Swap-out compaction: the per-page gathers of EVERY cache leaf
+        (2 x layers for GQA, more for MLA/hybrid trees) are flattened to
+        bytes on device and concatenated, so the whole swap crosses
+        device->host as ONE contiguous DMA instead of one transfer per
+        leaf; :class:`PoolStats` records the transfers saved.  The
+        snapshot still holds the original per-leaf numpy layout —
+        :meth:`swap_in` is unchanged."""
         meta = self._meta[slot]
         row = self.block_tables[slot]
         phys = jnp.asarray(row[: meta.n_blocks])
 
         def gather(pool, paged):
             if paged:
-                return np.asarray(pool[:, phys])
-            return np.asarray(
-                jax.lax.dynamic_slice_in_dim(pool, slot, 1, axis=1))
+                return pool[:, phys]
+            return jax.lax.dynamic_slice_in_dim(pool, slot, 1, axis=1)
 
-        data = [jax.tree.map(gather, seg_pool, seg_flag)
-                for seg_pool, seg_flag in zip(self.pools, self._paged)]
+        dev = [jax.tree.map(gather, seg_pool, seg_flag)
+               for seg_pool, seg_flag in zip(self.pools, self._paged)]
+        data = self._pack_to_host(dev)
         snap = SwapSnapshot(
             n_blocks=meta.n_blocks, budget=meta.budget,
             frozen_blocks=meta.frozen_blocks,
@@ -504,6 +512,24 @@ class PagedKVCache:
         # pages re-frozen lazily by freeze_committed; aliased ones already
         # carry their index entries
         return slot
+
+    def _pack_to_host(self, dev: List[Any]) -> List[Any]:
+        """One device->host transfer for a whole pytree of device arrays:
+        bitcast every leaf to bytes, concatenate, pull the single flat
+        buffer across, and re-view the per-leaf numpy arrays out of it
+        (zero-copy slicing on the host side)."""
+        leaves, treedef = jax.tree.flatten(dev)
+        flat = [jax.lax.bitcast_convert_type(x, jnp.uint8).reshape(-1)
+                for x in leaves]
+        packed = np.asarray(jnp.concatenate(flat))      # the one DMA
+        out, off = [], 0
+        for x in leaves:
+            n = x.size * x.dtype.itemsize
+            out.append(packed[off:off + n].view(x.dtype).reshape(x.shape))
+            off += n
+        self.pool.stats.swap_dmas += 1
+        self.pool.stats.swap_transfers_saved += max(len(leaves) - 1, 0)
+        return jax.tree.unflatten(treedef, out)
 
     # -- device page ops ---------------------------------------------------
 

@@ -66,7 +66,7 @@ from typing import Any, Deque, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.core.roofline.hardware import ChipSpec, TPU_V5E, chip_scope
+from repro.core.roofline.hardware import ChipSpec, TPU_V5E, tp_scope
 from repro.core.roofline.model import RooflineTerms, make_terms
 from repro.models.common import ModelConfig, model_flops, param_counts
 
@@ -140,6 +140,69 @@ def decode_token_bytes(cfg: ModelConfig, context_len: int,
     return weights + kv + 2 * state_bytes(cfg)
 
 
+@functools.lru_cache(maxsize=None)
+def kv_shard_fraction(cfg: ModelConfig, tp: int) -> float:
+    """Fraction of the per-token KV line resident on EACH chip at TP
+    width ``tp``: GQA k/v pools shard over kv_heads (1/tp of the line per
+    chip), while MLA latent pools replicate (serve/shard.py pool_pspecs)
+    — every chip walks the full compressed cache.  Feeds the per-chip
+    HBM term of the sharded ledger (RooflineLedger.terms)."""
+    if tp <= 1:
+        return 1.0
+    total = kv_line_bytes(cfg)
+    if total == 0:
+        return 1.0
+    isize = _dtype_bytes(cfg.dtype)
+    sharded = 0
+    for unit, reps in cfg.segments():
+        for b in unit:
+            if b.mixer == "attn":
+                sharded += 2 * cfg.n_kv_heads * cfg.hd * isize * reps
+    return (sharded / tp + (total - sharded)) / total
+
+
+@functools.lru_cache(maxsize=None)
+def decode_collective_count(cfg: ModelConfig) -> int:
+    """All-reduces per tensor-parallel decode step: one per row-parallel
+    matmul epilogue — the attention/MLA o-proj and the dense-FFN
+    down-proj (the Megatron pairing; see parallel.collectives
+    .row_parallel_psum and the psum hooks in models/)."""
+    n = 0
+    for unit, reps in cfg.segments():
+        for b in unit:
+            if b.mixer in ("attn", "mla"):
+                n += reps
+            if b.ffn == "dense":
+                n += reps
+    return n
+
+
+def decode_step_ici_bytes(cfg: ModelConfig, batch: int, tp: int,
+                          n_tokens: int = 1) -> float:
+    """Per-device ICI wire bytes of ONE tensor-parallel packed decode step
+    over ``batch`` slots feeding ``n_tokens`` tokens per slot (1 for
+    decode, k+1 for speculative verify).
+
+    Each of the :func:`decode_collective_count` all-reduces moves a
+    (batch, n_tokens, d_model) activation with ring wire cost
+    ``2 * payload * (tp-1)/tp`` per device; an untied vocab-sharded head
+    adds one tiled logits all-gather at ``payload * (tp-1)/tp``.  This is
+    the analytic side that serve/crosscheck.crosscheck_collectives
+    validates against the all-reduce/all-gather ops in the compiled
+    shard_map module's HLO — and the ``I_comm`` numerator's denominator
+    in the communication roofline (core.roofline.model.RooflineTerms
+    .roofs)."""
+    if tp <= 1:
+        return 0.0
+    isize = _dtype_bytes(cfg.dtype)
+    ring = (tp - 1) / tp
+    act_payload = batch * n_tokens * cfg.d_model * isize
+    wire = decode_collective_count(cfg) * 2.0 * act_payload * ring
+    if not cfg.tie_embeddings:
+        wire += batch * n_tokens * cfg.vocab_size * isize * ring
+    return wire
+
+
 # --------------------------------------------------------------------------
 # Requests + ledger
 # --------------------------------------------------------------------------
@@ -177,6 +240,8 @@ class RooflineLedger:
     prefill_flops: float = 0.0
     decode_flops: float = 0.0
     decode_bytes: float = 0.0
+    decode_kv_bytes: float = 0.0     # KV-walk + state share of decode_bytes
+    decode_ici_bytes: float = 0.0    # per-device TP collective wire bytes
     decode_tokens: int = 0
     decode_batch_sum: int = 0        # sum of co-resident batch sizes
     weight_passes: int = 0           # target forward passes (decode+verify)
@@ -190,17 +255,24 @@ class RooflineLedger:
     pages_peak: int = 0              # most physical pages held at once
 
     def add_decode_token(self, cfg: ModelConfig, context_len: int,
-                         active_batch: int) -> None:
+                         active_batch: int, ici_bytes: float = 0.0) -> None:
+        """``ici_bytes`` is this request's share of the step's collective
+        wire traffic (zero on a single chip — the sharded engine charges
+        ``decode_step_ici_bytes / active_batch``)."""
         self.decode_flops += decode_token_flops(cfg, context_len)
         self.decode_bytes += decode_token_bytes(cfg, context_len,
                                                 active_batch)
+        self.decode_kv_bytes += ((context_len + 1) * kv_line_bytes(cfg)
+                                 + 2 * state_bytes(cfg))
+        self.decode_ici_bytes += ici_bytes
         self.decode_tokens += 1
         self.decode_batch_sum += active_batch
         self.weight_passes += 1
 
     def add_verify_step(self, cfg: ModelConfig, context_len: int,
                         n_fed: int, n_committed: int, n_accepted: int,
-                        n_proposed: int, active_batch: int) -> None:
+                        n_proposed: int, active_batch: int,
+                        ici_bytes: float = 0.0) -> None:
         """One multi-token verification step: ``n_fed`` = k+1 tokens scored
         in one weight pass at context ``context_len``; ``n_committed``
         tokens entered the request (``n_accepted`` of them surviving
@@ -220,6 +292,9 @@ class RooflineLedger:
             params_bytes_active(cfg) / max(active_batch, 1)
             + (context_len + 2 * n_fed - 1) * line
             + 2 * state_bytes(cfg))
+        self.decode_kv_bytes += ((context_len + 2 * n_fed - 1) * line
+                                 + 2 * state_bytes(cfg))
+        self.decode_ici_bytes += ici_bytes
         self.decode_tokens += n_committed
         self.decode_batch_sum += n_committed * active_batch
         self.weight_passes += 1
@@ -259,15 +334,27 @@ class RooflineLedger:
     def arithmetic_intensity(self) -> float:
         return self.decode_flops / max(self.decode_bytes, 1.0)
 
-    def terms(self, cfg: ModelConfig, chip: ChipSpec = TPU_V5E
-              ) -> RooflineTerms:
-        """RooflineTerms for this request's decode stream on one chip."""
+    def terms(self, cfg: ModelConfig, chip: ChipSpec = TPU_V5E,
+              n_chips: int = 1) -> RooflineTerms:
+        """RooflineTerms for this request's decode stream.
+
+        ``n_chips`` > 1 is the tensor-parallel scope: the weight read and
+        the FLOPs split evenly across the shards (heads and d_ff divide),
+        the KV-walk share splits by :func:`kv_shard_fraction` — GQA pools
+        shard over kv_heads but MLA latent pools REPLICATE, so every chip
+        walks the full compressed cache — and ``decode_ici_bytes`` is
+        already the per-device wire traffic the sharded engine charged.
+        The terms therefore expose the honest per-chip HBM roof next to
+        the ICI roof at this TP width (RooflineTerms.binding_roof)."""
+        n = max(n_chips, 1)
+        hbm_dev = ((self.decode_bytes - self.decode_kv_bytes) / n
+                   + self.decode_kv_bytes * kv_shard_fraction(cfg, n))
         return make_terms(
-            scope=chip_scope(chip),
+            scope=tp_scope(chip, n_chips),
             dtype=cfg.dtype,
-            flops_dev=self.decode_flops,
-            hbm_bytes_dev=self.decode_bytes,
-            ici_wire_bytes_dev=0.0,
+            flops_dev=self.decode_flops / n,
+            hbm_bytes_dev=hbm_dev,
+            ici_wire_bytes_dev=self.decode_ici_bytes,
             dcn_wire_bytes_dev=0.0,
             model_flops_total=self.decode_flops,
         )

@@ -208,17 +208,13 @@ class SpecEngine(Engine):
         # budget edge those writes must resolve to (trash) table entries
         return self.scfg.k + 1
 
-    def reset(self, num_slots: Optional[int] = None,
-              max_len: Optional[int] = None) -> None:
-        super().reset(num_slots=num_slots, max_len=max_len)
-        e, s = self.ecfg, self.scfg
-        cfg, ps, be, T = self.cfg, e.page_size, e.kernel_backend, s.k + 1
-        if s.proposer == "draft":
-            self.proposer = DraftModelProposer(
-                s.draft_cfg, s.draft_params, num_slots=e.num_slots,
-                page_size=ps, max_len=self._kv.max_len, k=s.k, backend=be,
-                prefill_bucket=max(e.prefill_bucket, 1))
+    def _verify_callable(self, cfg: ModelConfig):
+        """The fused verify+accept step body over a given config —
+        factored like Engine._decode_callable so the tensor-parallel
+        engine can shard_map the SAME body with the per-shard config."""
+        ps, be = self.ecfg.page_size, self.ecfg.kernel_backend
 
+        if self.scfg.proposer == "draft":
             def _verify(p, pools, bt, feed, pos, act, draft, qp, nd, kd,
                         steps, temps, top_ks, top_ps):
                 logits, pools = decode_step_verify_paged(
@@ -229,10 +225,6 @@ class SpecEngine(Engine):
                     top_ps)
                 return toks, n_out, pools
         else:
-            self.proposer = NgramProposer(e.num_slots, s.k,
-                                          max_n=s.ngram_max,
-                                          min_n=s.ngram_min)
-
             def _verify(p, pools, bt, feed, pos, act, draft, nd, kd,
                         steps, temps, top_ks, top_ps):
                 logits, pools = decode_step_verify_paged(
@@ -242,8 +234,23 @@ class SpecEngine(Engine):
                     logits, draft, None, nd, kd, steps, temps, top_ks,
                     top_ps)
                 return toks, n_out, pools
+        return _verify
 
-        self._verify_fn = jax.jit(_verify)
+    def reset(self, num_slots: Optional[int] = None,
+              max_len: Optional[int] = None) -> None:
+        super().reset(num_slots=num_slots, max_len=max_len)
+        e, s = self.ecfg, self.scfg
+        ps, be = e.page_size, e.kernel_backend
+        if s.proposer == "draft":
+            self.proposer = DraftModelProposer(
+                s.draft_cfg, s.draft_params, num_slots=e.num_slots,
+                page_size=ps, max_len=self._kv.max_len, k=s.k, backend=be,
+                prefill_bucket=max(e.prefill_bucket, 1))
+        else:
+            self.proposer = NgramProposer(e.num_slots, s.k,
+                                          max_n=s.ngram_max,
+                                          min_n=s.ngram_min)
+        self._verify_fn = jax.jit(self._verify_callable(self.cfg))
         self.verify_steps = 0
 
     # -- decode = propose -> verify -> accept -> commit --------------------
@@ -290,6 +297,7 @@ class SpecEngine(Engine):
         out_np = np.asarray(out_tok)
         n_np = np.asarray(n_out)
         n_active = len(running)
+        ici_share = self._step_collective_bytes(T) / n_active
         for req in running:
             slot, L = req.slot, req.context_len
             nd = int(prop.n_draft[slot])
@@ -305,7 +313,7 @@ class SpecEngine(Engine):
             # cut means everything committed was an accepted draft
             accepted = committed - 1 if committed == n else committed
             req.ledger.add_verify_step(self.cfg, L, T, committed, accepted,
-                                       nd, n_active)
+                                       nd, n_active, ici_bytes=ici_share)
             if s.adaptive and nd > 0:
                 prev = self._accept_ewma.get(req.request_id, 1.0)
                 obs = accepted / nd
