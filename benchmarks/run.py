@@ -27,12 +27,15 @@ ALL = {
     "gelu": bench_gelu.main,                   # paper fig. 8 + §3.4
     "layernorm": bench_layernorm.main,         # paper appendix
     "arch_roofline": bench_arch_roofline.main,  # 40-cell §Roofline table
-    "serve": lambda smoke=False, mesh=None: bench_serve.main(
-        (["--smoke"] if smoke else [])
-        + (["--mesh", mesh] if mesh else [])),  # continuous-batching decode
+    "serve": lambda smoke=False, mesh=None, hierarchy=False:
+        bench_serve.main(
+            (["--smoke"] if smoke else [])
+            + (["--mesh", mesh] if mesh else [])
+            + (["--hierarchy"] if hierarchy else [])),
     # (--smoke also covers the speculative ngram pass and the block-pool
     # shared-prefix capacity assertion; --mesh dp,tp runs the sharded
-    # engine against the single-device baseline; see bench_serve.py)
+    # engine against the single-device baseline; --hierarchy runs the
+    # hierarchical/time-based roofline assertions; see bench_serve.py)
 }
 
 _SMOKEABLE = ("serve",)
@@ -46,6 +49,9 @@ def main() -> None:
     ap.add_argument("--mesh", default=None,
                     help="forwarded to the serve bench: 'dp,tp' device "
                          "mesh for the tensor-parallel engine")
+    ap.add_argument("--hierarchy", action="store_true",
+                    help="forwarded to the serve bench: hierarchical + "
+                         "time-based roofline assertions")
     args = ap.parse_args()
     failed = []
     names = [args.only] if args.only else list(ALL)
@@ -53,8 +59,10 @@ def main() -> None:
     for name in names:
         print(f"\n===== bench: {name} =====", flush=True)
         try:
-            if name == "serve" and (args.smoke or args.mesh):
-                ALL[name](smoke=args.smoke, mesh=args.mesh)
+            if name == "serve" and (args.smoke or args.mesh
+                                    or args.hierarchy):
+                ALL[name](smoke=args.smoke, mesh=args.mesh,
+                          hierarchy=args.hierarchy)
             elif args.smoke and name in _SMOKEABLE:
                 ALL[name](smoke=True)
             else:

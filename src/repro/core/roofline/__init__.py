@@ -14,6 +14,7 @@ from .hardware import (
     ScopeSpec,
     TPU_V5E,
     HOST_CPU_FALLBACK,
+    MEMORY_LEVELS,
     chip_scope,
     pod_scope,
     multipod_scope,
@@ -33,7 +34,14 @@ from .extract import (
     terms_from_character,
     character_as_dict,
 )
-from .model import RooflineTerms, make_terms
+from .model import (
+    RooflineTerms,
+    make_terms,
+    PhaseTraffic,
+    LevelBetas,
+    time_attribution,
+    attribution_residual,
+)
 from .report import (
     render_report,
     ascii_roofline,
@@ -41,18 +49,27 @@ from .report import (
     text_table,
     terms_row,
     TERMS_HEADER,
+    hierarchy_rows,
+    HIERARCHY_HEADER,
+    time_budget_rows,
+    TIME_BUDGET_HEADER,
 )
 from .microbench import run_microbench, MicrobenchResult
 
 __all__ = [
     "ChipSpec", "ScopeSpec", "TPU_V5E", "HOST_CPU_FALLBACK",
+    "MEMORY_LEVELS",
     "chip_scope", "pod_scope", "multipod_scope", "scope_for_mesh",
     "CollectiveOp", "CollectiveSummary", "parse_collectives",
     "attribute_axes", "shape_bytes",
     "StepCharacter", "MemoryFootprint", "characterize",
     "terms_from_character", "character_as_dict",
     "RooflineTerms", "make_terms",
+    "PhaseTraffic", "LevelBetas", "time_attribution",
+    "attribution_residual",
     "render_report", "ascii_roofline", "markdown_table", "text_table",
     "terms_row", "TERMS_HEADER",
+    "hierarchy_rows", "HIERARCHY_HEADER",
+    "time_budget_rows", "TIME_BUDGET_HEADER",
     "run_microbench", "MicrobenchResult",
 ]

@@ -18,12 +18,31 @@ Constants per the assignment: 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
 ~50 GB/s/link ICI.  DCN per-chip egress is an explicit, documented assumption
 (v5e-era multislice deployments budget ~12.5 GB/s/chip); it only affects the
 multi-pod scope, never the single-pod roofline table.
+
+Hierarchical extension (arXiv 2009.05257): each chip also carries a beta
+for the two levels that bracket HBM — on-chip VMEM above it and the host
+link below it — so the time-based ledger can place every byte a serving
+phase moves on exactly one level of
+
+    VMEM  <->  HBM  <->  ICI  <->  DCN  <->  host
+
+``vmem_bw`` and ``host_bw`` are documented assumptions like ``dcn_bw``:
+v5e VMEM streams roughly an order of magnitude faster than HBM (we budget
+~22x HBM, the load/store fabric behind the 8 MXU passes/cycle), and the
+host link is a PCIe-attached DMA path budgeted at 16 GB/s/chip.  The
+microbench (microbench.py) *measures* every level it can reach on the
+live platform; these constants are the deterministic analytic fallback.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from typing import Mapping
+
+# Memory levels of the hierarchical roofline, fastest first.  Every byte a
+# serving phase moves is attributed to exactly one of these; a level that
+# moves zero bytes is "unbound" (it contributes no roof and no time).
+MEMORY_LEVELS = ("vmem", "hbm", "ici", "dcn", "host")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,9 +59,21 @@ class ChipSpec:
     dcn_bw: float                # bytes/s per chip, cross-pod egress
     vmem_bytes: int              # on-chip vector memory
     mxu_dim: int = 128           # systolic array edge
+    vmem_bw: float = 0.0         # bytes/s through on-chip vector memory
+    host_bw: float = 0.0         # bytes/s on the host DMA link (swap path)
 
     def flops_for(self, dtype: str) -> float:
         return float(self.peak_flops_by_dtype.get(dtype, self.peak_flops))
+
+    def level_bw(self, level: str) -> float:
+        """Beta of one memory level of the hierarchy (B/s).  Levels this
+        chip spec does not describe (bw == 0) return 0.0 — callers treat
+        a zero-beta level with traffic as unpriceable, and a zero-byte
+        level as unbound regardless of beta."""
+        if level not in MEMORY_LEVELS:
+            raise ValueError(f"unknown memory level {level!r}")
+        return float(getattr(self, "hbm_bw" if level == "hbm"
+                             else f"{level}_bw"))
 
 
 TPU_V5E = ChipSpec(
@@ -60,6 +91,8 @@ TPU_V5E = ChipSpec(
     ici_links=4,
     dcn_bw=12.5e9,
     vmem_bytes=128 * 1024**2,
+    vmem_bw=22 * 819e9,          # ~22x HBM, documented assumption (see above)
+    host_bw=16e9,                # PCIe-attached host DMA, assumption
 )
 
 
@@ -76,6 +109,8 @@ HOST_CPU_FALLBACK = ChipSpec(
     ici_links=1,
     dcn_bw=1e9,
     vmem_bytes=32 * 1024**2,
+    vmem_bw=50e9,                # cache-resident streaming fallback
+    host_bw=10e9,                # "host" DMA == same DRAM on a CPU platform
 )
 
 

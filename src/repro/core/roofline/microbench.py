@@ -20,13 +20,32 @@ import functools
 import json
 import os
 import time
+import warnings
 from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .hardware import ChipSpec, HOST_CPU_FALLBACK
+from .hardware import ChipSpec, HOST_CPU_FALLBACK, MEMORY_LEVELS
+from .model import LevelBetas
+
+# Bump whenever the cached JSON layout or the measurement protocol
+# changes: a cache written by an older schema must not silently reprice
+# the roofline.
+CACHE_SCHEMA = 2
+
+
+def device_fingerprint() -> Dict[str, object]:
+    """Identity of the platform the measurements are valid for.  A cache
+    file carried across machines (or across forced-device-count runs)
+    fails this check and falls back to the analytic constants."""
+    dev = jax.devices()[0]
+    return {
+        "schema": CACHE_SCHEMA,
+        "device_kind": str(dev.device_kind),
+        "n_devices": int(jax.device_count()),
+    }
 
 
 def _time_best(fn: Callable[[], None], *, repeats: int = 5, warmup: int = 2) -> float:
@@ -173,6 +192,80 @@ def measure_warm_vs_cold(n: int = 1 << 16, repeats: int = 20) -> Dict[str, float
 
 
 # --------------------------------------------------------------------------
+# Per-level betas: one streaming probe per memory level of the hierarchy
+# (the hierarchical roofline's measured ceilings, arXiv 2009.05257 §2)
+# --------------------------------------------------------------------------
+
+def measure_cache_bandwidth(nbytes: int = 1 << 18, inner: int = 64,
+                            repeats: int = 5) -> float:
+    """Bandwidth of a cache-resident stream — the host analogue of VMEM.
+
+    The triad kernel loops ``inner`` times over one small buffer (default
+    256 KiB, sized to sit in L2) so after the first pass every access hits
+    cache: this measures the on-(near-)core level above DRAM, the same way
+    the TPU's VMEM level sits above HBM."""
+    n = nbytes // 4
+    b = jnp.ones((n,), jnp.float32)
+
+    @functools.partial(jax.jit, static_argnums=(2,))
+    def loop(a, b, iters):
+        def body(_, v):
+            return v * jnp.float32(3.0) + b
+        return jax.lax.fori_loop(0, iters, body, a)
+
+    a = jnp.arange(n, dtype=jnp.float32)
+    loop(a, b, inner).block_until_ready()
+    dt = _time_best(lambda: loop(a, b, inner).block_until_ready(),
+                    repeats=repeats)
+    # per iteration: read a, read b, write a  ->  3 * nbytes
+    return 3.0 * nbytes * inner / dt
+
+
+def measure_host_link_bandwidth(nbytes: int = 1 << 26,
+                                repeats: int = 5) -> float:
+    """Bandwidth of the device<->host DMA path — the beta of the ``host``
+    level, i.e. what a block-pool swap crosses.  Measured exactly the way
+    kv_cache._pack_to_host moves data: one contiguous device buffer pulled
+    to a numpy array (device->host), then pushed back (host->device); the
+    reported beta is the round-trip mean."""
+    n = nbytes // 4
+    x = jnp.arange(n, dtype=jnp.float32)
+    x.block_until_ready()
+
+    def pull():
+        np.asarray(x)
+
+    host = np.asarray(x)
+
+    def push():
+        jnp.asarray(host).block_until_ready()
+
+    d2h = nbytes / _time_best(pull, repeats=repeats)
+    h2d = nbytes / _time_best(push, repeats=repeats)
+    return 2.0 / (1.0 / d2h + 1.0 / h2d)        # harmonic mean of the legs
+
+
+def measure_ici_bandwidth(nbytes: int = 1 << 24,
+                          repeats: int = 5) -> Optional[float]:
+    """Device-to-device copy bandwidth — the ICI-level beta when the
+    platform exposes more than one device (forced host-platform devices
+    measure the memcpy fabric between them; a real multi-chip platform
+    measures the actual interconnect).  None on a single-device host —
+    the level stays analytic."""
+    devs = jax.devices()
+    if len(devs) < 2:
+        return None
+    n = nbytes // 4
+    x = jax.device_put(jnp.arange(n, dtype=jnp.float32), devs[0])
+    x.block_until_ready()
+
+    def hop():
+        jax.device_put(x, devs[1]).block_until_ready()
+
+    return nbytes / _time_best(hop, repeats=repeats)
+
+
+# --------------------------------------------------------------------------
 # Assembly into a measured ChipSpec (cached)
 # --------------------------------------------------------------------------
 
@@ -181,6 +274,11 @@ class MicrobenchResult:
     fma_flops: float
     matmul_flops: float
     bandwidth: Dict[str, float]
+    # per-level betas (B/s) of the memory hierarchy; absent levels fall
+    # back to the analytic constants in level_betas()
+    level_bw: Dict[str, float] = dataclasses.field(default_factory=dict)
+    fingerprint: Dict[str, object] = dataclasses.field(default_factory=dict)
+    source: str = "measured"     # "measured" | "analytic" (fallback)
 
     @property
     def peak_flops(self) -> float:
@@ -190,6 +288,39 @@ class MicrobenchResult:
     def peak_bw(self) -> float:
         return self.bandwidth["best"]
 
+    @classmethod
+    def analytic(cls, chip: ChipSpec = HOST_CPU_FALLBACK
+                 ) -> "MicrobenchResult":
+        """Data-sheet fallback shaped like a measurement — used when the
+        cache was written on a different platform/schema."""
+        return cls(
+            fma_flops=chip.peak_flops,
+            matmul_flops=chip.peak_flops,
+            bandwidth={"copy": chip.hbm_bw, "fill": chip.hbm_bw,
+                       "triad": chip.hbm_bw, "best": chip.hbm_bw},
+            level_bw={lvl: chip.level_bw(lvl) for lvl in MEMORY_LEVELS},
+            fingerprint={},
+            source="analytic",
+        )
+
+    def level_betas(self, fallback: ChipSpec = HOST_CPU_FALLBACK
+                    ) -> LevelBetas:
+        """The time-based ledger's denominators: measured where a probe
+        ran, analytic (``fallback``) for levels the platform could not
+        exercise (e.g. ICI on a single-device host)."""
+        def bw(level: str, default: float) -> float:
+            v = self.level_bw.get(level)
+            return float(v) if v else default
+        return LevelBetas(
+            pi=self.peak_flops,
+            vmem=bw("vmem", fallback.level_bw("vmem")),
+            hbm=bw("hbm", self.peak_bw),
+            ici=bw("ici", fallback.ici_bw),
+            dcn=bw("dcn", fallback.dcn_bw),
+            host=bw("host", fallback.level_bw("host")),
+            source=self.source,
+        )
+
     def to_chipspec(self) -> ChipSpec:
         return ChipSpec(
             name="host_cpu_measured",
@@ -197,27 +328,67 @@ class MicrobenchResult:
             peak_flops_by_dtype={"float32": self.peak_flops},
             hbm_bw=self.peak_bw,
             hbm_bytes=HOST_CPU_FALLBACK.hbm_bytes,
-            ici_bw=self.peak_bw,
+            ici_bw=self.level_bw.get("ici") or self.peak_bw,
             ici_links=1,
             dcn_bw=HOST_CPU_FALLBACK.dcn_bw,
             vmem_bytes=HOST_CPU_FALLBACK.vmem_bytes,
+            vmem_bw=self.level_bw.get("vmem")
+            or HOST_CPU_FALLBACK.level_bw("vmem"),
+            host_bw=self.level_bw.get("host")
+            or HOST_CPU_FALLBACK.level_bw("host"),
         )
+
+
+def _load_cache(cache_path: str) -> Optional[MicrobenchResult]:
+    """Load a cached measurement IFF its fingerprint matches this
+    platform.  A stale/foreign cache returns the analytic fallback (with
+    a warning) instead of silently repricing every roofline — the cache
+    is keyed by device kind + device count + schema version."""
+    with open(cache_path) as f:
+        d = json.load(f)
+    cached_fp = d.get("fingerprint") or {}
+    fp = device_fingerprint()
+    if cached_fp != fp:
+        warnings.warn(
+            f"microbench cache {cache_path} was measured on "
+            f"{cached_fp or 'an unknown platform (pre-schema-%d)' % CACHE_SCHEMA} "
+            f"but this host is {fp}; falling back to the analytic "
+            "hardware.py constants (delete the cache to re-measure)",
+            stacklevel=3)
+        return MicrobenchResult.analytic()
+    return MicrobenchResult(
+        fma_flops=d["fma_flops"], matmul_flops=d["matmul_flops"],
+        bandwidth=d["bandwidth"], level_bw=d.get("level_bw", {}),
+        fingerprint=cached_fp, source=d.get("source", "measured"))
 
 
 def run_microbench(cache_path: Optional[str] = "results/microbench.json",
                    quick: bool = False) -> MicrobenchResult:
     if cache_path and os.path.exists(cache_path):
-        with open(cache_path) as f:
-            d = json.load(f)
-        return MicrobenchResult(d["fma_flops"], d["matmul_flops"], d["bandwidth"])
-    kwargs = dict(repeats=3) if quick else {}
+        cached = _load_cache(cache_path)
+        if cached is not None:
+            return cached
+    bandwidth = measure_peak_bandwidth(**({"nbytes": 1 << 26, "repeats": 3}
+                                          if quick else {}))
+    level_bw = {
+        "vmem": measure_cache_bandwidth(**({"inner": 16, "repeats": 3}
+                                           if quick else {})),
+        "hbm": bandwidth["best"],
+        "host": measure_host_link_bandwidth(
+            **({"nbytes": 1 << 24, "repeats": 3} if quick else {})),
+    }
+    ici = measure_ici_bandwidth(**({"nbytes": 1 << 22, "repeats": 3}
+                                   if quick else {}))
+    if ici is not None:
+        level_bw["ici"] = ici
     res = MicrobenchResult(
         fma_flops=measure_peak_flops(**({"size": 1 << 18, "iters": 64, "repeats": 3}
                                         if quick else {})),
         matmul_flops=measure_peak_matmul_flops(**({"n": 256, "iters": 4, "repeats": 3}
                                                   if quick else {})),
-        bandwidth=measure_peak_bandwidth(**({"nbytes": 1 << 26, "repeats": 3}
-                                            if quick else {})),
+        bandwidth=bandwidth,
+        level_bw=level_bw,
+        fingerprint=device_fingerprint(),
     )
     if cache_path:
         os.makedirs(os.path.dirname(cache_path), exist_ok=True)

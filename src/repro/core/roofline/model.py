@@ -19,6 +19,24 @@ overlap.  The score we report as "roofline fraction" is
 i.e. the fraction of the bound step that is *irreducible model math* at peak —
 it punishes remat waste (W_dev >> model_flops_dev), memory-boundedness and
 collective-boundedness alike.
+
+Hierarchical extension (arXiv 2009.05257): the terms optionally carry byte
+counters for the two levels bracketing HBM — VMEM traffic (the Pallas
+kernels' page-streaming loop plus every HBM byte crossing on-chip memory
+once) and host-link bytes (block-pool swap DMAs) — so one step exposes a
+roof per memory level.  A level that moves zero bytes is *unbound*: it has
+no roof (``roofs()`` omits it, ``level_roof`` returns None) rather than an
+inf/NaN entry that would poison ``binding_roof``.
+
+Time-based extension (arXiv 2009.04598): :class:`PhaseTraffic` accumulates
+per-level bytes for one serving phase (prefill / decode / verify / draft /
+swap) together with the phase's *measured* wall-clock, and
+:func:`time_attribution` decomposes that wall-clock into
+
+    time_level = bytes_level / beta_level      (+ flops / pi, + dispatch)
+
+— the additive no-overlap budget whose unexplained remainder
+(:func:`attribution_residual`) is the ledger's honesty metric.
 """
 
 from __future__ import annotations
@@ -26,7 +44,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional
 
-from .hardware import ChipSpec, ScopeSpec
+from .hardware import ChipSpec, MEMORY_LEVELS, ScopeSpec
 
 
 @dataclasses.dataclass
@@ -41,6 +59,11 @@ class RooflineTerms:
     ici_wire_bytes_dev: float
     dcn_wire_bytes_dev: float
     transcendentals_dev: float = 0.0
+
+    # hierarchical levels bracketing HBM (0.0 = not tracked -> unbound):
+    # VMEM = on-chip traffic of the step's kernels, host = swap-DMA bytes
+    vmem_bytes_dev: float = 0.0
+    host_bytes_dev: float = 0.0
 
     # model-level accounting
     model_flops_total: Optional[float] = None   # e.g. 6*N*D for training
@@ -71,12 +94,32 @@ class RooflineTerms:
     def collective_s(self) -> float:
         return self.ici_s + self.dcn_s
 
+    @property
+    def vmem_s(self) -> float:
+        return _safe_time(self.vmem_bytes_dev, self.chip.level_bw("vmem"))
+
+    @property
+    def host_s(self) -> float:
+        return _safe_time(self.host_bytes_dev, self.chip.level_bw("host"))
+
+    def level_bytes(self, level: str) -> float:
+        """Per-device bytes this step moved on one memory level."""
+        return {
+            "vmem": self.vmem_bytes_dev,
+            "hbm": self.hbm_bytes_dev,
+            "ici": self.ici_wire_bytes_dev,
+            "dcn": self.dcn_wire_bytes_dev,
+            "host": self.host_bytes_dev,
+        }[level]
+
     def terms(self) -> Dict[str, float]:
         return {
             "compute": self.compute_s,
             "memory": self.memory_s,
             "ici": self.ici_s,
             "dcn": self.dcn_s,
+            "vmem": self.vmem_s,
+            "host": self.host_s,
         }
 
     @property
@@ -129,20 +172,41 @@ class RooflineTerms:
             return float("inf")
         return self.flops_dev / self.dcn_wire_bytes_dev
 
+    def level_intensity(self, level: str) -> float:
+        """FLOP per byte moved on one memory level of the hierarchy.
+        Infinite when the step moves no bytes there (the roof is absent —
+        rendered "unbound", never folded into :attr:`binding_roof`)."""
+        b = self.level_bytes(level)
+        if b <= 0:
+            return float("inf")
+        return self.flops_dev / b
+
+    def level_roof(self, level: str) -> Optional[float]:
+        """Attainable-FLOP/s ceiling one memory level imposes, or None
+        when the level is unbound (zero bytes) or has no known beta.
+        This is the zero-byte guard: a 1x1 mesh's ICI level or a swap-free
+        run's host level yields None here — not an inf/NaN row."""
+        b, bw = self.level_bytes(level), self.chip.level_bw(level)
+        if b <= 0 or bw <= 0:
+            return None
+        return self.flops_dev / b * bw
+
     def roofs(self) -> Dict[str, float]:
         """Per-chip attainable-performance ceilings, one per resource:
-        ``compute`` = pi, ``hbm`` = I * beta_hbm, and (when the step moves
-        wire bytes) ``ici`` = I_comm * beta_ici / ``dcn`` = I_comm *
-        beta_dcn.  The paper builds exactly this family for its NUMA
-        scopes — the ceiling that sits lowest is the one that binds."""
+        ``compute`` = pi, ``hbm`` = I * beta_hbm, and — for every OTHER
+        memory level the step actually moved bytes on — ``level`` =
+        I_level * beta_level.  The paper builds exactly this family for
+        its NUMA scopes — the ceiling that sits lowest is the one that
+        binds.  Zero-byte levels are omitted (unbound), so the dict never
+        contains an inf/NaN ceiling."""
         out = {
             "compute": self.chip.flops_for(self.dtype),
             "hbm": self.arithmetic_intensity * self.chip.hbm_bw,
         }
-        if self.ici_wire_bytes_dev > 0:
-            out["ici"] = self.ici_intensity * self.chip.ici_bw
-        if self.dcn_wire_bytes_dev > 0:
-            out["dcn"] = self.dcn_intensity * self.chip.dcn_bw
+        for level in ("vmem", "ici", "dcn", "host"):
+            roof = self.level_roof(level)
+            if roof is not None:
+                out[level] = roof
         return out
 
     @property
@@ -197,6 +261,8 @@ class RooflineTerms:
             return "compute-bound"
         if d == "memory":
             return "memory-bound"
+        if d in ("vmem", "host"):
+            return f"{d}-bound"
         return f"collective-bound({d})"
 
 
@@ -210,6 +276,8 @@ def make_terms(
     dcn_wire_bytes_dev: float,
     transcendentals_dev: float = 0.0,
     model_flops_total: Optional[float] = None,
+    vmem_bytes_dev: float = 0.0,
+    host_bytes_dev: float = 0.0,
 ) -> RooflineTerms:
     return RooflineTerms(
         scope=scope.name,
@@ -221,5 +289,126 @@ def make_terms(
         dcn_wire_bytes_dev=dcn_wire_bytes_dev,
         transcendentals_dev=transcendentals_dev,
         model_flops_total=model_flops_total,
+        vmem_bytes_dev=vmem_bytes_dev,
+        host_bytes_dev=host_bytes_dev,
         chip=scope.chip,
     )
+
+
+def _safe_time(nbytes: float, bw: float) -> float:
+    """bytes / beta with the unbound-level convention: zero bytes cost
+    zero seconds whatever the beta; traffic on a level with no known beta
+    is unpriceable (inf), never NaN."""
+    if nbytes <= 0:
+        return 0.0
+    if bw <= 0:
+        return float("inf")
+    return nbytes / bw
+
+
+# --------------------------------------------------------------------------
+# Time-based roofline (arXiv 2009.04598): per-phase, per-level wall budget
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PhaseTraffic:
+    """Per-level byte/FLOP accumulator for ONE serving phase.
+
+    The serving engine charges every device step of a phase (prefill /
+    decode / verify / draft / swap) here, together with the *fenced*
+    wall-clock of its device window (``block_until_ready`` bracketing —
+    see serve/engine.py), so :func:`time_attribution` can decompose the
+    measured time into per-level ``bytes / beta`` terms."""
+
+    flops: float = 0.0
+    vmem: float = 0.0
+    hbm: float = 0.0
+    ici: float = 0.0
+    dcn: float = 0.0
+    host: float = 0.0
+    wall_s: float = 0.0          # measured (fenced) device-window time
+    steps: int = 0               # device dispatches in this phase
+    tokens: int = 0              # tokens the phase committed/processed
+
+    def add(self, *, flops: float = 0.0, vmem: float = 0.0,
+            hbm: float = 0.0, ici: float = 0.0, dcn: float = 0.0,
+            host: float = 0.0, wall_s: float = 0.0, steps: int = 1,
+            tokens: int = 0) -> None:
+        self.flops += flops
+        self.vmem += vmem
+        self.hbm += hbm
+        self.ici += ici
+        self.dcn += dcn
+        self.host += host
+        self.wall_s += wall_s
+        self.steps += steps
+        self.tokens += tokens
+
+    def bytes_for(self, level: str) -> float:
+        if level not in MEMORY_LEVELS:
+            raise ValueError(f"unknown memory level {level!r}")
+        return getattr(self, level)
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelBetas:
+    """One beta per memory level plus the compute peak — the denominators
+    of the time-based decomposition.  ``source`` records whether they came
+    from the live-host microbench ("measured") or the hardware.py
+    data-sheet constants ("analytic")."""
+
+    pi: float                    # FLOP/s
+    vmem: float
+    hbm: float
+    ici: float
+    dcn: float
+    host: float
+    source: str = "analytic"
+
+    @classmethod
+    def from_chip(cls, chip: ChipSpec, dtype: Optional[str] = None,
+                  source: str = "analytic") -> "LevelBetas":
+        return cls(
+            pi=chip.flops_for(dtype) if dtype else chip.peak_flops,
+            vmem=chip.level_bw("vmem"),
+            hbm=chip.hbm_bw,
+            ici=chip.ici_bw,
+            dcn=chip.dcn_bw,
+            host=chip.level_bw("host"),
+            source=source,
+        )
+
+    def beta(self, level: str) -> float:
+        if level not in MEMORY_LEVELS:
+            raise ValueError(f"unknown memory level {level!r}")
+        return float(getattr(self, level))
+
+
+def time_attribution(phase: PhaseTraffic, betas: LevelBetas,
+                     dispatch_s_per_step: float = 0.0) -> Dict[str, float]:
+    """Decompose one phase into the additive no-overlap time budget:
+    ``compute`` = flops/pi, one ``bytes/beta`` term per memory level, and
+    ``dispatch`` = steps x the measured per-step framework overhead (the
+    paper's §2.4 kernel/no-kernel subtraction: host-side argument staging
+    and launch cost is real wall-clock but belongs to no memory level).
+    Zero-byte levels contribute exactly 0.0 (unbound)."""
+    out = {"compute": _safe_time(phase.flops, betas.pi) if phase.flops > 0
+           else 0.0}
+    for level in MEMORY_LEVELS:
+        out[level] = _safe_time(phase.bytes_for(level), betas.beta(level))
+    out["dispatch"] = dispatch_s_per_step * phase.steps
+    return out
+
+
+def attribution_residual(phase: PhaseTraffic, betas: LevelBetas,
+                         dispatch_s_per_step: float = 0.0) -> float:
+    """Signed fraction of the phase's measured wall-clock the budget does
+    NOT explain: (wall - sum(times)) / wall.  Positive = unattributed
+    time remains (the budget undershoots); negative = the no-overlap sum
+    exceeds the measurement (the platform overlapped levels).  The
+    acceptance bar is |residual| within tolerance."""
+    if phase.wall_s <= 0:
+        return float("nan")
+    budget = sum(time_attribution(phase, betas, dispatch_s_per_step)
+                 .values())
+    return (phase.wall_s - budget) / phase.wall_s

@@ -8,9 +8,11 @@ tables feed EXPERIMENTS.md.
 from __future__ import annotations
 
 import math
-from typing import Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
-from .model import RooflineTerms
+from .hardware import MEMORY_LEVELS
+from .model import (LevelBetas, PhaseTraffic, RooflineTerms,
+                    attribution_residual, time_attribution)
 
 
 def _fmt_si(x: float, unit: str = "") -> str:
@@ -60,16 +62,20 @@ def comm_terms_row(label: str, t: RooflineTerms) -> List[str]:
     """One row of the communication-roofline table: the HBM intensity next
     to the interconnect intensity I_comm, each roof's per-chip ceiling,
     and which one binds — the per-scope view the paper's NUMA
-    construction reports (local vs remote-traffic ceilings)."""
+    construction reports (local vs remote-traffic ceilings).
+
+    A step that moves zero collective bytes (1x1 mesh, replicated MLA
+    pools) has no ICI roof: the level renders as ``unbound`` — never an
+    inf/NaN cell, and never a candidate for the binding roof."""
     roofs = t.roofs()
     ici_i = t.ici_intensity
     return [
         label,
         t.scope,
         f"{t.arithmetic_intensity:.1f}",
-        "inf" if ici_i == float("inf") else f"{ici_i:.1f}",
+        "unbound" if ici_i == float("inf") else f"{ici_i:.1f}",
         _fmt_si(roofs["hbm"], "F/s"),
-        _fmt_si(roofs["ici"], "F/s") if "ici" in roofs else "-",
+        _fmt_si(roofs["ici"], "F/s") if "ici" in roofs else "unbound",
         t.binding_roof,
         _fmt_si(t.attainable_flops_comm, "F/s"),
     ]
@@ -79,6 +85,86 @@ COMM_HEADER = [
     "cell", "scope", "I_hbm", "I_ici", "hbm roof", "ici roof",
     "binds", "attainable",
 ]
+
+
+# --------------------------------------------------------------------------
+# Hierarchical + time-based roofline tables (arXiv 2009.05257 / 2009.04598)
+# --------------------------------------------------------------------------
+
+HIERARCHY_HEADER = [
+    "cell", "level", "bytes/dev", "beta", "I (F/B)", "roof", "time",
+]
+
+
+def hierarchy_rows(label: str, t: RooflineTerms) -> List[List[str]]:
+    """The per-level hierarchy table for one step's terms: every memory
+    level's bytes, beta, intensity, ceiling and time term.  Unbound levels
+    (zero bytes) keep their row — rendered ``unbound`` — so the table
+    always shows the full VMEM/HBM/ICI/DCN/host ladder."""
+    times = {"vmem": t.vmem_s, "hbm": t.memory_s, "ici": t.ici_s,
+             "dcn": t.dcn_s, "host": t.host_s}
+    rows = [[label, "compute", "-", _fmt_si(t.chip.flops_for(t.dtype), "F/s"),
+             "-", _fmt_si(t.chip.flops_for(t.dtype), "F/s"),
+             _fmt_s(t.compute_s)]]
+    for level in MEMORY_LEVELS:
+        b = t.level_bytes(level)
+        roof = t.level_roof(level)
+        if b <= 0:
+            rows.append([label, level, "0B",
+                         _fmt_si(t.chip.level_bw(level), "B/s"),
+                         "unbound", "unbound", "0s"])
+            continue
+        rows.append([
+            label, level, _fmt_si(b, "B"),
+            _fmt_si(t.chip.level_bw(level), "B/s"),
+            f"{t.level_intensity(level):.1f}",
+            _fmt_si(roof, "F/s") if roof is not None else "unbound",
+            _fmt_s(times[level]),
+        ])
+    return rows
+
+
+TIME_BUDGET_HEADER = [
+    "phase", "steps", "tokens", "wall", "compute", "vmem", "hbm", "ici",
+    "dcn", "host", "dispatch", "residual",
+]
+
+
+def time_budget_rows(phases: Dict[str, PhaseTraffic], betas: LevelBetas,
+                     dispatch_s_per_step: float = 0.0) -> List[List[str]]:
+    """The time-based roofline table: one row per serving phase, its
+    measured wall-clock decomposed into per-level ``bytes/beta`` terms
+    plus the measured dispatch overhead; ``residual`` is the signed
+    fraction of the wall the budget leaves unexplained.  A final ``total``
+    row sums the phases."""
+    rows = []
+    total = PhaseTraffic()
+    for name, ph in phases.items():
+        if ph.steps == 0 and ph.wall_s == 0:
+            continue
+        att = time_attribution(ph, betas, dispatch_s_per_step)
+        res = attribution_residual(ph, betas, dispatch_s_per_step)
+        rows.append([
+            name, str(ph.steps), str(ph.tokens), _fmt_s(ph.wall_s),
+            _fmt_s(att["compute"]),
+            *[_fmt_s(att[lvl]) for lvl in MEMORY_LEVELS],
+            _fmt_s(att["dispatch"]),
+            f"{res * 100:+.1f}%" if res == res else "-",
+        ])
+        total.add(flops=ph.flops, vmem=ph.vmem, hbm=ph.hbm, ici=ph.ici,
+                  dcn=ph.dcn, host=ph.host, wall_s=ph.wall_s,
+                  steps=ph.steps, tokens=ph.tokens)
+    if rows:
+        att = time_attribution(total, betas, dispatch_s_per_step)
+        res = attribution_residual(total, betas, dispatch_s_per_step)
+        rows.append([
+            "total", str(total.steps), str(total.tokens),
+            _fmt_s(total.wall_s), _fmt_s(att["compute"]),
+            *[_fmt_s(att[lvl]) for lvl in MEMORY_LEVELS],
+            _fmt_s(att["dispatch"]),
+            f"{res * 100:+.1f}%" if res == res else "-",
+        ])
+    return rows
 
 
 def markdown_table(rows: Sequence[Sequence[str]], header: Sequence[str]) -> str:

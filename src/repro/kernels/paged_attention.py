@@ -500,3 +500,70 @@ def mla_paged_attention_verify(
         interpret=interpret,
     )(block_tables, pos.astype(jnp.int32), qlf, qrf, c_pool, r_pool)
     return o.reshape(B, T, H, r)
+
+
+# --------------------------------------------------------------------------
+# VMEM traffic pricing (hierarchical roofline, arXiv 2009.05257)
+#
+# The HBM ledger prices the page walk once per line (kv_line_bytes * L).
+# The VMEM level sees MORE traffic than that: the streamed slabs cross it
+# on their way in, the query slab is re-read from VMEM on every block step
+# of the grid, and the fp32 softmax carries (m, l, acc) in scratch are read
+# AND written once per block step.  These formulas are derived from the
+# BlockSpecs and scratch shapes of the kernels above — if a kernel's grid
+# or scratch changes, the pricing here must change with it (the bench
+# --hierarchy crosscheck is the tripwire).
+# --------------------------------------------------------------------------
+
+
+def live_blocks(context_len: int, page_size: int, n_q: int = 1) -> int:
+    """Pages holding live KV for a slot whose LAST query sits at position
+    ``context_len + n_q - 2`` (decode: n_q=1 -> lines 0..L-1).  The kernel
+    grid walks the whole block table, but steps beyond the live prefix
+    mask to no-ops; we price only the live walk, like the HBM ledger."""
+    lines = max(1, int(context_len) + int(n_q) - 1)
+    return -(-lines // int(page_size))
+
+
+def paged_decode_vmem_bytes(
+    *, context_len: int, page_size: int, n_heads: int, kv_heads: int,
+    head_dim: int, isize: int, n_q: int = 1,
+) -> float:
+    """VMEM bytes one slot moves in the GQA paged decode (``n_q == 1``)
+    or verify (``n_q == T``) kernel.
+
+    Grid is (B, KV, n_blocks); per (kv_head, block) step the kernel
+    streams one (page, hd) K slab and one V slab HBM->VMEM, re-reads the
+    (G * n_q, hd) query slab, and reads+writes the fp32 carries
+    (m, l: (rows, 1) each; acc: (rows, hd)).  The output flush and the
+    n_q freshly appended cache lines cross VMEM once."""
+    g = n_heads // kv_heads
+    rows = g * n_q
+    nb = live_blocks(context_len, page_size, n_q)
+    stream = kv_heads * nb * 2 * page_size * head_dim * isize
+    q_reread = kv_heads * nb * rows * head_dim * isize
+    carries = kv_heads * nb * 2 * rows * (head_dim + 2) * 4
+    out = kv_heads * rows * head_dim * isize
+    appended = n_q * 2 * kv_heads * head_dim * isize
+    return float(stream + q_reread + carries + out + appended)
+
+
+def mla_paged_decode_vmem_bytes(
+    *, context_len: int, page_size: int, n_heads: int, lora_rank: int,
+    rope_dim: int, isize: int, n_q: int = 1,
+) -> float:
+    """VMEM bytes one slot moves in the MLA paged decode/verify kernel.
+
+    Grid is (B, n_blocks); per block step the kernel streams one
+    (page, r) latent slab and one (page, dr) rope slab, re-reads the
+    (H * n_q, r) + (H * n_q, dr) query slabs, and reads+writes the fp32
+    carries (m, l: (rows, 1); acc: (rows, r))."""
+    rows = n_heads * n_q
+    nb = live_blocks(context_len, page_size, n_q)
+    line = (lora_rank + rope_dim) * isize
+    stream = nb * page_size * line
+    q_reread = nb * rows * line
+    carries = nb * 2 * rows * (lora_rank + 2) * 4
+    out = rows * lora_rank * isize
+    appended = n_q * line
+    return float(stream + q_reread + carries + out + appended)

@@ -55,9 +55,10 @@ from repro.core.roofline.substitute import substitute_paged_attention
 from repro.models import decode_step_paged, decode_step_verify_paged
 from repro.models.common import param_counts
 
-from .scheduler import (decode_collective_count, decode_step_ici_bytes,
-                        decode_token_bytes, decode_token_flops,
-                        kv_line_bytes, params_bytes_active, state_bytes)
+from .scheduler import (attn_kernel_vmem_bytes, decode_collective_count,
+                        decode_step_ici_bytes, decode_token_bytes,
+                        decode_token_flops, kv_line_bytes,
+                        params_bytes_active, slot_swap_bytes, state_bytes)
 
 
 def decode_step_character(engine) -> extract.StepCharacter:
@@ -262,4 +263,146 @@ def crosscheck_verify(engine, requests: Optional[List] = None,
         "substituted": sub is not None,
         "contexts": contexts,
         "n_tokens": T,
+    }
+
+
+def step_cost_analysis(engine) -> Dict[str, float]:
+    """Flops + bytes-accessed of the REAL fused decode+sample step, from
+    the compiled module's own cost model.
+
+    Unlike :func:`decode_step_character` (which compiles the decode body
+    alone with the jnp reference backend for HLO parsing), this lowers
+    ``engine._decode_fn`` — the exact program whose fenced wall the phase
+    ledger records — so the time budget's compute/HBM rows divide bytes
+    the step actually moves, sampling tail included."""
+    if engine._kv is None:
+        raise ValueError("engine has no live pool; submit work or reset()")
+    e, kv = engine.ecfg, engine._kv
+    import numpy as np
+    bt = kv.block_tables_for(list(range(e.num_slots)))
+    args = (engine.params, kv.pools, bt,
+            jnp.asarray(np.zeros((e.num_slots, 1), np.int32)),
+            jnp.asarray(np.zeros((e.num_slots,), np.int32)),
+            jnp.asarray(np.ones((e.num_slots,), bool)),
+            jnp.asarray(engine._key_data), jnp.asarray(engine._steps),
+            jnp.asarray(engine._temps), jnp.asarray(engine._top_ks),
+            jnp.asarray(engine._top_ps))
+    ca = engine._decode_fn.lower(*args).compile().cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def _kernel_grid_vmem_walk(cfg, context_len: int, page_size: int,
+                           n_q: int = 1) -> float:
+    """Independent re-derivation of one slot's paged-attention VMEM
+    traffic by walking the Pallas grids in kernels/paged_attention.py
+    literally: for every grid step, sum the ``in_specs`` block bytes the
+    BlockSpec index maps stream in, the fp32 scratch carries the kernel
+    reads AND rewrites, and the output block written at the flush step —
+    plus the step's appended KV line crossing VMEM on its way to the
+    pools.  The closed-form pricing (kernels.paged_decode_vmem_bytes)
+    must agree with this walk; drift means someone changed the kernel's
+    block geometry without repricing the ledger."""
+    from repro.kernels.paged_attention import live_blocks
+    isize = jnp.dtype(cfg.dtype).itemsize
+    nb = live_blocks(context_len, page_size, n_q)
+    total = 0.0
+    for unit, reps in cfg.segments():
+        for b in unit:
+            if b.mixer == "attn":
+                KV, G, hd = (cfg.n_kv_heads,
+                             cfg.n_heads // cfg.n_kv_heads, cfg.hd)
+                rows = G * n_q
+                per_step = (rows * hd * isize            # q block
+                            + 2 * page_size * hd * isize  # k + v blocks
+                            + 2 * rows * (hd + 2) * 4)    # m/l/acc r+w
+                walk = KV * (nb * per_step + rows * hd * isize)  # + out
+                walk += n_q * 2 * KV * hd * isize        # appended line
+            elif b.mixer == "mla":
+                H, r, dr = (cfg.n_heads, cfg.kv_lora_rank,
+                            cfg.rope_head_dim)
+                rows = H * n_q
+                per_step = (rows * (r + dr) * isize       # ql + qr blocks
+                            + page_size * (r + dr) * isize  # c + r blocks
+                            + 2 * rows * (r + 2) * 4)     # m/l/acc r+w
+                walk = nb * per_step + rows * r * isize   # + out
+                walk += n_q * (r + dr) * isize            # appended line
+            else:
+                continue
+            total += reps * walk
+    return total
+
+
+def crosscheck_vmem(engine, requests: Optional[List] = None,
+                    n_q: int = 1) -> Dict:
+    """Ledger <-> kernel-geometry cross-check for the VMEM level.
+
+    The VMEM row of the hierarchy has no PMU to read on this stack, so
+    the check is pricing-vs-artifact: the scheduler's closed-form
+    ``attn_kernel_vmem_bytes`` against an independent walk of the actual
+    Pallas BlockSpec grids (:func:`_kernel_grid_vmem_walk`).  A ratio
+    off 1.0 means the ledger's VMEM bytes no longer describe the kernel
+    that ships."""
+    cfg, ps = engine.cfg, engine.ecfg.page_size
+    if requests is None:
+        requests = engine._sched.decode_requests()
+    if not requests:
+        raise ValueError("no decoding requests to cross-check")
+    contexts = [r.context_len for r in requests]
+    analytic = sum(attn_kernel_vmem_bytes(cfg, L, ps, n_q=n_q)
+                   for L in contexts)
+    walked = sum(_kernel_grid_vmem_walk(cfg, L, ps, n_q=n_q)
+                 for L in contexts)
+    return {
+        "analytic_vmem_bytes": analytic,
+        "kernel_walk_bytes": walked,
+        "vmem_ratio": analytic / max(walked, 1.0),
+        "contexts": contexts,
+    }
+
+
+def crosscheck_host(engine, n_blocks: Optional[int] = None) -> Dict:
+    """Ledger <-> HLO cross-check for the HOST level (swap DMAs).
+
+    The swap phase charges ``slot_swap_bytes`` per preemption round-trip.
+    This compiles the same gather-and-pack program ``PagedKVCache
+    .swap_out`` runs (per-page gathers of every cache leaf, bitcast +
+    concatenated into the ONE flat device->host buffer) abstractly at the
+    engine's live pool shapes and compares the compiled output footprint
+    (extract.MemoryFootprint.output_bytes — the bytes that cross the
+    link) against the pricing."""
+    if engine._kv is None:
+        raise ValueError("engine has no live pool; submit work or reset()")
+    cfg, kv, e = engine.cfg, engine._kv, engine.ecfg
+    if n_blocks is None:
+        live = [kv.slot_pages(s) for s in range(e.num_slots)
+                if s in kv._meta]
+        n_blocks = max(live) if live else kv.pages_needed(kv.max_len)
+    n_blocks = max(int(n_blocks), 1)
+
+    def pack(pools, phys, slot):
+        dev = []
+        for seg_pool, seg_flag in zip(pools, kv._paged):
+            def gather(pool, paged):
+                if paged:
+                    return pool[:, phys]
+                return jax.lax.dynamic_slice_in_dim(pool, slot, 1, axis=1)
+            dev.append(jax.tree.map(gather, seg_pool, seg_flag))
+        flat = [jax.lax.bitcast_convert_type(x, jnp.uint8).reshape(-1)
+                for x in jax.tree.leaves(dev)]
+        return jnp.concatenate(flat)
+
+    abstract = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), kv.pools)
+    compiled = jax.jit(pack, static_argnums=(2,)).lower(
+        abstract, jax.ShapeDtypeStruct((n_blocks,), jnp.int32), 0).compile()
+    foot = extract.MemoryFootprint.from_compiled(compiled)
+    analytic = slot_swap_bytes(cfg, n_blocks, e.page_size)
+    return {
+        "analytic_swap_bytes": analytic,
+        "hlo_output_bytes": float(foot.output_bytes),
+        "host_ratio": analytic / max(float(foot.output_bytes), 1.0),
+        "n_blocks": n_blocks,
     }

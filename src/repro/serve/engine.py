@@ -45,7 +45,10 @@ from repro.models.common import ModelConfig, model_flops
 
 from . import sampling
 from .kv_cache import PagedKVCache, supports_paging
-from .scheduler import Request, RequestState, Scheduler
+from .scheduler import (Request, RequestState, RooflineLedger, Scheduler,
+                        decode_token_bytes, decode_token_flops,
+                        decode_token_vmem_bytes, kv_line_bytes,
+                        params_bytes_active)
 
 
 @dataclasses.dataclass
@@ -184,6 +187,7 @@ class Engine:
         self.prefill_shapes: set = set()      # padded lengths compiled
         self.step_count = 0
         self.decode_steps = 0
+        self._dispatch_s: Optional[float] = None
 
     # -- wiring ------------------------------------------------------------
 
@@ -243,6 +247,7 @@ class Engine:
         self.prefill_shapes: set = set()
         self.step_count = 0
         self.decode_steps = 0
+        self._dispatch_s = None
 
     def _kv_margin(self) -> int:
         """Block-table margin (tokens) past ``max_len``; the speculative
@@ -345,6 +350,113 @@ class Engine:
             self.step()
         return self._sched.finished[n0:]
 
+    # -- hierarchical / time-based roofline --------------------------------
+
+    @property
+    def phases(self):
+        """Per-phase traffic + fenced wall time (scheduler.Scheduler
+        .phases): prefill / decode / verify / draft / swap."""
+        return self._sched.phases if self._sched is not None else {}
+
+    def reset_phases(self) -> None:
+        """Drop accumulated phase traffic — call after a warm-up pass so
+        compile time never pollutes the timed budget."""
+        if self._sched is not None:
+            self._sched.reset_phases()
+
+    def _no_kernel_cfg(self) -> ModelConfig:
+        """A degenerate twin of this engine's config: identical layer
+        count, block pattern and paged-cache structure, every tensor
+        dimension floored — the compiled decode step has the same op
+        graph with near-zero kernel work, so its fenced wall IS the
+        per-step framework/launch floor (the paper's no-kernel run)."""
+        cfg = self.cfg
+        shrink = {"d_model": 8, "n_heads": 1, "n_kv_heads": 1,
+                  "head_dim": 8, "d_ff": 8, "vocab_size": 32,
+                  "moe_d_ff": 8, "q_lora_rank": 8, "kv_lora_rank": 8,
+                  "rope_head_dim": 4, "nope_head_dim": 8, "v_head_dim": 8}
+        updates = {k: v for k, v in shrink.items()
+                   if getattr(cfg, k) > v}
+        return dataclasses.replace(cfg, name=cfg.name + "-nokernel",
+                                   **updates)
+
+    def measure_dispatch_overhead(self, repeats: int = 20) -> float:
+        """Per-step framework overhead, seconds: the paper's kernel/
+        no-kernel protocol (§2.4) — run the SAME decode-step program with
+        every kernel's work degenerated to the floor (``_no_kernel_cfg``),
+        so tracing, pytree flattening, launch and per-op framework cost
+        are all measured and the time budget carries them as an explicit
+        dispatch row instead of smearing them into the residual.  Median
+        of ``repeats`` fenced calls; cached until the next reset()."""
+        if self._dispatch_s is not None:
+            return self._dispatch_s
+        from repro.models import init_params
+        nk_cfg = self._no_kernel_cfg()
+        nk = Engine(nk_cfg, init_params(nk_cfg, jax.random.PRNGKey(0)),
+                    dataclasses.replace(self.ecfg, num_pages=None))
+        nk.reset()
+        e = nk.ecfg
+        kv = nk._kv
+        bt = kv.block_tables_for(list(range(e.num_slots)))
+        args = (nk.params, kv.pools, bt,
+                jnp.asarray(np.zeros((e.num_slots, 1), np.int32)),
+                jnp.asarray(np.zeros((e.num_slots,), np.int32)),
+                jnp.asarray(np.ones((e.num_slots,), bool)),
+                jnp.asarray(nk._key_data), jnp.asarray(nk._steps),
+                jnp.asarray(nk._temps), jnp.asarray(nk._top_ks),
+                jnp.asarray(nk._top_ps))
+        jax.block_until_ready(nk._decode_fn(*args)[0])   # compile untimed
+        samples = []
+        for _ in range(max(repeats, 1)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(nk._decode_fn(*args)[0])
+            samples.append(time.perf_counter() - t0)
+        self._dispatch_s = float(np.median(samples))
+        return self._dispatch_s
+
+    def aggregate_ledger(self) -> RooflineLedger:
+        """One ledger summing every request this scheduler has seen
+        (finished + in flight) — the step-level view the hierarchy table
+        reports."""
+        agg = RooflineLedger()
+        if self._sched is None:
+            return agg
+        reqs = list(self._sched.finished) + list(self._sched.active.values())
+        reqs += list(self._sched.preempted) + list(self._sched.waiting)
+        for req in reqs:
+            for f in dataclasses.fields(RooflineLedger):
+                setattr(agg, f.name,
+                        getattr(agg, f.name) + getattr(req.ledger, f.name))
+        return agg
+
+    def hierarchy_report(self, betas=None, label: str = "decode") -> str:
+        """The hierarchical + time-based roofline report: the aggregate
+        decode terms' per-level ladder (VMEM/HBM/ICI/DCN/host) plus the
+        per-phase time budget decomposed against ``betas`` (measured
+        LevelBetas when the microbench has run; this chip's analytic
+        constants otherwise)."""
+        from repro.core.roofline.model import LevelBetas
+        from repro.core.roofline.report import (HIERARCHY_HEADER,
+                                                TIME_BUDGET_HEADER,
+                                                hierarchy_rows,
+                                                text_table,
+                                                time_budget_rows)
+        if betas is None:
+            betas = LevelBetas.from_chip(self.ecfg.chip, dtype=self.cfg.dtype)
+        t = self.aggregate_ledger().terms(self.cfg, self.ecfg.chip,
+                                          n_chips=self._ledger_chips())
+        dispatch = self._dispatch_s or 0.0
+        out = [f"== hierarchical roofline: {self.cfg.name} "
+               f"(betas: {betas.source}) ==",
+               text_table(hierarchy_rows(label, t), HIERARCHY_HEADER)]
+        rows = time_budget_rows(dict(self.phases), betas,
+                                dispatch_s_per_step=dispatch)
+        if rows:
+            out.append("-- time budget (dispatch "
+                       f"{dispatch * 1e6:.0f}us/step) --")
+            out.append(text_table(rows, TIME_BUDGET_HEADER))
+        return "\n".join(out)
+
     # -- internals ---------------------------------------------------------
 
     def _run_prefill(self, req: Request, start: int, end: int) -> None:
@@ -356,6 +468,7 @@ class Engine:
         if not self._grow_spans([req], lambda r: (start, end)):
             return                          # req itself was preempted
         whole = start == 0 and end == fill_len
+        t0 = time.perf_counter()
         if whole and self._bucketable and self.ecfg.prefill_bucket > 0:
             # length-bucketed jitted prefill: pad the prompt to the next
             # power of two; causal masking makes the prefix rows (and the
@@ -387,6 +500,18 @@ class Engine:
                 # whole-prompt prefill — those pages are only promised, not
                 # yet written)
                 kv.freeze_committed(req.slot, fill, end)
+        # fence before stamping (async dispatch; see _run_decode)
+        jax.block_until_ready(last_logits)
+        t1 = time.perf_counter()
+        n_new = end - start
+        self._sched.phases["prefill"].add(
+            flops=(model_flops(cfg, end, 1, "prefill")
+                   - model_flops(cfg, start, 1, "prefill")),
+            # pass-through floor: one weight read, the prefix KV lines the
+            # chunk's attention walks, the new lines it writes
+            hbm=params_bytes_active(cfg) + end * kv_line_bytes(cfg),
+            vmem=params_bytes_active(cfg) + end * kv_line_bytes(cfg),
+            wall_s=t1 - t0, steps=1, tokens=n_new)
         req.prefill_pos = end
         if end == fill_len:
             # charge only the compute actually run: a prefix-cache hit
@@ -453,26 +578,45 @@ class Engine:
         token = np.where(active, self._next_token, 0).astype(np.int32)
         pos = np.where(active, self._pos, 0).astype(np.int32)
         # decode + batched sampling run as ONE jitted step: the host sees
-        # only the chosen token ids, never the (B, V) logits
-        next_tok, kv.pools = self._decode_fn(
-            self.params, kv.pools, bt, jnp.asarray(token[:, None]),
-            jnp.asarray(pos), jnp.asarray(active),
-            jnp.asarray(self._key_data), jnp.asarray(self._steps),
-            jnp.asarray(self._temps), jnp.asarray(self._top_ks),
-            jnp.asarray(self._top_ps))
+        # only the chosen token ids, never the (B, V) logits.  Argument
+        # conversion happens BEFORE the fenced window so the phase wall
+        # measures the device step, not host-side staging
+        step_args = (self.params, kv.pools, bt, jnp.asarray(token[:, None]),
+                     jnp.asarray(pos), jnp.asarray(active),
+                     jnp.asarray(self._key_data), jnp.asarray(self._steps),
+                     jnp.asarray(self._temps), jnp.asarray(self._top_ks),
+                     jnp.asarray(self._top_ps))
+        t0 = time.perf_counter()
+        next_tok, kv.pools = self._decode_fn(*step_args)
+        # fence BEFORE stamping: dispatch is async, so an unfenced stamp
+        # records launch time, not completion — every request committed
+        # this step shares one post-fence stamp
+        jax.block_until_ready(next_tok)
+        t1 = time.perf_counter()
         self.decode_steps += 1
         tok_np = np.asarray(next_tok)
         n_active = len(running)
         ici_share = self._step_collective_bytes(1) / n_active
+        ph = self._sched.phases["decode"]
+        ps = self.ecfg.page_size
         for req in running:
+            vmem = decode_token_vmem_bytes(self.cfg, req.context_len,
+                                           n_active, ps)
             req.ledger.add_decode_token(self.cfg, req.context_len, n_active,
-                                        ici_bytes=ici_share)
-            self._commit_token(req, int(tok_np[req.slot]))
+                                        ici_bytes=ici_share,
+                                        vmem_bytes=vmem)
+            ph.add(flops=decode_token_flops(self.cfg, req.context_len),
+                   vmem=vmem,
+                   hbm=decode_token_bytes(self.cfg, req.context_len,
+                                          n_active),
+                   ici=ici_share, steps=0, tokens=1)
+            self._commit_token(req, int(tok_np[req.slot]), t=t1)
+        ph.add(wall_s=t1 - t0, steps=1, tokens=0)
 
-    def _commit_token(self, req: Request, tok: int, first: bool = False)\
-            -> None:
+    def _commit_token(self, req: Request, tok: int, first: bool = False,
+                      t: Optional[float] = None) -> None:
         req.generated.append(tok)
-        req.token_times.append(time.perf_counter())
+        req.token_times.append(time.perf_counter() if t is None else t)
         if first:
             req.state = RequestState.RUNNING
         if self._kv.prefix_cache:

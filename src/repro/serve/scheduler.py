@@ -61,13 +61,16 @@ import dataclasses
 import enum
 import functools
 import math
+import time
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.core.roofline.hardware import ChipSpec, TPU_V5E, tp_scope
-from repro.core.roofline.model import RooflineTerms, make_terms
+from repro.core.roofline.model import PhaseTraffic, RooflineTerms, make_terms
+from repro.kernels.paged_attention import (mla_paged_decode_vmem_bytes,
+                                           paged_decode_vmem_bytes)
 from repro.models.common import ModelConfig, model_flops, param_counts
 
 from .kv_cache import PagedKVCache
@@ -138,6 +141,62 @@ def decode_token_bytes(cfg: ModelConfig, context_len: int,
     weights = params_bytes_active(cfg) / max(active_batch, 1)
     kv = (context_len + 1) * kv_line_bytes(cfg)          # read ctx + write 1
     return weights + kv + 2 * state_bytes(cfg)
+
+
+def attn_kernel_vmem_bytes(cfg: ModelConfig, context_len: int,
+                           page_size: int, n_q: int = 1) -> float:
+    """VMEM traffic of one slot's paged-attention walks summed over all
+    attention/MLA layers: the HBM page stream crossing VMEM page-padded,
+    plus the kernel-resident re-touches (query slab re-reads per block
+    step, fp32 softmax carries read+written) the HBM ledger never sees.
+    Priced from the kernel grids in kernels/paged_attention.py."""
+    isize = _dtype_bytes(cfg.dtype)
+    total = 0.0
+    for unit, reps in cfg.segments():
+        for b in unit:
+            if b.mixer == "attn":
+                total += reps * paged_decode_vmem_bytes(
+                    context_len=context_len, page_size=page_size,
+                    n_heads=cfg.n_heads, kv_heads=cfg.n_kv_heads,
+                    head_dim=cfg.hd, isize=isize, n_q=n_q)
+            elif b.mixer == "mla":
+                total += reps * mla_paged_decode_vmem_bytes(
+                    context_len=context_len, page_size=page_size,
+                    n_heads=cfg.n_heads, lora_rank=cfg.kv_lora_rank,
+                    rope_dim=cfg.rope_head_dim, isize=isize, n_q=n_q)
+    return total
+
+
+def decode_token_vmem_bytes(cfg: ModelConfig, context_len: int,
+                            active_batch: int, page_size: int) -> float:
+    """VMEM-level bytes for one generated token: every non-KV HBM byte of
+    the step (amortized weight read, recurrent state traffic) crosses
+    VMEM exactly once on its way to the compute units, and the paged
+    attention kernels add their streamed + resident traffic on top."""
+    passthrough = (params_bytes_active(cfg) / max(active_batch, 1)
+                   + 2 * state_bytes(cfg))
+    return passthrough + attn_kernel_vmem_bytes(cfg, context_len, page_size)
+
+
+def verify_step_vmem_bytes(cfg: ModelConfig, context_len: int, n_fed: int,
+                           active_batch: int, page_size: int) -> float:
+    """VMEM-level bytes for one slot's multi-token verification step:
+    one weight pass-through scores ``n_fed`` tokens sharing a single
+    page walk (the verify kernels flatten the draft window into extra
+    query rows, so only the resident re-touches scale with n_fed)."""
+    passthrough = (params_bytes_active(cfg) / max(active_batch, 1)
+                   + 2 * state_bytes(cfg))
+    return passthrough + attn_kernel_vmem_bytes(cfg, context_len, page_size,
+                                                n_q=n_fed)
+
+
+def slot_swap_bytes(cfg: ModelConfig, n_blocks: int, page_size: int) -> float:
+    """Host-link bytes to park (or restore) one slot: its physical pages
+    across every paged cache leaf plus its recurrent-state rows — the
+    analytic prediction serve/crosscheck.crosscheck_host validates
+    against the packed swap DMA's compiled output bytes."""
+    return float(n_blocks * page_size * kv_line_bytes(cfg)
+                 + state_bytes(cfg))
 
 
 @functools.lru_cache(maxsize=None)
@@ -241,6 +300,7 @@ class RooflineLedger:
     decode_flops: float = 0.0
     decode_bytes: float = 0.0
     decode_kv_bytes: float = 0.0     # KV-walk + state share of decode_bytes
+    decode_vmem_bytes: float = 0.0   # on-chip VMEM traffic (stream+resident)
     decode_ici_bytes: float = 0.0    # per-device TP collective wire bytes
     decode_tokens: int = 0
     decode_batch_sum: int = 0        # sum of co-resident batch sizes
@@ -255,15 +315,19 @@ class RooflineLedger:
     pages_peak: int = 0              # most physical pages held at once
 
     def add_decode_token(self, cfg: ModelConfig, context_len: int,
-                         active_batch: int, ici_bytes: float = 0.0) -> None:
+                         active_batch: int, ici_bytes: float = 0.0,
+                         vmem_bytes: float = 0.0) -> None:
         """``ici_bytes`` is this request's share of the step's collective
         wire traffic (zero on a single chip — the sharded engine charges
-        ``decode_step_ici_bytes / active_batch``)."""
+        ``decode_step_ici_bytes / active_batch``); ``vmem_bytes`` the
+        on-chip traffic of :func:`decode_token_vmem_bytes` (zero keeps
+        pre-hierarchy callers byte-identical)."""
         self.decode_flops += decode_token_flops(cfg, context_len)
         self.decode_bytes += decode_token_bytes(cfg, context_len,
                                                 active_batch)
         self.decode_kv_bytes += ((context_len + 1) * kv_line_bytes(cfg)
                                  + 2 * state_bytes(cfg))
+        self.decode_vmem_bytes += vmem_bytes
         self.decode_ici_bytes += ici_bytes
         self.decode_tokens += 1
         self.decode_batch_sum += active_batch
@@ -272,7 +336,8 @@ class RooflineLedger:
     def add_verify_step(self, cfg: ModelConfig, context_len: int,
                         n_fed: int, n_committed: int, n_accepted: int,
                         n_proposed: int, active_batch: int,
-                        ici_bytes: float = 0.0) -> None:
+                        ici_bytes: float = 0.0,
+                        vmem_bytes: float = 0.0) -> None:
         """One multi-token verification step: ``n_fed`` = k+1 tokens scored
         in one weight pass at context ``context_len``; ``n_committed``
         tokens entered the request (``n_accepted`` of them surviving
@@ -294,6 +359,7 @@ class RooflineLedger:
             + 2 * state_bytes(cfg))
         self.decode_kv_bytes += ((context_len + 2 * n_fed - 1) * line
                                  + 2 * state_bytes(cfg))
+        self.decode_vmem_bytes += vmem_bytes
         self.decode_ici_bytes += ici_bytes
         self.decode_tokens += n_committed
         self.decode_batch_sum += n_committed * active_batch
@@ -349,6 +415,12 @@ class RooflineLedger:
         n = max(n_chips, 1)
         hbm_dev = ((self.decode_bytes - self.decode_kv_bytes) / n
                    + self.decode_kv_bytes * kv_shard_fraction(cfg, n))
+        # VMEM shards like HBM (the stream follows the KV pools, the
+        # resident re-touches follow the heads) — scale by the same
+        # per-device fraction; swap DMAs move each chip's pool shard, so
+        # the host level follows the KV shard fraction.
+        vmem_dev = (self.decode_vmem_bytes * hbm_dev
+                    / max(self.decode_bytes, 1.0))
         return make_terms(
             scope=tp_scope(chip, n_chips),
             dtype=cfg.dtype,
@@ -356,6 +428,8 @@ class RooflineLedger:
             hbm_bytes_dev=hbm_dev,
             ici_wire_bytes_dev=self.decode_ici_bytes,
             dcn_wire_bytes_dev=0.0,
+            vmem_bytes_dev=vmem_dev,
+            host_bytes_dev=self.swap_bytes * kv_shard_fraction(cfg, n),
             model_flops_total=self.decode_flops,
         )
 
@@ -462,6 +536,16 @@ class Scheduler:
         self.preempt_count = 0
         self._next_id = 0
         self._admit_seq = 0
+        # Per-phase traffic + fenced wall time for the time-based roofline
+        # (keys: prefill / decode / verify / draft / swap).  The engine
+        # charges compute phases; preempt/_resume charge the swap phase.
+        self.phases: Dict[str, PhaseTraffic] = collections.defaultdict(
+            PhaseTraffic)
+
+    def reset_phases(self) -> None:
+        """Drop accumulated phase traffic (after warm-up, before a timed
+        window — compile time must not pollute the budget)."""
+        self.phases.clear()
 
     @property
     def watermark_pages(self) -> int:
@@ -503,9 +587,13 @@ class Scheduler:
                     or self.kv.swap_in_pages_needed(snap)
                     > self.kv.available_page_count):
                 return False
+            t0 = time.perf_counter()
             slot = self.kv.swap_in(snap)
             if slot is None:
                 return False
+            jax.block_until_ready(self.kv.pools)
+            self.phases["swap"].add(host=float(snap.nbytes),
+                                    wall_s=time.perf_counter() - t0)
             req.swap_snapshot = None
             req.ledger.swap_bytes += snap.nbytes
             self._place(req, slot, prefilling=False)
@@ -550,7 +638,10 @@ class Scheduler:
         assert req.state in (RequestState.PREFILL, RequestState.RUNNING)
         del self.active[req.slot]
         if self.preempt_mode == "swap" and req.state is RequestState.RUNNING:
+            t0 = time.perf_counter()
             snap = self.kv.swap_out(req.slot)
+            self.phases["swap"].add(host=float(snap.nbytes),
+                                    wall_s=time.perf_counter() - t0)
             req.swap_snapshot = snap
             req.ledger.swap_bytes += snap.nbytes
         else:

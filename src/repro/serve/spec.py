@@ -32,6 +32,7 @@ arithmetic intensity against the non-speculative baseline.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -46,7 +47,9 @@ from .engine import Engine, EngineConfig
 from .kv_cache import supports_paging
 from .proposer import DraftModelProposer, NgramProposer
 from .scheduler import (Request, RequestState, decode_token_bytes,
-                        kv_line_bytes, params_bytes_active)
+                        decode_token_flops, kv_line_bytes,
+                        params_bytes_active, state_bytes,
+                        verify_step_vmem_bytes)
 
 
 def supports_spec(cfg: ModelConfig) -> bool:
@@ -276,7 +279,10 @@ class SpecEngine(Engine):
             for req in running:
                 a = self._accept_ewma.get(req.request_id, 1.0)
                 k_eff[req.slot] = adaptive_k(a, k, s.adapt_floor, s.k_min)
+        td0 = time.perf_counter()
         prop = self.proposer.propose(running, k_eff=k_eff)
+        self._sched.phases["draft"].add(wall_s=time.perf_counter() - td0,
+                                        steps=1)
 
         feed = np.zeros((self.ecfg.num_slots, T), np.int32)
         feed[:, 0] = np.where(active, self._next_token, 0)
@@ -290,7 +296,13 @@ class SpecEngine(Engine):
         args += [jnp.asarray(prop.n_draft), jnp.asarray(self._key_data),
                  jnp.asarray(self._steps), jnp.asarray(self._temps),
                  jnp.asarray(self._top_ks), jnp.asarray(self._top_ps)]
+        # args are converted above, outside the fenced window (the phase
+        # wall measures the device step, not host-side staging)
+        t0 = time.perf_counter()
         out_tok, n_out, kv.pools = self._verify_fn(*args)
+        # fence before stamping (async dispatch; see Engine._run_decode)
+        jax.block_until_ready(out_tok)
+        t1 = time.perf_counter()
         self.decode_steps += 1
         self.verify_steps += 1
 
@@ -298,13 +310,16 @@ class SpecEngine(Engine):
         n_np = np.asarray(n_out)
         n_active = len(running)
         ici_share = self._step_collective_bytes(T) / n_active
+        vph = self._sched.phases["verify"]
+        ps = self.ecfg.page_size
+        line = kv_line_bytes(self.cfg)
         for req in running:
             slot, L = req.slot, req.context_len
             nd = int(prop.n_draft[slot])
             n = max(1, min(int(n_np[slot]), nd + 1))
             committed = 0
             for j in range(n):
-                self._commit_token(req, int(out_np[slot, j]))
+                self._commit_token(req, int(out_np[slot, j]), t=t1)
                 committed += 1
                 if req.state is RequestState.FINISHED:
                     break
@@ -312,8 +327,17 @@ class SpecEngine(Engine):
             # the commit chain ran to completion; a stop-token or budget
             # cut means everything committed was an accepted draft
             accepted = committed - 1 if committed == n else committed
+            vmem = verify_step_vmem_bytes(self.cfg, L, T, n_active, ps)
             req.ledger.add_verify_step(self.cfg, L, T, committed, accepted,
-                                       nd, n_active, ici_bytes=ici_share)
+                                       nd, n_active, ici_bytes=ici_share,
+                                       vmem_bytes=vmem)
+            vph.add(flops=sum(decode_token_flops(self.cfg, L + t)
+                              for t in range(T)),
+                    vmem=vmem,
+                    hbm=(params_bytes_active(self.cfg) / n_active
+                         + (L + 2 * T - 1) * line
+                         + 2 * state_bytes(self.cfg)),
+                    ici=ici_share, steps=0, tokens=committed)
             if s.adaptive and nd > 0:
                 prev = self._accept_ewma.get(req.request_id, 1.0)
                 obs = accepted / nd
@@ -324,6 +348,7 @@ class SpecEngine(Engine):
                 n_decodes = max(int(prop.n_draft[slot]) - 1, 0)
                 req.ledger.add_draft_cost(s.draft_cfg, L, n_fed, n_decodes,
                                           n_active)
+        vph.add(wall_s=t1 - t0, steps=1, tokens=0)
 
     def _preempt(self, req: Request) -> None:
         # the draft proposer's mirrored slot must go with the target's —
