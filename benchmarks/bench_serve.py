@@ -98,7 +98,8 @@ def run_bench(arch: str, *, requests: int, slots: int, page_size: int,
               spec_k_adaptive: bool = False, shared_prefix: bool = False,
               prefix_cache: bool = False, num_pages: int = 0,
               watermark: float = 0.0, preempt: str = "swap",
-              warmup: bool = True, mesh=(1, 1)) -> dict:
+              warmup: bool = True, mesh=(1, 1), pipeline: str = "off",
+              overlap: str = "none") -> dict:
     cfg = smoke(get_config(arch))
     params = init_params(cfg, jax.random.key(0))
     chip = TPU_V5E if chip_name == "tpu_v5e" else HOST_CPU_FALLBACK
@@ -110,7 +111,8 @@ def run_bench(arch: str, *, requests: int, slots: int, page_size: int,
                         prefill_chunk=prefill_chunk, chip=chip,
                         kernel_backend=backend, prefix_cache=prefix_cache,
                         num_pages=num_pages or None, watermark=watermark,
-                        preempt_mode=preempt)
+                        preempt_mode=preempt, pipeline=pipeline,
+                        overlap=overlap)
     scfg = None
     if spec != "none":
         if spec == "draft":
@@ -205,7 +207,7 @@ def run_bench(arch: str, *, requests: int, slots: int, page_size: int,
 
 
 def run_hierarchy(arch: str, *, page_size: int = 8, new_tokens: int = 24,
-                  prompt_len: int = 6, windows: int = 3,
+                  prompt_len: int = 6, windows: int = 3, retries: int = 2,
                   ratio_tol: float = 0.15, residual_tol: float = 0.25,
                   ) -> dict:
     """The ``--hierarchy`` leg: drive one steady-state decode workload,
@@ -225,7 +227,12 @@ def run_hierarchy(arch: str, *, page_size: int = 8, new_tokens: int = 24,
       probe at the decode operating shape and the microbench triad beta.
     * *noise* — real and no-kernel windows interleave ``windows`` times;
       the minimum per-step wall of each side is used (OS noise is
-      strictly additive; min is the standard latency estimator).
+      strictly additive; min is the standard latency estimator).  When
+      the residual check misses anyway (a noisy shared container can
+      inflate every window of one side), the TIMED part re-measures up
+      to ``retries`` more times with one extra window each, printing the
+      per-window raw walls of the rejected attempt; the analytic ratio
+      checks never retry — they are deterministic.
 
     Asserts (a) every cross-checkable level's ledger/artifact ratio is
     within ``ratio_tol`` (HBM + flops vs compiled HLO, VMEM vs the
@@ -286,19 +293,33 @@ def run_hierarchy(arch: str, *, page_size: int = 8, new_tokens: int = 24,
     betas = _dc.replace(betas, pi=pi_sust, source=betas.source + "+sustained")
 
     cost = step_cost_analysis(eng)    # the REAL fused step's own counters
-    walls, disps, vmem_steps, done = [], [], [], None
-    for _ in range(windows):          # interleaved: noise hits both sides
-        rw, rph, done = steady(eng, prompts)
-        dw, _, _ = steady(nk, prompts)
-        walls.append(rw)
-        disps.append(dw)
-        vmem_steps.append(rph.vmem / max(rph.steps, 1))
-    wall, disp = min(walls), min(disps)
+
+    def timed_windows(n):
+        walls, disps, vmem_steps, done = [], [], [], None
+        for _ in range(n):            # interleaved: noise hits both sides
+            rw, rph, done = steady(eng, prompts)
+            dw, _, _ = steady(nk, prompts)
+            walls.append(rw)
+            disps.append(dw)
+            vmem_steps.append(rph.vmem / max(rph.steps, 1))
+        return walls, disps, vmem_steps, done
+
     t_comp = cost["flops"] / pi_sust
     t_hbm = cost["bytes"] / betas.hbm
-    t_vmem = vmem_steps[0] / betas.vmem
-    explained = disp + t_comp + t_hbm + t_vmem
-    residual = (wall - explained) / wall
+    for attempt in range(retries + 1):
+        walls, disps, vmem_steps, done = timed_windows(windows + attempt)
+        wall, disp = min(walls), min(disps)
+        t_vmem = vmem_steps[0] / betas.vmem
+        explained = disp + t_comp + t_hbm + t_vmem
+        residual = (wall - explained) / wall
+        if abs(residual) <= residual_tol or attempt == retries:
+            break
+        print(f"[bench_serve/hierarchy] residual {residual:+.1%} outside "
+              f"+-{residual_tol:.0%} on attempt {attempt + 1}; raw "
+              f"per-window walls us: real="
+              f"{['%.0f' % (w * 1e6) for w in walls]} nokernel="
+              f"{['%.0f' % (w * 1e6) for w in disps]}; re-measuring with "
+              f"{windows + attempt + 1} windows")
 
     cd = crosscheck_decode(eng, requests=done)
     cv = crosscheck_vmem(eng, requests=done)
@@ -325,9 +346,12 @@ def run_hierarchy(arch: str, *, page_size: int = 8, new_tokens: int = 24,
     if abs(residual) > residual_tol:
         raise RuntimeError(
             f"time-attribution residual {residual:+.1%} exceeds "
-            f"+-{residual_tol:.0%}: the per-level budget does not explain "
-            f"the measured step wall ({wall * 1e6:.0f}us vs "
-            f"{explained * 1e6:.0f}us explained)")
+            f"+-{residual_tol:.0%} after {retries + 1} attempts: the "
+            f"per-level budget does not explain the measured step wall "
+            f"({wall * 1e6:.0f}us vs {explained * 1e6:.0f}us explained; "
+            f"raw per-window walls us: real="
+            f"{['%.0f' % (w * 1e6) for w in walls]} nokernel="
+            f"{['%.0f' % (w * 1e6) for w in disps]})")
     return {"wall_s": wall, "dispatch_s": disp, "compute_s": t_comp,
             "hbm_s": t_hbm, "vmem_s": t_vmem, "residual": residual,
             "ratios": ratios, "pi_sustained": pi_sust,
@@ -347,7 +371,8 @@ def run_mesh_compare(args, mesh, kwargs) -> None:
                   shared_prefix=args.shared_prefix,
                   prefix_cache=args.prefix_cache,
                   num_pages=args.num_pages, watermark=args.watermark,
-                  preempt=args.preempt, warmup=not args.shared_prefix)
+                  preempt=args.preempt, warmup=not args.shared_prefix,
+                  pipeline=args.pipeline, overlap=args.overlap)
     base = run_bench(args.arch, mesh=(1, 1), **kwargs)
     if mesh[1] <= 1:
         # a 1x1 "mesh" IS the baseline (ShardedEngine wraps nothing):
@@ -380,6 +405,50 @@ def run_mesh_compare(args, mesh, kwargs) -> None:
         raise RuntimeError("single-device ledger charged collective bytes")
 
 
+def run_overlap_compare(args, mesh) -> dict:
+    """The ``--smoke --overlap``/``--pipeline`` leg (CI): serial engine
+    vs overlapped twin at the same mesh, through the fenced steady-state
+    protocol of serve.crosscheck.crosscheck_overlap.
+
+    The serial side runs pipeline="off"/overlap="none"; the overlapped
+    side runs whatever ``--pipeline``/``--overlap`` selected (bare
+    ``--overlap`` means ring collectives, bare ``--pipeline`` the
+    double-buffered page walk).  The crosscheck asserts byte-identical
+    greedy output, no overlapped-level time-term growth, and an
+    overlapped steady-state wall no worse than the serial wall within
+    noise (``wall_tol``); the measured delta comes back attributed as an
+    inferred per-level overlap fraction."""
+    from repro.serve.crosscheck import crosscheck_overlap
+
+    cfg = smoke(get_config(args.arch))
+    params = init_params(cfg, jax.random.key(0))
+    kw = dict(num_slots=args.slots, page_size=args.page_size,
+              max_len=args.prompt_len + args.new_tokens + args.page_size,
+              prefill_chunk=args.prefill_chunk,
+              kernel_backend=args.backend)
+    e_off = make_engine(cfg, params, EngineConfig(**kw), mesh_shape=mesh)
+    e_on = make_engine(cfg, params,
+                       EngineConfig(**kw, pipeline=args.pipeline,
+                                    overlap=args.overlap), mesh_shape=mesh)
+    prompts = _prompts(cfg, args.slots, args.prompt_len, repetitive=False)
+    gen = GenerateConfig(max_new_tokens=args.new_tokens)
+    res = crosscheck_overlap(e_off, e_on, prompts, gen)
+    ov = ";".join(f"ov_{k}={v:.2f}" for k, v in
+                  res["inferred_overlap"].items()) or "ov=none"
+    print(f"[bench_serve/overlap] mesh {mesh} pipeline={args.pipeline} "
+          f"overlap={args.overlap}: wall/step "
+          f"{res['wall_on_s'] * 1e6:.0f}us (serial "
+          f"{res['wall_off_s'] * 1e6:.0f}us), levels={res['levels']}, "
+          f"{ov}, serial budget {res['serial_budget_s'] * 1e3:.2f}ms vs "
+          f"overlapped bound {res['overlapped_budget_s'] * 1e3:.2f}ms; "
+          "greedy outputs byte-identical")
+    emit(f"serve_overlap_{args.arch}_tp{mesh[1]}",
+         res["wall_on_s"] * 1e6,
+         f"wall_off_us={res['wall_off_s'] * 1e6:.0f};"
+         f"pipeline={args.pipeline};overlap={args.overlap};{ov}")
+    return res
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(ALL_ARCHS), default="qwen3-0.6b")
@@ -394,6 +463,17 @@ def main(argv=None):
                     default=None,
                     help="paged-attention kernel backend (registry default"
                          " when omitted)")
+    ap.add_argument("--pipeline", nargs="?", const="double", default="off",
+                    choices=["off", "double"],
+                    help="double-buffer the Pallas page walk (bare flag = "
+                         "'double'); with --smoke runs the serial-vs-"
+                         "overlapped comparison leg (run_overlap_compare)")
+    ap.add_argument("--overlap", nargs="?", const="ring", default="none",
+                    choices=["none", "ring"],
+                    help="overlap decode collectives as ring matmuls "
+                         "(bare flag = 'ring'; tp > 1 meshes); with "
+                         "--smoke runs the serial-vs-overlapped "
+                         "comparison leg (run_overlap_compare)")
     ap.add_argument("--spec", choices=["none", "ngram", "draft"],
                     default="none",
                     help="speculative decoding proposer (serve/spec.py)")
@@ -435,9 +515,17 @@ def main(argv=None):
                          "ledger/artifact crosscheck ratio within 15% "
                          "and a time-attribution residual within 25% "
                          "(replaces the other smoke legs)")
+    ap.add_argument("--windows", type=int, default=3,
+                    help="--hierarchy: interleaved timed windows per "
+                         "measurement attempt")
+    ap.add_argument("--retries", type=int, default=2,
+                    help="--hierarchy: extra re-measurements (one more "
+                         "window each) before the residual check fails; "
+                         "rejected attempts print per-window raw walls")
     args = ap.parse_args(argv)
     if args.hierarchy:
-        run_hierarchy(args.arch)
+        run_hierarchy(args.arch, windows=args.windows,
+                      retries=args.retries)
         return
     sizes = (dict(requests=4, slots=2, page_size=4, prompt_len=8,
                   new_tokens=8) if args.smoke else
@@ -454,6 +542,15 @@ def main(argv=None):
                   backend=args.backend, spec_k=args.spec_k,
                   draft_arch=args.draft_arch,
                   spec_k_adaptive=args.spec_k_adaptive)
+    if args.smoke and (args.pipeline != "off" or args.overlap != "none"):
+        mesh = parse_mesh(args.mesh) if args.mesh else (1, 1)
+        if mesh[1] > 1:
+            cfg = smoke(get_config(args.arch))
+            err = tp_sharding_error(cfg, mesh[1])
+            if err:
+                raise SystemExit(f"--mesh {args.mesh}: {err}")
+        run_overlap_compare(args, mesh)
+        return
     if args.mesh is not None:
         mesh = parse_mesh(args.mesh)
         cfg = smoke(get_config(args.arch))
@@ -466,7 +563,8 @@ def main(argv=None):
                     shared_prefix=args.shared_prefix,
                     prefix_cache=args.prefix_cache,
                     num_pages=args.num_pages, watermark=args.watermark,
-                    preempt=args.preempt,
+                    preempt=args.preempt, pipeline=args.pipeline,
+                    overlap=args.overlap,
                     warmup=not args.shared_prefix, **kwargs)
     if args.shared_prefix:
         print(f"[bench_serve/capacity] pages_peak={out['pages_peak']} "

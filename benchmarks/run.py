@@ -27,15 +27,19 @@ ALL = {
     "gelu": bench_gelu.main,                   # paper fig. 8 + §3.4
     "layernorm": bench_layernorm.main,         # paper appendix
     "arch_roofline": bench_arch_roofline.main,  # 40-cell §Roofline table
-    "serve": lambda smoke=False, mesh=None, hierarchy=False:
+    "serve": lambda smoke=False, mesh=None, hierarchy=False,
+        overlap=False, pipeline=False:
         bench_serve.main(
             (["--smoke"] if smoke else [])
             + (["--mesh", mesh] if mesh else [])
-            + (["--hierarchy"] if hierarchy else [])),
+            + (["--hierarchy"] if hierarchy else [])
+            + (["--overlap"] if overlap else [])
+            + (["--pipeline"] if pipeline else [])),
     # (--smoke also covers the speculative ngram pass and the block-pool
     # shared-prefix capacity assertion; --mesh dp,tp runs the sharded
     # engine against the single-device baseline; --hierarchy runs the
-    # hierarchical/time-based roofline assertions; see bench_serve.py)
+    # hierarchical/time-based roofline assertions; --overlap/--pipeline
+    # run the serial-vs-overlapped comparison leg; see bench_serve.py)
 }
 
 _SMOKEABLE = ("serve",)
@@ -52,6 +56,12 @@ def main() -> None:
     ap.add_argument("--hierarchy", action="store_true",
                     help="forwarded to the serve bench: hierarchical + "
                          "time-based roofline assertions")
+    ap.add_argument("--overlap", action="store_true",
+                    help="forwarded to the serve bench: ring-collective "
+                         "overlap comparison leg (with --smoke)")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="forwarded to the serve bench: double-buffered "
+                         "page-walk comparison leg (with --smoke)")
     args = ap.parse_args()
     failed = []
     names = [args.only] if args.only else list(ALL)
@@ -60,9 +70,11 @@ def main() -> None:
         print(f"\n===== bench: {name} =====", flush=True)
         try:
             if name == "serve" and (args.smoke or args.mesh
-                                    or args.hierarchy):
+                                    or args.hierarchy or args.overlap
+                                    or args.pipeline):
                 ALL[name](smoke=args.smoke, mesh=args.mesh,
-                          hierarchy=args.hierarchy)
+                          hierarchy=args.hierarchy, overlap=args.overlap,
+                          pipeline=args.pipeline)
             elif args.smoke and name in _SMOKEABLE:
                 ALL[name](smoke=True)
             else:

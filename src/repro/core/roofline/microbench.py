@@ -32,8 +32,9 @@ from .model import LevelBetas
 
 # Bump whenever the cached JSON layout or the measurement protocol
 # changes: a cache written by an older schema must not silently reprice
-# the roofline.
-CACHE_SCHEMA = 2
+# the roofline.  Schema 3 added the measured per-level ``overlap``
+# fractions (compute/transfer concurrency probe).
+CACHE_SCHEMA = 3
 
 
 def device_fingerprint() -> Dict[str, object]:
@@ -265,6 +266,70 @@ def measure_ici_bandwidth(nbytes: int = 1 << 24,
     return nbytes / _time_best(hop, repeats=repeats)
 
 
+def measure_compute_transfer_overlap(n: int = 512, iters: int = 8,
+                                     nbytes: int = 1 << 24,
+                                     repeats: int = 5) -> Dict[str, float]:
+    """Achievable compute/transfer concurrency per memory level.
+
+    For each level with an independently drivable engine (the host DMA
+    path; ICI when >1 device) time the compute kernel alone (t_c), the
+    transfer alone (t_x), then both together — compute dispatched async,
+    transfer issued while it runs, both fenced.  The overlap fraction
+
+        ov = clamp((t_c + t_x - t_both) / min(t_c, t_x), 0, 1)
+
+    is 1.0 when the shorter leg hides entirely under the longer and 0.0
+    when the engines serialize.  These are the measured ceilings the
+    overlap-aware time budget (core.roofline.model.overlapped_budget)
+    takes its per-level fractions from; levels without a second engine
+    on this platform are omitted."""
+    k = jax.random.key(0)
+    x = jax.random.normal(k, (n, n), jnp.float32) * 0.01
+    y = jax.random.normal(jax.random.key(1), (n, n), jnp.float32) * 0.01
+    _matmul_loop(x, y, iters).block_until_ready()
+    t_c = _time_best(lambda: _matmul_loop(x, y, iters).block_until_ready(),
+                     repeats=repeats)
+
+    def frac(t_x: float, both: Callable[[], None]) -> float:
+        t_both = _time_best(both, repeats=repeats)
+        denom = min(t_c, t_x)
+        if denom <= 0:
+            return 0.0
+        return min(max((t_c + t_x - t_both) / denom, 0.0), 1.0)
+
+    out: Dict[str, float] = {}
+
+    # host level: device->host pull racing the async matmul dispatch
+    m = nbytes // 4
+    buf = jnp.arange(m, dtype=jnp.float32)
+    buf.block_until_ready()
+    t_x = _time_best(lambda: np.asarray(buf), repeats=repeats)
+
+    def both_host():
+        fut = _matmul_loop(x, y, iters)     # async dispatch
+        np.asarray(buf)                     # host pull while it runs
+        fut.block_until_ready()
+
+    out["host"] = frac(t_x, both_host)
+
+    # ici level: cross-device copy racing the matmul (multi-device only)
+    devs = jax.devices()
+    if len(devs) >= 2:
+        z = jax.device_put(buf, devs[0])
+        z.block_until_ready()
+        t_i = _time_best(
+            lambda: jax.device_put(z, devs[1]).block_until_ready(),
+            repeats=repeats)
+
+        def both_ici():
+            fut = _matmul_loop(x, y, iters)
+            jax.device_put(z, devs[1]).block_until_ready()
+            fut.block_until_ready()
+
+        out["ici"] = frac(t_i, both_ici)
+    return out
+
+
 # --------------------------------------------------------------------------
 # Assembly into a measured ChipSpec (cached)
 # --------------------------------------------------------------------------
@@ -277,6 +342,10 @@ class MicrobenchResult:
     # per-level betas (B/s) of the memory hierarchy; absent levels fall
     # back to the analytic constants in level_betas()
     level_bw: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # measured achievable compute/transfer overlap fraction per level
+    # (schema 3; see measure_compute_transfer_overlap) — empty means the
+    # platform exposed no second engine to race, NOT "no overlap".
+    overlap: Dict[str, float] = dataclasses.field(default_factory=dict)
     fingerprint: Dict[str, object] = dataclasses.field(default_factory=dict)
     source: str = "measured"     # "measured" | "analytic" (fallback)
 
@@ -359,6 +428,7 @@ def _load_cache(cache_path: str) -> Optional[MicrobenchResult]:
     return MicrobenchResult(
         fma_flops=d["fma_flops"], matmul_flops=d["matmul_flops"],
         bandwidth=d["bandwidth"], level_bw=d.get("level_bw", {}),
+        overlap=d.get("overlap", {}),
         fingerprint=cached_fp, source=d.get("source", "measured"))
 
 
@@ -381,6 +451,9 @@ def run_microbench(cache_path: Optional[str] = "results/microbench.json",
                                    if quick else {}))
     if ici is not None:
         level_bw["ici"] = ici
+    overlap = measure_compute_transfer_overlap(
+        **({"n": 256, "iters": 4, "nbytes": 1 << 22, "repeats": 3}
+           if quick else {}))
     res = MicrobenchResult(
         fma_flops=measure_peak_flops(**({"size": 1 << 18, "iters": 64, "repeats": 3}
                                         if quick else {})),
@@ -388,6 +461,7 @@ def run_microbench(cache_path: Optional[str] = "results/microbench.json",
                                                   if quick else {})),
         bandwidth=bandwidth,
         level_bw=level_bw,
+        overlap=overlap,
         fingerprint=device_fingerprint(),
     )
     if cache_path:

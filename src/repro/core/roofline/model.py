@@ -37,6 +37,20 @@ swap) together with the phase's *measured* wall-clock, and
 
 — the additive no-overlap budget whose unexplained remainder
 (:func:`attribution_residual`) is the ledger's honesty metric.
+
+Overlap extension (this repo's §Overlap): once the system actually hides
+transfer time behind compute (double-buffered page streaming, ring
+collective matmuls), the additive budget is a pessimistic bound.  Each
+level carries an overlap fraction ``ov in [0, 1]`` — the share of its
+transfer time hidden under compute — and the overlapped bound is
+
+    t ~= t_dispatch + max(t_compute, max_l ov_l * t_l)
+         + sum_l (1 - ov_l) * t_l
+
+which interpolates between the serial sum (all ov = 0) and the perfectly
+pipelined ``dispatch + max(...)`` (all ov = 1).  :func:`overlapped_budget`
+computes it from a :func:`time_attribution` dict; ``RooflineTerms`` carries
+the fractions per step (``overlap=``) and exposes :attr:`t_overlapped`.
 """
 
 from __future__ import annotations
@@ -70,6 +84,11 @@ class RooflineTerms:
 
     # hardware
     chip: Optional[ChipSpec] = None
+
+    # per-level overlap fraction (keys from MEMORY_LEVELS; missing = 0.0):
+    # the share of that level's transfer time hidden behind compute.
+    # 0.0 everywhere = the additive no-overlap model (the default).
+    overlap: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     # --- derived terms (seconds) -----------------------------------------
     @property
@@ -136,6 +155,27 @@ class RooflineTerms:
     def t_upper(self) -> float:
         """Step time with zero overlap."""
         return sum(self.terms().values())
+
+    def level_times(self) -> Dict[str, float]:
+        """Seconds per memory level (keys = MEMORY_LEVELS), the transfer
+        part of :meth:`terms` reindexed by level name (``hbm`` for the
+        ``memory`` term)."""
+        t = self.terms()
+        return {"vmem": t["vmem"], "hbm": t["memory"], "ici": t["ici"],
+                "dcn": t["dcn"], "host": t["host"]}
+
+    @property
+    def t_overlapped(self) -> float:
+        """Step time under the declared per-level overlap fractions:
+        ``max(t_compute, max_l ov_l*t_l) + sum_l (1-ov_l)*t_l`` — equal to
+        :attr:`t_upper` when every fraction is 0 and to :attr:`t_lower`
+        when every fraction is 1 (and a level dominates compute)."""
+        hidden, serial = 0.0, 0.0
+        for level, t in self.level_times().items():
+            ov = min(max(float(self.overlap.get(level, 0.0)), 0.0), 1.0)
+            hidden = max(hidden, ov * t)
+            serial += (1.0 - ov) * t
+        return max(self.compute_s, hidden) + serial
 
     # --- classic roofline quantities --------------------------------------
     @property
@@ -278,6 +318,7 @@ def make_terms(
     model_flops_total: Optional[float] = None,
     vmem_bytes_dev: float = 0.0,
     host_bytes_dev: float = 0.0,
+    overlap: Optional[Dict[str, float]] = None,
 ) -> RooflineTerms:
     return RooflineTerms(
         scope=scope.name,
@@ -292,6 +333,7 @@ def make_terms(
         vmem_bytes_dev=vmem_bytes_dev,
         host_bytes_dev=host_bytes_dev,
         chip=scope.chip,
+        overlap=dict(overlap or {}),
     )
 
 
@@ -398,6 +440,28 @@ def time_attribution(phase: PhaseTraffic, betas: LevelBetas,
         out[level] = _safe_time(phase.bytes_for(level), betas.beta(level))
     out["dispatch"] = dispatch_s_per_step * phase.steps
     return out
+
+
+def overlapped_budget(times: Dict[str, float],
+                      overlap: Optional[Dict[str, float]] = None) -> float:
+    """The overlapped time bound over a :func:`time_attribution` dict:
+
+        dispatch + max(compute, max_l ov_l * t_l) + sum_l (1 - ov_l) * t_l
+
+    ``overlap`` maps memory-level names to the fraction of that level's
+    transfer time hidden behind compute (missing/None = 0.0 — the bound
+    degenerates to the additive serial sum ``sum(times.values())``).
+    Fractions clamp into [0, 1].  Dispatch never overlaps: it is host-side
+    launch cost spent before the device pipeline exists."""
+    overlap = overlap or {}
+    hidden, serial = 0.0, 0.0
+    for level in MEMORY_LEVELS:
+        t = times.get(level, 0.0)
+        ov = min(max(float(overlap.get(level, 0.0)), 0.0), 1.0)
+        hidden = max(hidden, ov * t)
+        serial += (1.0 - ov) * t
+    return (times.get("dispatch", 0.0)
+            + max(times.get("compute", 0.0), hidden) + serial)
 
 
 def attribution_residual(phase: PhaseTraffic, betas: LevelBetas,

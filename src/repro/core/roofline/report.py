@@ -12,7 +12,8 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .hardware import MEMORY_LEVELS
 from .model import (LevelBetas, PhaseTraffic, RooflineTerms,
-                    attribution_residual, time_attribution)
+                    attribution_residual, overlapped_budget,
+                    time_attribution)
 
 
 def _fmt_si(x: float, unit: str = "") -> str:
@@ -129,41 +130,55 @@ TIME_BUDGET_HEADER = [
     "dcn", "host", "dispatch", "residual",
 ]
 
+TIME_BUDGET_OVERLAP_HEADER = TIME_BUDGET_HEADER + ["serial", "overlapped"]
+
+
+def _budget_row(name: str, ph: PhaseTraffic, betas: LevelBetas,
+                dispatch_s_per_step: float,
+                overlap: Optional[Dict[str, float]]) -> List[str]:
+    att = time_attribution(ph, betas, dispatch_s_per_step)
+    res = attribution_residual(ph, betas, dispatch_s_per_step)
+    row = [
+        name, str(ph.steps), str(ph.tokens), _fmt_s(ph.wall_s),
+        _fmt_s(att["compute"]),
+        *[_fmt_s(att[lvl]) for lvl in MEMORY_LEVELS],
+        _fmt_s(att["dispatch"]),
+        f"{res * 100:+.1f}%" if res == res else "-",
+    ]
+    if overlap is not None:
+        row.append(_fmt_s(sum(att.values())))
+        row.append(_fmt_s(overlapped_budget(att, overlap)))
+    return row
+
 
 def time_budget_rows(phases: Dict[str, PhaseTraffic], betas: LevelBetas,
-                     dispatch_s_per_step: float = 0.0) -> List[List[str]]:
+                     dispatch_s_per_step: float = 0.0,
+                     overlap: Optional[Dict[str, float]] = None
+                     ) -> List[List[str]]:
     """The time-based roofline table: one row per serving phase, its
     measured wall-clock decomposed into per-level ``bytes/beta`` terms
     plus the measured dispatch overhead; ``residual`` is the signed
     fraction of the wall the budget leaves unexplained.  A final ``total``
-    row sums the phases."""
+    row sums the phases.
+
+    With ``overlap`` set (per-level fractions, see
+    :func:`core.roofline.model.overlapped_budget`) every row gains two
+    columns — the additive ``serial`` budget and the ``overlapped`` bound
+    — use :data:`TIME_BUDGET_OVERLAP_HEADER`; the default (None) keeps
+    the historical 12-column table byte for byte."""
     rows = []
     total = PhaseTraffic()
     for name, ph in phases.items():
         if ph.steps == 0 and ph.wall_s == 0:
             continue
-        att = time_attribution(ph, betas, dispatch_s_per_step)
-        res = attribution_residual(ph, betas, dispatch_s_per_step)
-        rows.append([
-            name, str(ph.steps), str(ph.tokens), _fmt_s(ph.wall_s),
-            _fmt_s(att["compute"]),
-            *[_fmt_s(att[lvl]) for lvl in MEMORY_LEVELS],
-            _fmt_s(att["dispatch"]),
-            f"{res * 100:+.1f}%" if res == res else "-",
-        ])
+        rows.append(_budget_row(name, ph, betas, dispatch_s_per_step,
+                                overlap))
         total.add(flops=ph.flops, vmem=ph.vmem, hbm=ph.hbm, ici=ph.ici,
                   dcn=ph.dcn, host=ph.host, wall_s=ph.wall_s,
                   steps=ph.steps, tokens=ph.tokens)
     if rows:
-        att = time_attribution(total, betas, dispatch_s_per_step)
-        res = attribution_residual(total, betas, dispatch_s_per_step)
-        rows.append([
-            "total", str(total.steps), str(total.tokens),
-            _fmt_s(total.wall_s), _fmt_s(att["compute"]),
-            *[_fmt_s(att[lvl]) for lvl in MEMORY_LEVELS],
-            _fmt_s(att["dispatch"]),
-            f"{res * 100:+.1f}%" if res == res else "-",
-        ])
+        rows.append(_budget_row("total", total, betas, dispatch_s_per_step,
+                                overlap))
     return rows
 
 

@@ -18,6 +18,16 @@ per-op wrappers below) with a ``backend`` of:
 happens at *trace time*: code that jits a caller (e.g. the serve engine's
 decode step) must rebuild/retrace to pick up a backend change — the serve
 engine does this on ``reset()``.
+
+Pipelined page streaming
+------------------------
+Ops registered with ``pipelined=True`` (the four paged-attention kernels)
+additionally accept a ``pipeline`` flag of ``"off"`` (single-buffered
+grid walk — the byte-checked reference) or ``"double"`` (two-slab manual
+DMA double buffering: page b+1 prefetches while page b computes; bit
+identical output).  ``resolve(..., pipeline=...)`` binds it into the
+pallas partial; the jnp reference ignores it (there is nothing to
+pipeline), and non-pipelined ops reject anything but ``"off"``.
 """
 
 from __future__ import annotations
@@ -48,19 +58,24 @@ def _interpret_default() -> bool:
 # Kernel registry
 # --------------------------------------------------------------------------
 
-_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+_REGISTRY: Dict[str, Dict[str, object]] = {}
 _BACKENDS = ("auto", "pallas", "jnp")
+_PIPELINES = ("off", "double")
 _default_backend = "auto"
+_default_pipeline = "off"
 
 
-def register_kernel(name: str, *, pallas: Callable, reference: Callable
-                    ) -> None:
+def register_kernel(name: str, *, pallas: Callable, reference: Callable,
+                    pipelined: bool = False) -> None:
     """Register a (pallas, jnp-reference) implementation pair.
 
     The pallas callable must accept ``interpret: bool``; the reference is
     pure jnp with the same positional/keyword contract minus ``interpret``.
+    ``pipelined=True`` declares that the pallas callable also accepts a
+    ``pipeline`` kwarg (see module docstring).
     """
-    _REGISTRY[name] = {"pallas": pallas, "jnp": reference}
+    _REGISTRY[name] = {"pallas": pallas, "jnp": reference,
+                       "pipelined": pipelined}
 
 
 def registered_kernels() -> Dict[str, Dict[str, Callable]]:
@@ -90,8 +105,32 @@ def use_backend(backend: str):
         set_default_backend(prev)
 
 
+def set_default_pipeline(pipeline: str) -> None:
+    """Process-wide default for ``pipeline=None`` dispatches."""
+    global _default_pipeline
+    if pipeline not in _PIPELINES:
+        raise ValueError(f"pipeline {pipeline!r} not in {_PIPELINES}")
+    _default_pipeline = pipeline
+
+
+def default_pipeline() -> str:
+    return _default_pipeline
+
+
+@contextlib.contextmanager
+def use_pipeline(pipeline: str):
+    """Scoped default-pipeline override (trace-time, like use_backend)."""
+    prev = _default_pipeline
+    set_default_pipeline(pipeline)
+    try:
+        yield
+    finally:
+        set_default_pipeline(prev)
+
+
 def resolve(name: str, backend: Optional[str] = None, *,
-            sharded: bool = False) -> Callable:
+            sharded: bool = False,
+            pipeline: Optional[str] = None) -> Callable:
     """Resolve a registered op to a concrete callable for this process.
 
     ``sharded=True`` marks a call made from inside ``shard_map`` (the
@@ -102,30 +141,48 @@ def resolve(name: str, backend: Optional[str] = None, *,
     re-traces the whole grid per shard, and the reference IS the oracle
     the kernels are byte-checked against.  An explicit ``backend="pallas"``
     still forces the kernel.
+
+    ``pipeline`` selects the page-streaming schedule for pipelined ops
+    (``"off"``/``"double"``; ``None`` -> the process default).  It only
+    binds into the pallas partial — the jnp reference has no pages to
+    stream — and requesting ``"double"`` on a non-pipelined op raises.
     """
     backend = backend or _default_backend
     if backend not in _BACKENDS:
         raise ValueError(f"backend {backend!r} not in {_BACKENDS}")
+    pipeline = pipeline or _default_pipeline
+    if pipeline not in _PIPELINES:
+        raise ValueError(f"pipeline {pipeline!r} not in {_PIPELINES}")
     impls = _REGISTRY[name]
+    if pipeline != "off" and not impls["pipelined"]:
+        raise ValueError(f"op {name!r} does not support pipeline="
+                         f"{pipeline!r} (not a paged streaming kernel)")
     if backend == "jnp":
         return impls["jnp"]
     if backend == "auto" and sharded and _interpret_default():
         return impls["jnp"]
-    return functools.partial(impls["pallas"], interpret=_interpret_default())
+    kwargs = {"interpret": _interpret_default()}
+    if impls["pipelined"]:
+        kwargs["pipeline"] = pipeline
+    return functools.partial(impls["pallas"], **kwargs)
 
 
 register_kernel("paged_attention",
                 pallas=_paged.paged_attention,
-                reference=_paged.paged_attention_reference)
+                reference=_paged.paged_attention_reference,
+                pipelined=True)
 register_kernel("mla_paged_attention",
                 pallas=_paged.mla_paged_attention,
-                reference=_paged.mla_paged_attention_reference)
+                reference=_paged.mla_paged_attention_reference,
+                pipelined=True)
 register_kernel("paged_attention_verify",
                 pallas=_paged.paged_attention_verify,
-                reference=_paged.paged_attention_verify_reference)
+                reference=_paged.paged_attention_verify_reference,
+                pipelined=True)
 register_kernel("mla_paged_attention_verify",
                 pallas=_paged.mla_paged_attention_verify,
-                reference=_paged.mla_paged_attention_verify_reference)
+                reference=_paged.mla_paged_attention_verify_reference,
+                pipelined=True)
 def _flash_model_layout(q, k, v, *, causal: bool = True,
                         interpret: bool = False):
     """flash kernel in model layout — q (B,Sq,H,hd), k/v (B,Sk,KV,hd)."""
@@ -142,26 +199,29 @@ register_kernel("flash_attention",
 
 def paged_attention(q, k_pool, v_pool, block_tables, pos, *, scale,
                     soft_cap: float = 0.0, backend: Optional[str] = None,
-                    sharded: bool = False):
+                    sharded: bool = False, pipeline: Optional[str] = None):
     """Dispatching GQA paged-decode attention (see kernels/paged_attention).
 
     q (B, KV, G, hd); pools (P, page, KV, hd); block_tables (B, n_blocks);
     pos (B,).  Returns (B, KV, G, hd).
     """
-    impl = resolve("paged_attention", backend, sharded=sharded)
+    impl = resolve("paged_attention", backend, sharded=sharded,
+                   pipeline=pipeline)
     return impl(q, k_pool, v_pool, block_tables, pos, scale=scale,
                 soft_cap=soft_cap)
 
 
 def mla_paged_attention(q_lat, q_rope, c_pool, r_pool, block_tables, pos, *,
                         scale, backend: Optional[str] = None,
-                        sharded: bool = False):
+                        sharded: bool = False,
+                        pipeline: Optional[str] = None):
     """Dispatching MLA paged-decode attention over the compressed cache.
 
     q_lat (B, H, r); q_rope (B, H, dr); pools (P, page, r) / (P, page, dr);
     block_tables (B, n_blocks); pos (B,).  Returns o_lat (B, H, r).
     """
-    impl = resolve("mla_paged_attention", backend, sharded=sharded)
+    impl = resolve("mla_paged_attention", backend, sharded=sharded,
+                   pipeline=pipeline)
     return impl(q_lat, q_rope, c_pool, r_pool, block_tables, pos,
                 scale=scale)
 
@@ -169,14 +229,16 @@ def mla_paged_attention(q_lat, q_rope, c_pool, r_pool, block_tables, pos, *,
 def paged_attention_verify(q, k_pool, v_pool, block_tables, pos, *, scale,
                            soft_cap: float = 0.0,
                            backend: Optional[str] = None,
-                           sharded: bool = False):
+                           sharded: bool = False,
+                           pipeline: Optional[str] = None):
     """Dispatching GQA multi-token paged verification (spec decoding).
 
     q (B, T, KV, G, hd) — T draft-chain query tokens at positions
     ``pos + t``; pools (P, page, KV, hd); block_tables (B, n_blocks);
     pos (B,) first-query position.  Returns (B, T, KV, G, hd).
     """
-    impl = resolve("paged_attention_verify", backend, sharded=sharded)
+    impl = resolve("paged_attention_verify", backend, sharded=sharded,
+                   pipeline=pipeline)
     return impl(q, k_pool, v_pool, block_tables, pos, scale=scale,
                 soft_cap=soft_cap)
 
@@ -184,13 +246,15 @@ def paged_attention_verify(q, k_pool, v_pool, block_tables, pos, *, scale,
 def mla_paged_attention_verify(q_lat, q_rope, c_pool, r_pool, block_tables,
                                pos, *, scale,
                                backend: Optional[str] = None,
-                               sharded: bool = False):
+                               sharded: bool = False,
+                               pipeline: Optional[str] = None):
     """Dispatching MLA multi-token paged verification over the latent cache.
 
     q_lat (B, T, H, r); q_rope (B, T, H, dr); pools (P, page, r) /
     (P, page, dr); pos (B,) first-query position.  Returns (B, T, H, r).
     """
-    impl = resolve("mla_paged_attention_verify", backend, sharded=sharded)
+    impl = resolve("mla_paged_attention_verify", backend, sharded=sharded,
+                   pipeline=pipeline)
     return impl(q_lat, q_rope, c_pool, r_pool, block_tables, pos,
                 scale=scale)
 

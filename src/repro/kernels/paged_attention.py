@@ -54,6 +54,21 @@ block walk, the scalar-prefetched table, and the online-softmax carries
 are shared across all T tokens: HBM traffic stays ~one page walk while
 the FLOPs scale by T — the roofline lever speculative decoding exists to
 pull (measured intensity -> (k+1) * I at the same memory ceiling).
+
+Pipelined page streaming (``pipeline="double"``): every public kernel also
+ships a two-stage double-buffered variant that drops the block dim from
+the grid and walks the table inside the kernel with EXPLICIT async DMAs —
+two VMEM slabs per stream, DMA semaphores, and a one-block lookahead:
+start the copy of page b+1 into slab ``1 - (b % 2)`` before waiting on
+page b, so the HBM->VMEM transfer of the next page hides behind the
+current page's flash-attention math.  The compute per block is the exact
+op sequence of the single-buffered kernel (same f32 online-softmax chain,
+same order), so ``pipeline="double"`` is bit-identical to ``"off"``; the
+q/o slabs are fetched ONCE per program instead of re-read per grid step,
+which the VMEM pricing below reflects (``pipeline`` kwarg).  Selection
+rides the kernel registry (kernels/ops.py ``pipeline=off|double``),
+keeping the single-buffered kernel and the jnp gather the byte-checked
+references.
 """
 
 from __future__ import annotations
@@ -186,6 +201,14 @@ def mla_paged_attention_verify_reference(
 # Pallas kernels
 # --------------------------------------------------------------------------
 
+PIPELINES = ("off", "double")
+
+
+def _check_pipeline(pipeline: str) -> None:
+    if pipeline not in PIPELINES:
+        raise ValueError(f"pipeline {pipeline!r} not in {PIPELINES}")
+
+
 def _paged_decode_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
                          m_ref, l_ref, acc_ref, *, page_size: int,
                          scale: float, soft_cap: float):
@@ -227,9 +250,15 @@ def paged_attention(
     q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     block_tables: jax.Array, pos: jax.Array, *,
     scale: float, soft_cap: float = 0.0, interpret: bool = False,
+    pipeline: str = "off",
 ) -> jax.Array:
     """Pallas GQA paged decode; same contract as the reference."""
+    _check_pipeline(pipeline)
     B, KV, G, hd = q.shape
+    if pipeline == "double":
+        return _gqa_paged_double(
+            q, k_pool, v_pool, block_tables, pos, n_group=G, scale=scale,
+            soft_cap=soft_cap, interpret=interpret)
     _, page_size, _, _ = k_pool.shape
     n_blocks = block_tables.shape[1]
     kernel = functools.partial(
@@ -300,10 +329,15 @@ def _mla_paged_decode_kernel(bt_ref, pos_ref, ql_ref, qr_ref, c_ref, r_ref,
 def mla_paged_attention(
     q_lat: jax.Array, q_rope: jax.Array, c_pool: jax.Array,
     r_pool: jax.Array, block_tables: jax.Array, pos: jax.Array, *,
-    scale: float, interpret: bool = False,
+    scale: float, interpret: bool = False, pipeline: str = "off",
 ) -> jax.Array:
     """Pallas MLA paged decode over the compressed cache."""
+    _check_pipeline(pipeline)
     B, H, r = q_lat.shape
+    if pipeline == "double":
+        return _mla_paged_double(
+            q_lat, q_rope, c_pool, r_pool, block_tables, pos, n_heads=H,
+            scale=scale, interpret=interpret)
     dr = q_rope.shape[-1]
     page_size = c_pool.shape[1]
     n_blocks = block_tables.shape[1]
@@ -382,16 +416,23 @@ def paged_attention_verify(
     q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     block_tables: jax.Array, pos: jax.Array, *,
     scale: float, soft_cap: float = 0.0, interpret: bool = False,
+    pipeline: str = "off",
 ) -> jax.Array:
     """Pallas GQA multi-token verify; same contract as the reference.
 
     All T query tokens of a slot ride in one (T*G, hd) VMEM slab, so the
     page walk (and its HBM traffic) is paid once for the whole draft chain.
     """
+    _check_pipeline(pipeline)
     B, T, KV, G, hd = q.shape
     page_size = k_pool.shape[1]
     n_blocks = block_tables.shape[1]
     qf = q.transpose(0, 2, 1, 3, 4).reshape(B, KV, T * G, hd)
+    if pipeline == "double":
+        o = _gqa_paged_double(
+            qf, k_pool, v_pool, block_tables, pos, n_group=G, scale=scale,
+            soft_cap=soft_cap, interpret=interpret)
+        return o.reshape(B, KV, T, G, hd).transpose(0, 2, 1, 3, 4)
     kernel = functools.partial(
         _paged_verify_kernel, page_size=page_size, n_group=G, scale=scale,
         soft_cap=soft_cap)
@@ -463,15 +504,21 @@ def _mla_paged_verify_kernel(bt_ref, pos_ref, ql_ref, qr_ref, c_ref, r_ref,
 def mla_paged_attention_verify(
     q_lat: jax.Array, q_rope: jax.Array, c_pool: jax.Array,
     r_pool: jax.Array, block_tables: jax.Array, pos: jax.Array, *,
-    scale: float, interpret: bool = False,
+    scale: float, interpret: bool = False, pipeline: str = "off",
 ) -> jax.Array:
     """Pallas MLA multi-token verify over the compressed cache."""
+    _check_pipeline(pipeline)
     B, T, H, r = q_lat.shape
     dr = q_rope.shape[-1]
     page_size = c_pool.shape[1]
     n_blocks = block_tables.shape[1]
     qlf = q_lat.reshape(B, T * H, r)
     qrf = q_rope.reshape(B, T * H, dr)
+    if pipeline == "double":
+        o = _mla_paged_double(
+            qlf, qrf, c_pool, r_pool, block_tables, pos, n_heads=H,
+            scale=scale, interpret=interpret)
+        return o.reshape(B, T, H, r)
     kernel = functools.partial(
         _mla_paged_verify_kernel, page_size=page_size, n_heads=H,
         scale=scale)
@@ -503,6 +550,203 @@ def mla_paged_attention_verify(
 
 
 # --------------------------------------------------------------------------
+# Double-buffered kernels (pipeline="double"): manual two-slab DMA walk
+# --------------------------------------------------------------------------
+
+def _gqa_double_kernel(bt_ref, pos_ref, q_ref, k_hbm, v_hbm, o_ref,
+                       k_slab, v_slab, k_sem, v_sem, *, page_size: int,
+                       n_group: int, n_blocks: int, scale: float,
+                       soft_cap: float):
+    """Grid (B, KV): the whole block walk runs inside the kernel.  Two
+    (page, hd) VMEM slabs per stream; the DMA for page j+1 starts before
+    the wait on page j, so the fetch pipelines one block ahead of the
+    flash math.  Row r of the (rows, hd) query slab belongs to draft
+    token t = r // n_group (t = 0 everywhere for single-token decode) —
+    the per-block compute is the exact op sequence of the single-buffered
+    kernels, so the output is bit-identical to ``pipeline="off"``."""
+    b, h = pl.program_id(0), pl.program_id(1)
+
+    def k_dma(slot, j):
+        return pltpu.make_async_copy(
+            k_hbm.at[bt_ref[b, j], :, h, :], k_slab.at[slot],
+            k_sem.at[slot])
+
+    def v_dma(slot, j):
+        return pltpu.make_async_copy(
+            v_hbm.at[bt_ref[b, j], :, h, :], v_slab.at[slot],
+            v_sem.at[slot])
+
+    k_dma(0, 0).start()
+    v_dma(0, 0).start()
+    q = q_ref[0, 0].astype(jnp.float32)                     # (rows, hd)
+    rows, hd = q_ref.shape[2], q_ref.shape[3]
+
+    def body(j, carry):
+        m_prev, l_prev, acc_prev = carry
+        slot = jax.lax.rem(j, 2)
+
+        @pl.when(j + 1 < n_blocks)
+        def _prefetch():
+            k_dma(1 - slot, j + 1).start()
+            v_dma(1 - slot, j + 1).start()
+
+        k_dma(slot, j).wait()
+        v_dma(slot, j).wait()
+        k = k_slab[slot].astype(jnp.float32)                # (page, hd)
+        v = v_slab[slot].astype(jnp.float32)
+        s = (q @ k.T) * scale                               # (rows, page)
+        if soft_cap > 0:
+            s = jnp.tanh(s / soft_cap) * soft_cap
+        k_pos = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        t = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // n_group
+        s = jnp.where(k_pos <= pos_ref[b] + t, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc_prev * alpha + p @ v
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(
+        0, n_blocks, body,
+        (jnp.full((rows, 1), NEG_INF, jnp.float32),
+         jnp.zeros((rows, 1), jnp.float32),
+         jnp.zeros((rows, hd), jnp.float32)))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def _gqa_paged_double(qf: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                      block_tables: jax.Array, pos: jax.Array, *,
+                      n_group: int, scale: float, soft_cap: float,
+                      interpret: bool) -> jax.Array:
+    """qf (B, KV, rows, hd) flattened queries -> (B, KV, rows, hd)."""
+    B, KV, rows, hd = qf.shape
+    page_size = k_pool.shape[1]
+    n_blocks = block_tables.shape[1]
+    kernel = functools.partial(
+        _gqa_double_kernel, page_size=page_size, n_group=n_group,
+        n_blocks=n_blocks, scale=scale, soft_cap=soft_cap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, hd),
+                         lambda b, h, bt, ps: (b, h, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rows, hd),
+                               lambda b, h, bt, ps: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((2, page_size, hd), k_pool.dtype),
+            pltpu.VMEM((2, page_size, hd), v_pool.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, rows, hd), qf.dtype),
+        interpret=interpret,
+    )(block_tables, pos.astype(jnp.int32), qf, k_pool, v_pool)
+
+
+def _mla_double_kernel(bt_ref, pos_ref, ql_ref, qr_ref, c_hbm, r_hbm,
+                       o_ref, c_slab, r_slab, c_sem, r_sem, *,
+                       page_size: int, n_heads: int, n_blocks: int,
+                       scale: float):
+    """Grid (B,): the latent block walk with two (page, r) + (page, dr)
+    slabs and a one-block DMA lookahead.  Row r of the flattened query
+    slabs belongs to draft token t = r // n_heads (0 for decode)."""
+    b = pl.program_id(0)
+
+    def c_dma(slot, j):
+        return pltpu.make_async_copy(
+            c_hbm.at[bt_ref[b, j]], c_slab.at[slot], c_sem.at[slot])
+
+    def r_dma(slot, j):
+        return pltpu.make_async_copy(
+            r_hbm.at[bt_ref[b, j]], r_slab.at[slot], r_sem.at[slot])
+
+    c_dma(0, 0).start()
+    r_dma(0, 0).start()
+    q_lat = ql_ref[0].astype(jnp.float32)                   # (rows, r)
+    q_rope = qr_ref[0].astype(jnp.float32)                  # (rows, dr)
+    rows, r = ql_ref.shape[1], ql_ref.shape[2]
+
+    def body(j, carry):
+        m_prev, l_prev, acc_prev = carry
+        slot = jax.lax.rem(j, 2)
+
+        @pl.when(j + 1 < n_blocks)
+        def _prefetch():
+            c_dma(1 - slot, j + 1).start()
+            r_dma(1 - slot, j + 1).start()
+
+        c_dma(slot, j).wait()
+        r_dma(slot, j).wait()
+        c = c_slab[slot].astype(jnp.float32)                # (page, r)
+        kr = r_slab[slot].astype(jnp.float32)               # (page, dr)
+        s = (q_lat @ c.T + q_rope @ kr.T) * scale           # (rows, page)
+        k_pos = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        t = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // n_heads
+        s = jnp.where(k_pos <= pos_ref[b] + t, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc_prev * alpha + p @ c
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(
+        0, n_blocks, body,
+        (jnp.full((rows, 1), NEG_INF, jnp.float32),
+         jnp.zeros((rows, 1), jnp.float32),
+         jnp.zeros((rows, r), jnp.float32)))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def _mla_paged_double(qlf: jax.Array, qrf: jax.Array, c_pool: jax.Array,
+                      r_pool: jax.Array, block_tables: jax.Array,
+                      pos: jax.Array, *, n_heads: int, scale: float,
+                      interpret: bool) -> jax.Array:
+    """qlf (B, rows, r) / qrf (B, rows, dr) -> o_lat (B, rows, r)."""
+    B, rows, r = qlf.shape
+    dr = qrf.shape[-1]
+    page_size = c_pool.shape[1]
+    n_blocks = block_tables.shape[1]
+    kernel = functools.partial(
+        _mla_double_kernel, page_size=page_size, n_heads=n_heads,
+        n_blocks=n_blocks, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, rows, r), lambda b, bt, ps: (b, 0, 0)),
+            pl.BlockSpec((1, rows, dr), lambda b, bt, ps: (b, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, rows, r), lambda b, bt, ps: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((2, page_size, r), c_pool.dtype),
+            pltpu.VMEM((2, page_size, dr), r_pool.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, rows, r), qlf.dtype),
+        interpret=interpret,
+    )(block_tables, pos.astype(jnp.int32), qlf, qrf, c_pool, r_pool)
+
+
+# --------------------------------------------------------------------------
 # VMEM traffic pricing (hierarchical roofline, arXiv 2009.05257)
 #
 # The HBM ledger prices the page walk once per line (kv_line_bytes * L).
@@ -527,7 +771,7 @@ def live_blocks(context_len: int, page_size: int, n_q: int = 1) -> int:
 
 def paged_decode_vmem_bytes(
     *, context_len: int, page_size: int, n_heads: int, kv_heads: int,
-    head_dim: int, isize: int, n_q: int = 1,
+    head_dim: int, isize: int, n_q: int = 1, pipeline: str = "off",
 ) -> float:
     """VMEM bytes one slot moves in the GQA paged decode (``n_q == 1``)
     or verify (``n_q == T``) kernel.
@@ -536,12 +780,19 @@ def paged_decode_vmem_bytes(
     streams one (page, hd) K slab and one V slab HBM->VMEM, re-reads the
     (G * n_q, hd) query slab, and reads+writes the fp32 carries
     (m, l: (rows, 1) each; acc: (rows, hd)).  The output flush and the
-    n_q freshly appended cache lines cross VMEM once."""
+    n_q freshly appended cache lines cross VMEM once.
+
+    ``pipeline="double"`` prices the two-slab manual-DMA kernel: the
+    block walk runs inside one (slot, kv_head) program, so the query
+    slab is fetched ONCE instead of re-read per block step (the streamed
+    page bytes and the per-block fp32 carry updates are unchanged — the
+    second slab doubles VMEM *capacity*, not traffic)."""
     g = n_heads // kv_heads
     rows = g * n_q
     nb = live_blocks(context_len, page_size, n_q)
+    q_steps = nb if pipeline == "off" else 1
     stream = kv_heads * nb * 2 * page_size * head_dim * isize
-    q_reread = kv_heads * nb * rows * head_dim * isize
+    q_reread = kv_heads * q_steps * rows * head_dim * isize
     carries = kv_heads * nb * 2 * rows * (head_dim + 2) * 4
     out = kv_heads * rows * head_dim * isize
     appended = n_q * 2 * kv_heads * head_dim * isize
@@ -550,19 +801,22 @@ def paged_decode_vmem_bytes(
 
 def mla_paged_decode_vmem_bytes(
     *, context_len: int, page_size: int, n_heads: int, lora_rank: int,
-    rope_dim: int, isize: int, n_q: int = 1,
+    rope_dim: int, isize: int, n_q: int = 1, pipeline: str = "off",
 ) -> float:
     """VMEM bytes one slot moves in the MLA paged decode/verify kernel.
 
     Grid is (B, n_blocks); per block step the kernel streams one
     (page, r) latent slab and one (page, dr) rope slab, re-reads the
     (H * n_q, r) + (H * n_q, dr) query slabs, and reads+writes the fp32
-    carries (m, l: (rows, 1); acc: (rows, r))."""
+    carries (m, l: (rows, 1); acc: (rows, r)).  ``pipeline="double"``:
+    grid (B,), query slabs fetched once per program (see
+    :func:`paged_decode_vmem_bytes`)."""
     rows = n_heads * n_q
     nb = live_blocks(context_len, page_size, n_q)
+    q_steps = nb if pipeline == "off" else 1
     line = (lora_rank + rope_dim) * isize
     stream = nb * page_size * line
-    q_reread = nb * rows * line
+    q_reread = q_steps * rows * line
     carries = nb * 2 * rows * (lora_rank + 2) * 4
     out = rows * lora_rank * isize
     appended = n_q * line

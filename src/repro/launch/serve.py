@@ -92,6 +92,16 @@ def main():
                          "(serve/shard.py; needs dp*tp visible devices — "
                          "on CPU force them with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--pipeline", choices=["off", "double"], default="off",
+                    help="paged-kernel page streaming: 'double' "
+                         "double-buffers the Pallas page walk (prefetch "
+                         "page b+1 while computing page b; "
+                         "kernels/paged_attention.py)")
+    ap.add_argument("--overlap", choices=["none", "ring"], default="none",
+                    help="decode collective overlap: 'ring' replaces the "
+                         "blocking row-parallel psum epilogues with ring "
+                         "collective matmuls (parallel/collectives.py; "
+                         "tp > 1 meshes only)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -112,7 +122,8 @@ def main():
         kernel_backend=args.backend,
         prefix_cache=args.prefix_cache,
         num_pages=args.num_pages or None,
-        watermark=args.watermark, preempt_mode=args.preempt)
+        watermark=args.watermark, preempt_mode=args.preempt,
+        pipeline=args.pipeline, overlap=args.overlap)
     scfg = None
     if args.spec != "off":
         if not supports_spec(cfg):

@@ -194,7 +194,7 @@ def paged_pool_defs(cfg: ModelConfig, num_pages: int, page_size: int
 def decode_attention_paged(
     p, x: jax.Array, pool: Dict[str, jax.Array], block_tables: jax.Array,
     pos: jax.Array, cfg: ModelConfig, *, page_size: int,
-    backend: Optional[str] = None,
+    backend: Optional[str] = None, pipeline: Optional[str] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One-token decode for every slot against a paged pool.
 
@@ -222,19 +222,27 @@ def decode_attention_paged(
         o = kernel_ops.paged_attention(
             q.reshape(B, KV, G, hd), pool_k, pool_v, block_tables, pos,
             scale=1.0 / (hd ** 0.5), soft_cap=cfg.attn_logit_soft_cap,
-            backend=backend, sharded=cfg.tp_axis is not None
+            backend=backend, sharded=cfg.tp_axis is not None,
+            pipeline=pipeline,
             ).reshape(B, 1, H, hd)
-    out = jnp.einsum("bqhx,hxd->bqd", o.astype(x.dtype), p["wo"])
-    if cfg.tp_axis is not None:
-        # head-parallel shard: the o-proj contracted local heads only
-        out = coll.row_parallel_psum(out, cfg.tp_axis)
+    if cfg.tp_axis is not None and cfg.tp_overlap == "ring":
+        # same contraction as the einsum below, flattened so the ring
+        # epilogue can chunk the d_model columns
+        out = coll.row_parallel_matmul(
+            o.astype(x.dtype).reshape(B, 1, H * hd),
+            p["wo"].reshape(H * hd, -1), cfg.tp_axis, "ring")
+    else:
+        out = jnp.einsum("bqhx,hxd->bqd", o.astype(x.dtype), p["wo"])
+        if cfg.tp_axis is not None:
+            # head-parallel shard: the o-proj contracted local heads only
+            out = coll.row_parallel_psum(out, cfg.tp_axis)
     return constrain(out, "batch", "seq", "d_model"), {"k": pool_k, "v": pool_v}
 
 
 def decode_verify_paged(
     p, x: jax.Array, pool: Dict[str, jax.Array], block_tables: jax.Array,
     pos: jax.Array, cfg: ModelConfig, *, page_size: int,
-    backend: Optional[str] = None,
+    backend: Optional[str] = None, pipeline: Optional[str] = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Multi-token verification decode for every slot (spec decoding).
 
@@ -264,11 +272,17 @@ def decode_verify_paged(
         o = kernel_ops.paged_attention_verify(
             q.reshape(B, T, KV, G, hd), pool_k, pool_v, block_tables, pos,
             scale=1.0 / (hd ** 0.5), soft_cap=cfg.attn_logit_soft_cap,
-            backend=backend, sharded=cfg.tp_axis is not None
+            backend=backend, sharded=cfg.tp_axis is not None,
+            pipeline=pipeline,
             ).reshape(B, T, H, hd)
-    out = jnp.einsum("bqhx,hxd->bqd", o.astype(x.dtype), p["wo"])
-    if cfg.tp_axis is not None:
-        out = coll.row_parallel_psum(out, cfg.tp_axis)
+    if cfg.tp_axis is not None and cfg.tp_overlap == "ring":
+        out = coll.row_parallel_matmul(
+            o.astype(x.dtype).reshape(B, T, H * hd),
+            p["wo"].reshape(H * hd, -1), cfg.tp_axis, "ring")
+    else:
+        out = jnp.einsum("bqhx,hxd->bqd", o.astype(x.dtype), p["wo"])
+        if cfg.tp_axis is not None:
+            out = coll.row_parallel_psum(out, cfg.tp_axis)
     return constrain(out, "batch", "seq", "d_model"), {"k": pool_k,
                                                        "v": pool_v}
 

@@ -98,6 +98,12 @@ class ModelConfig:
     # config also carries the per-shard head/ffn counts, so model code is
     # oblivious to sharding except at these explicit collective edges.
     tp_axis: Optional[str] = None
+    # Row-parallel epilogue schedule on the decode hot path: "none" keeps
+    # the blocking matmul + psum (the byte-checked reference); "ring"
+    # routes the o-proj / down-proj edges through
+    # parallel.collectives.ring_matmul_reduce so ICI hops interleave with
+    # per-shard matmul chunks.  Only consulted when tp_axis is set.
+    tp_overlap: str = "none"
 
     # serving
     subquadratic: bool = False       # may run long_500k

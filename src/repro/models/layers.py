@@ -105,6 +105,8 @@ def apply_mlp(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
         h = constrain(h, "batch", "seq", "d_ff")
     else:  # (tokens, d_ff) — MoE shared-expert path
         h = constrain(h, "batch", "d_ff")
+    if cfg.tp_axis is not None and cfg.tp_overlap == "ring":
+        return coll.row_parallel_matmul(h, p["w_down"], cfg.tp_axis, "ring")
     out = h @ p["w_down"]
     if cfg.tp_axis is not None:
         # per-shard d_ff slice: the down-proj contracts a partial inner dim

@@ -187,7 +187,8 @@ def _mla_attend(p, q_nope, q_rope, c_kv, k_rope, valid, cfg: ModelConfig):
 def mla_decode_paged(p, x: jax.Array, pool: Dict[str, jax.Array],
                      block_tables: jax.Array, pos: jax.Array,
                      cfg: ModelConfig, *, page_size: int,
-                     backend: Optional[str] = None
+                     backend: Optional[str] = None,
+                     pipeline: Optional[str] = None
                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One-token MLA decode against the paged latent pool.  x (B,1,D);
     pool c_kv (P,page,r) / k_rope (P,page,dr); block_tables (B,n_blocks);
@@ -217,14 +218,21 @@ def mla_decode_paged(p, x: jax.Array, pool: Dict[str, jax.Array],
         o_lat = kernel_ops.mla_paged_attention(
             q_lat[:, 0], q_rope[:, 0], pool_c, pool_r, block_tables, pos,
             scale=scale, backend=backend,
-            sharded=cfg.tp_axis is not None)[:, None]           # (B,1,H,r)
+            sharded=cfg.tp_axis is not None,
+            pipeline=pipeline)[:, None]                         # (B,1,H,r)
     o = jnp.einsum("bqhr,rhk->bqhk", o_lat.astype(x.dtype), p["wv_b"])
-    out = jnp.einsum("bqhk,hkd->bqd", o, p["wo"])
-    if cfg.tp_axis is not None:
-        # head-parallel shard over the latent: replicated c_kv/k_rope
-        # pages, partitioned q/o projections — the o-proj contracted
-        # local heads only
-        out = coll.row_parallel_psum(out, cfg.tp_axis)
+    if cfg.tp_axis is not None and cfg.tp_overlap == "ring":
+        H_loc, dk = o.shape[2], o.shape[3]
+        out = coll.row_parallel_matmul(
+            o.reshape(B, 1, H_loc * dk),
+            p["wo"].reshape(H_loc * dk, -1), cfg.tp_axis, "ring")
+    else:
+        out = jnp.einsum("bqhk,hkd->bqd", o, p["wo"])
+        if cfg.tp_axis is not None:
+            # head-parallel shard over the latent: replicated c_kv/k_rope
+            # pages, partitioned q/o projections — the o-proj contracted
+            # local heads only
+            out = coll.row_parallel_psum(out, cfg.tp_axis)
     out = constrain(out, "batch", "seq", "d_model")
     return out, {"c_kv": pool_c, "k_rope": pool_r}
 
@@ -232,7 +240,8 @@ def mla_decode_paged(p, x: jax.Array, pool: Dict[str, jax.Array],
 def mla_decode_verify_paged(p, x: jax.Array, pool: Dict[str, jax.Array],
                             block_tables: jax.Array, pos: jax.Array,
                             cfg: ModelConfig, *, page_size: int,
-                            backend: Optional[str] = None
+                            backend: Optional[str] = None,
+                            pipeline: Optional[str] = None
                             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Multi-token MLA verification against the paged latent pool (spec
     decoding).  x (B, T, D) draft-chain tokens at positions ``pos + t``;
@@ -262,11 +271,18 @@ def mla_decode_verify_paged(p, x: jax.Array, pool: Dict[str, jax.Array],
         o_lat = kernel_ops.mla_paged_attention_verify(
             q_lat, q_rope, pool_c, pool_r, block_tables, pos,
             scale=scale, backend=backend,
-            sharded=cfg.tp_axis is not None)                    # (B,T,H,r)
+            sharded=cfg.tp_axis is not None,
+            pipeline=pipeline)                                  # (B,T,H,r)
     o = jnp.einsum("bqhr,rhk->bqhk", o_lat.astype(x.dtype), p["wv_b"])
-    out = jnp.einsum("bqhk,hkd->bqd", o, p["wo"])
-    if cfg.tp_axis is not None:
-        out = coll.row_parallel_psum(out, cfg.tp_axis)
+    if cfg.tp_axis is not None and cfg.tp_overlap == "ring":
+        H_loc, dk = o.shape[2], o.shape[3]
+        out = coll.row_parallel_matmul(
+            o.reshape(B, T, H_loc * dk),
+            p["wo"].reshape(H_loc * dk, -1), cfg.tp_axis, "ring")
+    else:
+        out = jnp.einsum("bqhk,hkd->bqd", o, p["wo"])
+        if cfg.tp_axis is not None:
+            out = coll.row_parallel_psum(out, cfg.tp_axis)
     out = constrain(out, "batch", "seq", "d_model")
     return out, {"c_kv": pool_c, "k_rope": pool_r}
 

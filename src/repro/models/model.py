@@ -128,26 +128,30 @@ def paged_cache_defs(cfg: ModelConfig, num_slots: int, num_pages: int,
 def decode_step_paged(params, cfg: ModelConfig, pools: List[Any],
                       block_tables: jax.Array, token: jax.Array,
                       pos: jax.Array, active: jax.Array, *, page_size: int,
-                      backend: Optional[str] = None):
+                      backend: Optional[str] = None,
+                      pipeline: Optional[str] = None):
     """One decode token per slot against the paged cache.  token (B,1);
     pos (B,); block_tables (B, n_blocks); active (B,) bool.  ``backend``
-    selects the paged-attention kernel (see kernels/ops.py registry)."""
+    selects the paged-attention kernel and ``pipeline`` its page-streaming
+    schedule (see kernels/ops.py registry)."""
     return tfm.decode_one_paged(params, cfg, pools, block_tables, token, pos,
-                                active, page_size=page_size, backend=backend)
+                                active, page_size=page_size, backend=backend,
+                                pipeline=pipeline)
 
 
 def decode_step_verify_paged(params, cfg: ModelConfig, pools: List[Any],
                              block_tables: jax.Array, tokens: jax.Array,
                              pos: jax.Array, active: jax.Array, *,
                              page_size: int,
-                             backend: Optional[str] = None):
+                             backend: Optional[str] = None,
+                             pipeline: Optional[str] = None):
     """Multi-token speculative verification: score tokens (B, T) — per
     slot the chain [last committed token, draft_1..draft_k] at positions
     ``pos + t`` — in one weight pass against the paged cache.  Returns
     logits (B, T, V) and updated pools.  Attention/MLA archs only."""
     return tfm.decode_verify_paged(params, cfg, pools, block_tables, tokens,
                                    pos, active, page_size=page_size,
-                                   backend=backend)
+                                   backend=backend, pipeline=pipeline)
 
 
 def prefill_chunk_paged(params, cfg: ModelConfig, pools: List[Any],

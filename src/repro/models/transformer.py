@@ -219,11 +219,13 @@ def apply_block_decode(p, b: BlockDef, x: jax.Array, cache: Dict[str, Any],
     if paged is not None and b.mixer == "attn":
         o, cache = attn.decode_attention_paged(
             p["mixer"], h, cache, paged["block_tables"], pos, cfg,
-            page_size=paged["page_size"], backend=paged.get("backend"))
+            page_size=paged["page_size"], backend=paged.get("backend"),
+            pipeline=paged.get("pipeline"))
     elif paged is not None and b.mixer == "mla":
         o, cache = mla_mod.mla_decode_paged(
             p["mixer"], h, cache, paged["block_tables"], pos, cfg,
-            page_size=paged["page_size"], backend=paged.get("backend"))
+            page_size=paged["page_size"], backend=paged.get("backend"),
+            pipeline=paged.get("pipeline"))
     elif paged is not None and b.mixer in ("cross_attn", "attn+cross"):
         raise NotImplementedError(
             "paged decode supports decoder-only mixers; use the static "
@@ -291,11 +293,13 @@ def apply_block_verify(p, b: BlockDef, x: jax.Array, cache: Dict[str, Any],
     if b.mixer == "attn":
         o, cache = attn.decode_verify_paged(
             p["mixer"], h, cache, paged["block_tables"], pos, cfg,
-            page_size=paged["page_size"], backend=paged.get("backend"))
+            page_size=paged["page_size"], backend=paged.get("backend"),
+            pipeline=paged.get("pipeline"))
     elif b.mixer == "mla":
         o, cache = mla_mod.mla_decode_verify_paged(
             p["mixer"], h, cache, paged["block_tables"], pos, cfg,
-            page_size=paged["page_size"], backend=paged.get("backend"))
+            page_size=paged["page_size"], backend=paged.get("backend"),
+            pipeline=paged.get("pipeline"))
     else:
         raise NotImplementedError(
             f"speculative verification needs a rollback-free cache; mixer "
@@ -474,7 +478,8 @@ def decode_one(params, cfg: ModelConfig, caches: List[Any], token: jax.Array,
 def decode_one_paged(params, cfg: ModelConfig, pools: List[Any],
                      block_tables: jax.Array, token: jax.Array,
                      pos: jax.Array, active: jax.Array, *, page_size: int,
-                     backend: Optional[str] = None
+                     backend: Optional[str] = None,
+                     pipeline: Optional[str] = None
                      ) -> Tuple[jax.Array, List[Any]]:
     """One decode step over the packed slot batch.
 
@@ -490,7 +495,9 @@ def decode_one_paged(params, cfg: ModelConfig, pools: List[Any],
 
     ``backend`` picks the paged-attention implementation through the
     kernel registry (kernels/ops.py): "pallas" (decode kernel), "jnp"
-    (gather reference) or "auto"/None (registry default).
+    (gather reference) or "auto"/None (registry default).  ``pipeline``
+    picks the kernel's page-streaming schedule ("off" single-buffered,
+    "double" two-slab DMA prefetch — bit-identical output).
 
     MoE caveat: idle-lane garbage tokens do enter expert routing and can
     shift capacity cutoffs for live tokens — the same O(1)-logit
@@ -501,7 +508,7 @@ def decode_one_paged(params, cfg: ModelConfig, pools: List[Any],
     posb = pos.astype(jnp.int32)[:, None]
     x = embed_tokens(params["embed"], token, cfg, posb)
     paged = {"block_tables": block_tables, "page_size": page_size,
-             "active": active, "backend": backend}
+             "active": active, "backend": backend, "pipeline": pipeline}
     new_pools: List[Any] = []
     for seg_params, seg_pool, (unit, reps) in zip(
             params["segments"], pools, cfg.segments()):
@@ -526,7 +533,8 @@ def decode_one_paged(params, cfg: ModelConfig, pools: List[Any],
 def decode_verify_paged(params, cfg: ModelConfig, pools: List[Any],
                         block_tables: jax.Array, tokens: jax.Array,
                         pos: jax.Array, active: jax.Array, *,
-                        page_size: int, backend: Optional[str] = None
+                        page_size: int, backend: Optional[str] = None,
+                        pipeline: Optional[str] = None
                         ) -> Tuple[jax.Array, List[Any]]:
     """Score T = k+1 draft-chain tokens per slot in ONE weight pass.
 
@@ -548,7 +556,7 @@ def decode_verify_paged(params, cfg: ModelConfig, pools: List[Any],
             + jnp.arange(T, dtype=jnp.int32)[None, :])
     x = embed_tokens(params["embed"], tokens, cfg, posq)
     paged = {"block_tables": block_tables, "page_size": page_size,
-             "active": active, "backend": backend}
+             "active": active, "backend": backend, "pipeline": pipeline}
     new_pools: List[Any] = []
     for seg_params, seg_pool, (unit, reps) in zip(
             params["segments"], pools, cfg.segments()):

@@ -295,19 +295,25 @@ def step_cost_analysis(engine) -> Dict[str, float]:
 
 
 def _kernel_grid_vmem_walk(cfg, context_len: int, page_size: int,
-                           n_q: int = 1) -> float:
+                           n_q: int = 1, pipeline: str = "off") -> float:
     """Independent re-derivation of one slot's paged-attention VMEM
     traffic by walking the Pallas grids in kernels/paged_attention.py
     literally: for every grid step, sum the ``in_specs`` block bytes the
     BlockSpec index maps stream in, the fp32 scratch carries the kernel
     reads AND rewrites, and the output block written at the flush step —
     plus the step's appended KV line crossing VMEM on its way to the
-    pools.  The closed-form pricing (kernels.paged_decode_vmem_bytes)
-    must agree with this walk; drift means someone changed the kernel's
-    block geometry without repricing the ledger."""
-    from repro.kernels.paged_attention import live_blocks
+    pools.  ``pipeline="double"`` walks the two-slab manual-DMA grids
+    instead: the block loop lives inside one (slot[, kv_head]) program,
+    so the query slab enters VMEM once per program rather than once per
+    block step (streamed pages / carries / out are the same walk).  The
+    closed-form pricing (kernels.paged_decode_vmem_bytes) must agree
+    with this walk; drift means someone changed the kernel's block
+    geometry without repricing the ledger."""
+    from repro.kernels.paged_attention import _check_pipeline, live_blocks
+    _check_pipeline(pipeline)
     isize = jnp.dtype(cfg.dtype).itemsize
     nb = live_blocks(context_len, page_size, n_q)
+    q_steps = nb if pipeline == "off" else 1
     total = 0.0
     for unit, reps in cfg.segments():
         for b in unit:
@@ -315,19 +321,21 @@ def _kernel_grid_vmem_walk(cfg, context_len: int, page_size: int,
                 KV, G, hd = (cfg.n_kv_heads,
                              cfg.n_heads // cfg.n_kv_heads, cfg.hd)
                 rows = G * n_q
-                per_step = (rows * hd * isize            # q block
-                            + 2 * page_size * hd * isize  # k + v blocks
+                per_step = (2 * page_size * hd * isize    # k + v slabs
                             + 2 * rows * (hd + 2) * 4)    # m/l/acc r+w
-                walk = KV * (nb * per_step + rows * hd * isize)  # + out
+                walk = KV * (q_steps * rows * hd * isize  # q block(s)
+                             + nb * per_step
+                             + rows * hd * isize)         # out flush
                 walk += n_q * 2 * KV * hd * isize        # appended line
             elif b.mixer == "mla":
                 H, r, dr = (cfg.n_heads, cfg.kv_lora_rank,
                             cfg.rope_head_dim)
                 rows = H * n_q
-                per_step = (rows * (r + dr) * isize       # ql + qr blocks
-                            + page_size * (r + dr) * isize  # c + r blocks
+                per_step = (page_size * (r + dr) * isize  # c + r slabs
                             + 2 * rows * (r + 2) * 4)     # m/l/acc r+w
-                walk = nb * per_step + rows * r * isize   # + out
+                walk = (q_steps * rows * (r + dr) * isize  # ql + qr blocks
+                        + nb * per_step
+                        + rows * r * isize)               # out flush
                 walk += n_q * (r + dr) * isize            # appended line
             else:
                 continue
@@ -336,29 +344,36 @@ def _kernel_grid_vmem_walk(cfg, context_len: int, page_size: int,
 
 
 def crosscheck_vmem(engine, requests: Optional[List] = None,
-                    n_q: int = 1) -> Dict:
+                    n_q: int = 1, pipeline: Optional[str] = None) -> Dict:
     """Ledger <-> kernel-geometry cross-check for the VMEM level.
 
     The VMEM row of the hierarchy has no PMU to read on this stack, so
     the check is pricing-vs-artifact: the scheduler's closed-form
     ``attn_kernel_vmem_bytes`` against an independent walk of the actual
-    Pallas BlockSpec grids (:func:`_kernel_grid_vmem_walk`).  A ratio
+    Pallas BlockSpec grids (:func:`_kernel_grid_vmem_walk`), both priced
+    for the kernel variant the engine actually runs (``pipeline``
+    defaults to the engine's configured page streaming mode).  A ratio
     off 1.0 means the ledger's VMEM bytes no longer describe the kernel
     that ships."""
     cfg, ps = engine.cfg, engine.ecfg.page_size
+    if pipeline is None:
+        pipeline = getattr(engine.ecfg, "pipeline", "off")
     if requests is None:
         requests = engine._sched.decode_requests()
     if not requests:
         raise ValueError("no decoding requests to cross-check")
     contexts = [r.context_len for r in requests]
-    analytic = sum(attn_kernel_vmem_bytes(cfg, L, ps, n_q=n_q)
+    analytic = sum(attn_kernel_vmem_bytes(cfg, L, ps, n_q=n_q,
+                                          pipeline=pipeline)
                    for L in contexts)
-    walked = sum(_kernel_grid_vmem_walk(cfg, L, ps, n_q=n_q)
+    walked = sum(_kernel_grid_vmem_walk(cfg, L, ps, n_q=n_q,
+                                        pipeline=pipeline)
                  for L in contexts)
     return {
         "analytic_vmem_bytes": analytic,
         "kernel_walk_bytes": walked,
         "vmem_ratio": analytic / max(walked, 1.0),
+        "pipeline": pipeline,
         "contexts": contexts,
     }
 
@@ -405,4 +420,117 @@ def crosscheck_host(engine, n_blocks: Optional[int] = None) -> Dict:
         "hlo_output_bytes": float(foot.output_bytes),
         "host_ratio": analytic / max(float(foot.output_bytes), 1.0),
         "n_blocks": n_blocks,
+    }
+
+
+def overlapped_levels(ecfg) -> List[str]:
+    """Memory levels an engine config claims to overlap: ``vmem`` when
+    the paged kernels double-buffer their page walk (EngineConfig
+    .pipeline != "off"), ``ici`` when the decode collectives run as ring
+    matmuls under the epilogue compute (EngineConfig.overlap != "none")."""
+    out = []
+    if getattr(ecfg, "pipeline", "off") != "off":
+        out.append("vmem")
+    if getattr(ecfg, "overlap", "none") != "none":
+        out.append("ici")
+    return out
+
+
+def crosscheck_overlap(engine_off, engine_on, prompts, gen, *,
+                       windows: int = 3, wall_tol: float = 0.25,
+                       term_tol: float = 1e-6, betas=None) -> Dict:
+    """Measured <-> budget cross-check for the OVERLAP extension of the
+    time-based roofline (core.roofline.model.overlapped_budget).
+
+    Drives the SAME fenced steady-state decode window (the
+    ``run_hierarchy`` protocol: prefill outside, ``reset_phases``, pure
+    saturated decode steps, ``windows`` interleaved repetitions, min
+    per-step wall) on two engines that differ ONLY in their overlap
+    configuration — ``engine_off`` serial (pipeline="off",
+    overlap="none"), ``engine_on`` with page streaming double-buffered
+    and/or ring collectives on.  Asserts
+
+    * byte-identical greedy tokens — overlap is a schedule change, not a
+      numerics change;
+    * for every overlapped level the ledger's time term did not GROW
+      (the double-buffered kernel's q-slab term genuinely shrinks; the
+      ring's wire term stays fixed) beyond ``term_tol``;
+    * the overlapped wall does not regress past ``wall_off * (1 +
+      wall_tol)`` — the overlapped bound must hold where the serial sum
+      may not.
+
+    The measured wall delta is attributed back as an inferred per-level
+    overlap fraction ``ov_l = clamp((wall_off - wall_on) / t_l, 0, 1)``
+    — the fraction of that level's serial term the measured delta is
+    consistent with hiding."""
+    from repro.core.roofline.microbench import run_microbench
+    from repro.core.roofline.model import overlapped_budget, time_attribution
+
+    def steady(e):
+        for p in prompts:
+            e.submit(p % e.cfg.vocab_size, gen)
+        e.step()                      # prefill all slots + first tokens
+        e.reset_phases()              # timed window: pure decode steps
+        done = e.run()
+        ph = e.phases["decode"]
+        return ph.wall_s / max(ph.steps, 1), ph, done
+
+    steady(engine_off)                # compile warm-up, both engines
+    steady(engine_on)
+    walls_off, walls_on = [], []
+    ph_off = ph_on = done_off = done_on = None
+    for _ in range(windows):          # interleaved: noise hits both sides
+        w0, ph_off, done_off = steady(engine_off)
+        w1, ph_on, done_on = steady(engine_on)
+        walls_off.append(w0)
+        walls_on.append(w1)
+    wall_off, wall_on = min(walls_off), min(walls_on)
+
+    toks_off = [list(r.generated) for r in
+                sorted(done_off, key=lambda r: r.request_id)]
+    toks_on = [list(r.generated) for r in
+               sorted(done_on, key=lambda r: r.request_id)]
+    if toks_off != toks_on:
+        raise RuntimeError(
+            "overlap changed greedy outputs: the overlapped engine must "
+            f"be byte-identical to the serial one ({toks_on} vs "
+            f"{toks_off})")
+
+    if betas is None:
+        betas = run_microbench(quick=True).level_betas()
+    # per-STEP terms, so they compare 1:1 with the per-step walls
+    att_off = {k: v / max(ph_off.steps, 1)
+               for k, v in time_attribution(ph_off, betas).items()}
+    att_on = {k: v / max(ph_on.steps, 1)
+              for k, v in time_attribution(ph_on, betas).items()}
+    levels = overlapped_levels(engine_on.ecfg)
+    for lvl in levels:
+        if att_on[lvl] > att_off[lvl] * (1.0 + term_tol):
+            raise RuntimeError(
+                f"overlap grew the {lvl} time term: "
+                f"{att_on[lvl]:.3e}s on vs {att_off[lvl]:.3e}s off — the "
+                "overlapped kernel/collective moves MORE bytes than the "
+                "serial one it replaces")
+    if wall_on > wall_off * (1.0 + wall_tol):
+        raise RuntimeError(
+            f"overlapped steady-state wall regressed: {wall_on * 1e6:.0f}"
+            f"us/step vs serial {wall_off * 1e6:.0f}us/step exceeds "
+            f"+{wall_tol:.0%} (raw per-window walls: "
+            f"on={['%.0fus' % (w * 1e6) for w in walls_on]}, "
+            f"off={['%.0fus' % (w * 1e6) for w in walls_off]})")
+
+    delta = wall_off - wall_on            # per-step, like the terms
+    inferred = {}
+    for lvl in levels:
+        t = att_off[lvl]
+        inferred[lvl] = min(max(delta / t, 0.0), 1.0) if t > 0 else 0.0
+    return {
+        "wall_off_s": wall_off, "wall_on_s": wall_on,
+        "walls_off_s": walls_off, "walls_on_s": walls_on,
+        "levels": levels,
+        "terms_off": att_off, "terms_on": att_on,
+        "inferred_overlap": inferred,
+        "serial_budget_s": sum(att_off.values()),
+        "overlapped_budget_s": overlapped_budget(att_on, inferred),
+        "generated": toks_on,
     }

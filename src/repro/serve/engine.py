@@ -73,6 +73,8 @@ class EngineConfig:
     prefix_cache: bool = False        # content-hash prefix sharing + CoW
     watermark: float = 0.0            # admission slack, fraction of pool
     preempt_mode: str = "swap"        # "swap" | "recompute" on pool-dry
+    pipeline: str = "off"             # kernel page streaming: "off"|"double"
+    overlap: str = "none"             # TP epilogue schedule: "none"|"ring"
 
 
 def _bucket_len(n: int, floor: int) -> int:
@@ -261,11 +263,13 @@ class Engine:
         body in ``shard_map`` with the per-shard local config — the seam
         that keeps the 1x1 mesh byte-identical to this engine."""
         ps, be = self.ecfg.page_size, self.ecfg.kernel_backend
+        pl = self.ecfg.pipeline
 
         def _decode_sample(p, pools, bt, tok, pos, act, kd, steps, temps,
                            top_ks, top_ps):
             logits, pools = decode_step_paged(
-                p, cfg, pools, bt, tok, pos, act, page_size=ps, backend=be)
+                p, cfg, pools, bt, tok, pos, act, page_size=ps, backend=be,
+                pipeline=pl)
             return sampling.sample_tokens(logits, kd, steps, temps,
                                           top_ks, top_ps), pools
 
@@ -601,7 +605,8 @@ class Engine:
         ps = self.ecfg.page_size
         for req in running:
             vmem = decode_token_vmem_bytes(self.cfg, req.context_len,
-                                           n_active, ps)
+                                           n_active, ps,
+                                           pipeline=self.ecfg.pipeline)
             req.ledger.add_decode_token(self.cfg, req.context_len, n_active,
                                         ici_bytes=ici_share,
                                         vmem_bytes=vmem)

@@ -137,6 +137,7 @@ class DraftModelProposer:
     def __init__(self, cfg: ModelConfig, params: Any, *, num_slots: int,
                  page_size: int, max_len: int, k: int,
                  backend: Optional[str] = None,
+                 pipeline: Optional[str] = None,
                  prefill_bucket: int = 8):
         self.cfg = cfg
         self.params = params
@@ -153,7 +154,7 @@ class DraftModelProposer:
         self._temps = np.zeros((num_slots,), np.float32)
         self._top_ks = np.zeros((num_slots,), np.int32)
         self._top_ps = np.zeros((num_slots,), np.float32)
-        ps, be = page_size, backend
+        ps, be, pl = page_size, backend, pipeline
 
         # length-bucketed prefill needs per-token collected states: an MoE
         # FFN's capacity cutoffs would see the pad tokens (the same guard
@@ -166,12 +167,13 @@ class DraftModelProposer:
         self._catchup_fn = jax.jit(
             lambda p, pools, bt, toks, pos, act: decode_step_verify_paged(
                 p, cfg, pools, bt, toks, pos, act, page_size=ps,
-                backend=be))
+                backend=be, pipeline=pl))
 
         def _draft_step(p, pools, bt, tok, pos, act, kd, steps, temps,
                         top_ks, top_ps):
             logits, pools = decode_step_paged(
-                p, cfg, pools, bt, tok, pos, act, page_size=ps, backend=be)
+                p, cfg, pools, bt, tok, pos, act, page_size=ps, backend=be,
+                pipeline=pl)
             t, q = sampling.sample_with_probs(logits, kd, steps, temps,
                                               top_ks, top_ps)
             return t, q, pools

@@ -144,12 +144,15 @@ def decode_token_bytes(cfg: ModelConfig, context_len: int,
 
 
 def attn_kernel_vmem_bytes(cfg: ModelConfig, context_len: int,
-                           page_size: int, n_q: int = 1) -> float:
+                           page_size: int, n_q: int = 1,
+                           pipeline: str = "off") -> float:
     """VMEM traffic of one slot's paged-attention walks summed over all
     attention/MLA layers: the HBM page stream crossing VMEM page-padded,
     plus the kernel-resident re-touches (query slab re-reads per block
     step, fp32 softmax carries read+written) the HBM ledger never sees.
-    Priced from the kernel grids in kernels/paged_attention.py."""
+    Priced from the kernel grids in kernels/paged_attention.py;
+    ``pipeline="double"`` prices the two-slab DMA kernels (query slab
+    fetched once per program instead of per block step)."""
     isize = _dtype_bytes(cfg.dtype)
     total = 0.0
     for unit, reps in cfg.segments():
@@ -158,28 +161,33 @@ def attn_kernel_vmem_bytes(cfg: ModelConfig, context_len: int,
                 total += reps * paged_decode_vmem_bytes(
                     context_len=context_len, page_size=page_size,
                     n_heads=cfg.n_heads, kv_heads=cfg.n_kv_heads,
-                    head_dim=cfg.hd, isize=isize, n_q=n_q)
+                    head_dim=cfg.hd, isize=isize, n_q=n_q,
+                    pipeline=pipeline)
             elif b.mixer == "mla":
                 total += reps * mla_paged_decode_vmem_bytes(
                     context_len=context_len, page_size=page_size,
                     n_heads=cfg.n_heads, lora_rank=cfg.kv_lora_rank,
-                    rope_dim=cfg.rope_head_dim, isize=isize, n_q=n_q)
+                    rope_dim=cfg.rope_head_dim, isize=isize, n_q=n_q,
+                    pipeline=pipeline)
     return total
 
 
 def decode_token_vmem_bytes(cfg: ModelConfig, context_len: int,
-                            active_batch: int, page_size: int) -> float:
+                            active_batch: int, page_size: int,
+                            pipeline: str = "off") -> float:
     """VMEM-level bytes for one generated token: every non-KV HBM byte of
     the step (amortized weight read, recurrent state traffic) crosses
     VMEM exactly once on its way to the compute units, and the paged
     attention kernels add their streamed + resident traffic on top."""
     passthrough = (params_bytes_active(cfg) / max(active_batch, 1)
                    + 2 * state_bytes(cfg))
-    return passthrough + attn_kernel_vmem_bytes(cfg, context_len, page_size)
+    return passthrough + attn_kernel_vmem_bytes(cfg, context_len, page_size,
+                                                pipeline=pipeline)
 
 
 def verify_step_vmem_bytes(cfg: ModelConfig, context_len: int, n_fed: int,
-                           active_batch: int, page_size: int) -> float:
+                           active_batch: int, page_size: int,
+                           pipeline: str = "off") -> float:
     """VMEM-level bytes for one slot's multi-token verification step:
     one weight pass-through scores ``n_fed`` tokens sharing a single
     page walk (the verify kernels flatten the draft window into extra
@@ -187,7 +195,7 @@ def verify_step_vmem_bytes(cfg: ModelConfig, context_len: int, n_fed: int,
     passthrough = (params_bytes_active(cfg) / max(active_batch, 1)
                    + 2 * state_bytes(cfg))
     return passthrough + attn_kernel_vmem_bytes(cfg, context_len, page_size,
-                                                n_q=n_fed)
+                                                n_q=n_fed, pipeline=pipeline)
 
 
 def slot_swap_bytes(cfg: ModelConfig, n_blocks: int, page_size: int) -> float:

@@ -103,12 +103,15 @@ def supports_tp(cfg: ModelConfig, tp: int) -> bool:
     return tp_sharding_error(cfg, tp) is None
 
 
-def tp_local_config(cfg: ModelConfig, tp: int) -> ModelConfig:
+def tp_local_config(cfg: ModelConfig, tp: int,
+                    overlap: str = "none") -> ModelConfig:
     """The per-shard config the shard_map body runs: local head / FFN
     counts, explicit head_dim (it must NOT re-derive from the local head
     count), and ``tp_axis`` naming the mesh axis the model's collective
     edges reduce over.  vocab_size stays global — the logits edge uses it
-    to detect a sharded head."""
+    to detect a sharded head.  ``overlap`` selects the row-parallel
+    epilogue schedule ("none" blocking psum, "ring" the overlapped
+    collective matmul — parallel.collectives.ring_matmul_reduce)."""
     err = tp_sharding_error(cfg, tp)
     if err:
         raise NotImplementedError(err)
@@ -120,6 +123,7 @@ def tp_local_config(cfg: ModelConfig, tp: int) -> ModelConfig:
         head_dim=cfg.hd,
         d_ff=cfg.d_ff // tp if cfg.d_ff % tp == 0 else cfg.d_ff,
         tp_axis=MODEL_AXIS,
+        tp_overlap=overlap,
     )
 
 
@@ -162,7 +166,8 @@ class _ShardedStepMixin:
         if tp == 1:
             return
         self.mesh = make_host_mesh(data=dp, model=tp)
-        self.cfg_local = tp_local_config(self.cfg, tp)
+        self.cfg_local = tp_local_config(self.cfg, tp,
+                                         overlap=self.ecfg.overlap)
         self._param_specs = param_pspecs(self.cfg, self.mesh)
         self.params = jax.device_put(
             self.params,

@@ -216,13 +216,14 @@ class SpecEngine(Engine):
         factored like Engine._decode_callable so the tensor-parallel
         engine can shard_map the SAME body with the per-shard config."""
         ps, be = self.ecfg.page_size, self.ecfg.kernel_backend
+        pl = self.ecfg.pipeline
 
         if self.scfg.proposer == "draft":
             def _verify(p, pools, bt, feed, pos, act, draft, qp, nd, kd,
                         steps, temps, top_ks, top_ps):
                 logits, pools = decode_step_verify_paged(
                     p, cfg, pools, bt, feed, pos, act, page_size=ps,
-                    backend=be)
+                    backend=be, pipeline=pl)
                 toks, n_out = sampling.spec_accept(
                     logits, draft, qp, nd, kd, steps, temps, top_ks,
                     top_ps)
@@ -232,7 +233,7 @@ class SpecEngine(Engine):
                         steps, temps, top_ks, top_ps):
                 logits, pools = decode_step_verify_paged(
                     p, cfg, pools, bt, feed, pos, act, page_size=ps,
-                    backend=be)
+                    backend=be, pipeline=pl)
                 toks, n_out = sampling.spec_accept(
                     logits, draft, None, nd, kd, steps, temps, top_ks,
                     top_ps)
@@ -248,6 +249,7 @@ class SpecEngine(Engine):
             self.proposer = DraftModelProposer(
                 s.draft_cfg, s.draft_params, num_slots=e.num_slots,
                 page_size=ps, max_len=self._kv.max_len, k=s.k, backend=be,
+                pipeline=e.pipeline,
                 prefill_bucket=max(e.prefill_bucket, 1))
         else:
             self.proposer = NgramProposer(e.num_slots, s.k,
@@ -327,7 +329,8 @@ class SpecEngine(Engine):
             # the commit chain ran to completion; a stop-token or budget
             # cut means everything committed was an accepted draft
             accepted = committed - 1 if committed == n else committed
-            vmem = verify_step_vmem_bytes(self.cfg, L, T, n_active, ps)
+            vmem = verify_step_vmem_bytes(self.cfg, L, T, n_active, ps,
+                                          pipeline=self.ecfg.pipeline)
             req.ledger.add_verify_step(self.cfg, L, T, committed, accepted,
                                        nd, n_active, ici_bytes=ici_share,
                                        vmem_bytes=vmem)

@@ -31,9 +31,11 @@ from repro.core.roofline.microbench import (CACHE_SCHEMA, MicrobenchResult,
                                             run_microbench)
 from repro.core.roofline.model import (LevelBetas, PhaseTraffic, make_terms,
                                        attribution_residual,
-                                       time_attribution)
-from repro.core.roofline.report import (COMM_HEADER, comm_terms_row,
-                                        hierarchy_rows, time_budget_rows)
+                                       overlapped_budget, time_attribution)
+from repro.core.roofline.report import (COMM_HEADER, TIME_BUDGET_HEADER,
+                                        TIME_BUDGET_OVERLAP_HEADER,
+                                        comm_terms_row, hierarchy_rows,
+                                        time_budget_rows)
 from repro.models import init_params
 from repro.serve.crosscheck import crosscheck_host, crosscheck_vmem
 from repro.serve.engine import Engine, EngineConfig, GenerateConfig
@@ -120,6 +122,105 @@ def test_time_attribution_zero_wall_is_nan_not_crash():
     assert math.isnan(attribution_residual(PhaseTraffic(), betas))
 
 
+# --------------------------------------------------------------------------
+# Overlap extension: the overlapped bound and its identities
+# --------------------------------------------------------------------------
+
+def test_overlapped_budget_identities():
+    times = {"dispatch": 0.1, "compute": 1.0, "vmem": 0.2, "hbm": 2.0,
+             "ici": 0.5, "dcn": 0.0, "host": 0.0}
+    # ov = 0 everywhere: the bound IS the additive serial sum
+    assert overlapped_budget(times) == pytest.approx(sum(times.values()))
+    assert overlapped_budget(times, {}) == pytest.approx(
+        sum(times.values()))
+    # full overlap: dispatch + max(compute, slowest level) — the
+    # perfectly pipelined machine
+    full = {lvl: 1.0 for lvl in ("vmem", "hbm", "ici", "dcn", "host")}
+    assert overlapped_budget(times, full) == pytest.approx(
+        0.1 + max(1.0, 2.0))
+    # partial: the hidden half of hbm rides under compute, the rest
+    # stays serial
+    half = overlapped_budget(times, {"hbm": 0.5})
+    assert half == pytest.approx(0.1 + max(1.0, 1.0)
+                                 + (0.2 + 1.0 + 0.5))
+    # fractions clamp into [0, 1]; the bound is monotone in overlap
+    assert overlapped_budget(times, {"hbm": 7.0}) == pytest.approx(
+        overlapped_budget(times, {"hbm": 1.0}))
+    assert overlapped_budget(times, {"hbm": -1.0}) == pytest.approx(
+        overlapped_budget(times))
+    assert overlapped_budget(times, full) <= half <= sum(times.values())
+    # dispatch NEVER overlaps: raising it moves the bound 1:1
+    bumped = dict(times, dispatch=0.6)
+    assert overlapped_budget(bumped, full) == pytest.approx(
+        overlapped_budget(times, full) + 0.5)
+
+
+def test_terms_t_overlapped():
+    scope = ScopeSpec("t", CHIP, 1, "none")
+    kw = dict(scope=scope, dtype="bfloat16", flops_dev=50.0,
+              hbm_bytes_dev=30.0, ici_wire_bytes_dev=5.0,
+              dcn_wire_bytes_dev=0.0, vmem_bytes_dev=80.0)
+    serial = make_terms(**kw)
+    assert serial.overlap == {}
+    # no overlap: the overlapped bound degenerates to compute + levels
+    total = serial.compute_s + sum(serial.level_times().values())
+    assert serial.t_overlapped == pytest.approx(total)
+    # hide the dominant level entirely: bound = max(compute, next-worst
+    # hidden term) + remaining serial levels
+    t = serial.level_times()
+    worst = max(t, key=t.get)
+    ov = make_terms(**kw, overlap={worst: 1.0})
+    rest = sum(v for k, v in t.items() if k != worst)
+    assert ov.t_overlapped == pytest.approx(
+        max(serial.compute_s, t[worst]) + rest)
+    assert ov.t_overlapped <= serial.t_overlapped
+
+
+def test_time_budget_rows_overlap_columns():
+    betas = LevelBetas(pi=100.0, vmem=40.0, hbm=10.0, ici=5.0, dcn=2.0,
+                       host=1.0)
+    phases = {"decode": PhaseTraffic(flops=50.0, vmem=80.0, hbm=30.0,
+                                     wall_s=9.0, steps=4, tokens=4)}
+    rows = time_budget_rows(phases, betas, dispatch_s_per_step=0.25)
+    assert all(len(r) == len(TIME_BUDGET_HEADER) for r in rows)
+    ov_rows = time_budget_rows(phases, betas, dispatch_s_per_step=0.25,
+                               overlap={"vmem": 1.0})
+    assert all(len(r) == len(TIME_BUDGET_OVERLAP_HEADER) for r in ov_rows)
+    assert TIME_BUDGET_OVERLAP_HEADER[:len(TIME_BUDGET_HEADER)] \
+        == TIME_BUDGET_HEADER
+    # the historical columns are byte-identical; only the two overlap
+    # columns are appended
+    for r, ov_r in zip(rows, ov_rows):
+        assert ov_r[:len(TIME_BUDGET_HEADER)] == r
+
+
+def test_pipeline_pricing_shrinks_vmem_only():
+    """pipeline="double" collapses the per-block query re-read to one
+    fetch — the VMEM pricing drops, everything else (HBM, swap) is
+    untouched, and the default stays exactly the GOLDEN values."""
+    for arch in sorted(GOLDEN):
+        cfg = smoke(get_config(arch))
+        L, B, ps, T = 24, 2, 8, 4
+        assert attn_kernel_vmem_bytes(cfg, L, ps, pipeline="double") < \
+            attn_kernel_vmem_bytes(cfg, L, ps)
+        assert decode_token_vmem_bytes(cfg, L, B, ps, pipeline="double") < \
+            decode_token_vmem_bytes(cfg, L, B, ps)
+        assert verify_step_vmem_bytes(cfg, L, T, B, ps,
+                                      pipeline="double") < \
+            verify_step_vmem_bytes(cfg, L, T, B, ps)
+        assert decode_token_bytes(cfg, L, B) == GOLDEN[arch][0]
+        assert decode_token_vmem_bytes(cfg, L, B, ps) == GOLDEN[arch][1]
+
+
+def test_overlapped_levels_from_engine_config():
+    from repro.serve.crosscheck import overlapped_levels
+    assert overlapped_levels(EngineConfig()) == []
+    assert overlapped_levels(EngineConfig(pipeline="double")) == ["vmem"]
+    assert overlapped_levels(EngineConfig(overlap="ring")) == ["ici"]
+    assert overlapped_levels(
+        EngineConfig(pipeline="double", overlap="ring")) == ["vmem", "ici"]
+
+
 def test_time_budget_rows_render_unbound_levels():
     betas = LevelBetas(pi=100.0, vmem=40.0, hbm=10.0, ici=5.0, dcn=2.0,
                        host=1.0)
@@ -195,6 +296,30 @@ def test_matching_cache_roundtrips(tmp_path):
     assert again.source == "measured"
     assert again.peak_flops == pytest.approx(first.peak_flops)
     assert again.level_bw == first.level_bw
+    assert again.overlap == first.overlap
+
+
+def test_schema3_cache_carries_overlap_fractions(tmp_path):
+    """Schema 3 added the measured compute/transfer overlap fractions:
+    the probe always exercises the host DMA engine, the JSON roundtrips
+    the dict, and a pre-overlap (schema-2 shaped) cache is foreign — it
+    warns and falls back instead of loading with silently-missing
+    overlap."""
+    assert CACHE_SCHEMA == 3
+    cache = tmp_path / "microbench.json"
+    res = run_microbench(cache_path=str(cache), quick=True)
+    assert "host" in res.overlap
+    assert all(0.0 <= v <= 1.0 for v in res.overlap.values())
+    d = json.loads(cache.read_text())
+    assert d["overlap"] == res.overlap
+    assert d["fingerprint"]["schema"] == 3
+    # forge the previous schema's fingerprint: same machine, older layout
+    d["fingerprint"]["schema"] = 2
+    del d["overlap"]
+    cache.write_text(json.dumps(d))
+    with pytest.warns(UserWarning, match="falling back to the analytic"):
+        stale = run_microbench(cache_path=str(cache))
+    assert stale.source == "analytic" and stale.overlap == {}
 
 
 # --------------------------------------------------------------------------
@@ -267,15 +392,17 @@ def test_dispatch_overhead_positive_and_cached():
 # Pricing <-> artifact cross-checks (VMEM kernel walk, host swap pack)
 # --------------------------------------------------------------------------
 
+@pytest.mark.parametrize("pipeline", ["off", "double"])
 @pytest.mark.parametrize("arch", ["qwen3-0.6b", "deepseek-v2-236b"])
-def test_vmem_and_host_crosscheck_ratios(arch):
-    eng, _ = _smoke_engine(arch)
+def test_vmem_and_host_crosscheck_ratios(arch, pipeline):
+    eng, _ = _smoke_engine(arch, pipeline=pipeline)
     rng = np.random.default_rng(0)
     for _ in range(2):
         eng.submit(rng.integers(0, eng.cfg.vocab_size, 5).astype(np.int32),
                    GenerateConfig(max_new_tokens=4))
     eng.step()
-    cv = crosscheck_vmem(eng)
+    cv = crosscheck_vmem(eng)       # prices the engine's own pipeline mode
+    assert cv["pipeline"] == pipeline
     assert cv["vmem_ratio"] == pytest.approx(1.0)
     assert cv["analytic_vmem_bytes"] > 0
     ch = crosscheck_host(eng)

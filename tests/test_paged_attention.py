@@ -171,6 +171,137 @@ def test_verify_t1_matches_decode_reference():
                                rtol=1e-6, atol=1e-7)
 
 
+# -- double-buffered page streaming (pipeline="double") --------------------
+# The manual-DMA kernels prefetch page b+1 into a second VMEM slab while
+# computing page b; the schedule changes, the per-block f32 op sequence
+# does not — so parity with the single-buffered kernel is BITWISE, not
+# approximate, across ragged page counts and idle trash lanes.
+
+@pytest.mark.parametrize("B,KV,G,hd,page,nb", [
+    (3, 2, 2, 16, 4, 5),      # GQA, odd block count
+    (2, 4, 1, 32, 8, 3),      # MHA (G=1)
+    (4, 1, 8, 64, 16, 2),     # MQA-style single KV head
+])
+def test_gqa_pipeline_double_bitwise(B, KV, G, hd, page, nb):
+    P = 1 + B * nb
+    ks = jax.random.split(jax.random.key(B * 7 + nb), 3)
+    q = jax.random.normal(ks[0], (B, KV, G, hd))
+    kp = jax.random.normal(ks[1], (P, page, KV, hd))
+    vp = jax.random.normal(ks[2], (P, page, KV, hd))
+    bt, pos = _ragged_tables(np.random.RandomState(B), B, nb, page, P)
+    kw = dict(scale=hd ** -0.5, soft_cap=25.0, interpret=True)
+    off = pa.paged_attention(q, kp, vp, bt, pos, **kw)
+    dbl = pa.paged_attention(q, kp, vp, bt, pos, pipeline="double", **kw)
+    np.testing.assert_array_equal(np.asarray(dbl), np.asarray(off))
+    ref = pa.paged_attention_reference(q, kp, vp, bt, pos, scale=hd ** -0.5,
+                                       soft_cap=25.0)
+    np.testing.assert_allclose(np.asarray(dbl), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("B,H,r,dr,page,nb", [
+    (3, 4, 32, 8, 4, 4),
+    (2, 8, 64, 16, 8, 2),
+])
+def test_mla_pipeline_double_bitwise(B, H, r, dr, page, nb):
+    P = 1 + B * nb
+    ks = jax.random.split(jax.random.key(B * 13 + nb), 4)
+    ql = jax.random.normal(ks[0], (B, H, r))
+    qr = jax.random.normal(ks[1], (B, H, dr))
+    cp = jax.random.normal(ks[2], (P, page, r))
+    rp = jax.random.normal(ks[3], (P, page, dr))
+    bt, pos = _ragged_tables(np.random.RandomState(B + 1), B, nb, page, P)
+    kw = dict(scale=(r + dr) ** -0.5, interpret=True)
+    off = pa.mla_paged_attention(ql, qr, cp, rp, bt, pos, **kw)
+    dbl = pa.mla_paged_attention(ql, qr, cp, rp, bt, pos,
+                                 pipeline="double", **kw)
+    np.testing.assert_array_equal(np.asarray(dbl), np.asarray(off))
+    ref = pa.mla_paged_attention_reference(ql, qr, cp, rp, bt, pos,
+                                           scale=(r + dr) ** -0.5)
+    np.testing.assert_allclose(np.asarray(dbl), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("B,T,KV,G,hd,page,nb", [
+    (3, 4, 2, 2, 16, 4, 5),
+    (2, 5, 1, 8, 64, 16, 2),
+])
+def test_gqa_verify_pipeline_double_bitwise(B, T, KV, G, hd, page, nb):
+    P = 1 + B * nb
+    ks = jax.random.split(jax.random.key(B * 17 + T), 3)
+    q = jax.random.normal(ks[0], (B, T, KV, G, hd))
+    kp = jax.random.normal(ks[1], (P, page, KV, hd))
+    vp = jax.random.normal(ks[2], (P, page, KV, hd))
+    bt, pos = _ragged_tables(np.random.RandomState(B + T), B, nb, page, P)
+    kw = dict(scale=hd ** -0.5, soft_cap=20.0, interpret=True)
+    off = pa.paged_attention_verify(q, kp, vp, bt, pos, **kw)
+    dbl = pa.paged_attention_verify(q, kp, vp, bt, pos, pipeline="double",
+                                    **kw)
+    np.testing.assert_array_equal(np.asarray(dbl), np.asarray(off))
+    ref = pa.paged_attention_verify_reference(q, kp, vp, bt, pos,
+                                              scale=hd ** -0.5,
+                                              soft_cap=20.0)
+    np.testing.assert_allclose(np.asarray(dbl), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("B,T,H,r,dr,page,nb", [
+    (3, 3, 4, 32, 8, 4, 4),
+    (2, 5, 8, 64, 16, 8, 2),
+])
+def test_mla_verify_pipeline_double_bitwise(B, T, H, r, dr, page, nb):
+    P = 1 + B * nb
+    ks = jax.random.split(jax.random.key(B * 19 + T), 4)
+    ql = jax.random.normal(ks[0], (B, T, H, r))
+    qr = jax.random.normal(ks[1], (B, T, H, dr))
+    cp = jax.random.normal(ks[2], (P, page, r))
+    rp = jax.random.normal(ks[3], (P, page, dr))
+    bt, pos = _ragged_tables(np.random.RandomState(B + T + 1), B, nb, page,
+                             P)
+    kw = dict(scale=(r + dr) ** -0.5, interpret=True)
+    off = pa.mla_paged_attention_verify(ql, qr, cp, rp, bt, pos, **kw)
+    dbl = pa.mla_paged_attention_verify(ql, qr, cp, rp, bt, pos,
+                                        pipeline="double", **kw)
+    np.testing.assert_array_equal(np.asarray(dbl), np.asarray(off))
+    ref = pa.mla_paged_attention_verify_reference(ql, qr, cp, rp, bt, pos,
+                                                  scale=(r + dr) ** -0.5)
+    np.testing.assert_allclose(np.asarray(dbl), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_pipeline_double_idle_trash_lane_is_finite():
+    """The double-buffered kernel prefetches through all-trash block
+    tables too (every DMA source is the trash page); idle lanes must
+    stay finite and bitwise-match the single-buffered kernel."""
+    B, KV, G, hd, page, nb = 2, 2, 2, 16, 4, 3
+    P = 1 + B * nb
+    ks = jax.random.split(jax.random.key(5), 3)
+    q = jax.random.normal(ks[0], (B, KV, G, hd))
+    kp = jax.random.normal(ks[1], (P, page, KV, hd))
+    vp = jax.random.normal(ks[2], (P, page, KV, hd))
+    bt = jnp.zeros((B, nb), jnp.int32)        # every lane idle -> trash page
+    pos = jnp.zeros((B,), jnp.int32)
+    off = pa.paged_attention(q, kp, vp, bt, pos, scale=hd ** -0.5,
+                             interpret=True)
+    dbl = pa.paged_attention(q, kp, vp, bt, pos, scale=hd ** -0.5,
+                             interpret=True, pipeline="double")
+    assert np.isfinite(np.asarray(dbl)).all()
+    np.testing.assert_array_equal(np.asarray(dbl), np.asarray(off))
+
+
+def test_pipeline_rejects_unknown_mode():
+    B, KV, G, hd, page, nb = 2, 2, 2, 16, 4, 3
+    P = 1 + B * nb
+    q = jnp.zeros((B, KV, G, hd))
+    kp = jnp.zeros((P, page, KV, hd))
+    vp = jnp.zeros((P, page, KV, hd))
+    bt = jnp.zeros((B, nb), jnp.int32)
+    pos = jnp.zeros((B,), jnp.int32)
+    with pytest.raises(ValueError):
+        pa.paged_attention(q, kp, vp, bt, pos, scale=1.0, interpret=True,
+                           pipeline="triple")
+
+
 def test_registry_resolves_backends():
     impls = ops.registered_kernels()
     assert {"paged_attention", "mla_paged_attention",
@@ -190,11 +321,36 @@ def test_registry_resolves_backends():
         ops.resolve("paged_attention", "mosaic")
 
 
+def test_registry_resolves_pipeline():
+    """pipeline="double" binds into the pallas partial of pipelined ops
+    only; the jnp reference has no pages to stream, and non-paged ops
+    reject the request outright."""
+    fn = ops.resolve("paged_attention", "pallas", pipeline="double")
+    assert fn.func is pa.paged_attention
+    assert fn.keywords["pipeline"] == "double"
+    assert ops.resolve("paged_attention", "pallas").keywords["pipeline"] \
+        == "off"
+    # the reference path ignores the schedule — there is nothing to stream
+    assert ops.resolve("paged_attention", "jnp", pipeline="double") \
+        is pa.paged_attention_reference
+    # flash_attention is not a paged streaming kernel
+    with pytest.raises(ValueError):
+        ops.resolve("flash_attention", "pallas", pipeline="double")
+    with pytest.raises(ValueError):
+        ops.resolve("paged_attention", "pallas", pipeline="triple")
+    assert ops.default_pipeline() == "off"
+    with ops.use_pipeline("double"):
+        assert ops.resolve("mla_paged_attention", "pallas") \
+            .keywords["pipeline"] == "double"
+    assert ops.default_pipeline() == "off"
+
+
 # -- end-to-end: engine tokens, pallas dispatch vs jnp reference ------------
 
-def _engine_tokens(cfg, params, backend, arch_seed):
+def _engine_tokens(cfg, params, backend, arch_seed, pipeline="off"):
     eng = Engine(cfg, params, EngineConfig(
-        num_slots=2, page_size=4, max_len=32, kernel_backend=backend))
+        num_slots=2, page_size=4, max_len=32, kernel_backend=backend,
+        pipeline=pipeline))
     gen = GenerateConfig(max_new_tokens=6)
     prompts = [np.asarray(jax.random.randint(
         jax.random.key(arch_seed + i), (5 + i,), 0, cfg.vocab_size))
@@ -214,6 +370,20 @@ def test_engine_pallas_dispatch_byte_identical(arch, seed):
     tok_jnp = _engine_tokens(cfg, params, "jnp", seed)
     tok_pallas = _engine_tokens(cfg, params, "pallas", seed)
     assert tok_jnp == tok_pallas
+
+
+@pytest.mark.parametrize("arch,seed", [("qwen3-0.6b", 100),
+                                       ("deepseek-v2-236b", 200)])
+def test_engine_pipeline_double_byte_identical(arch, seed):
+    """End-to-end: the engine with the double-buffered page walk emits
+    byte-identical greedy tokens to the single-buffered pallas path AND
+    the jnp reference — GQA decode and MLA latent decode."""
+    cfg = smoke(get_config(arch))
+    params = init_params(cfg, jax.random.key(0))
+    tok_jnp = _engine_tokens(cfg, params, "jnp", seed)
+    tok_dbl = _engine_tokens(cfg, params, "pallas", seed,
+                             pipeline="double")
+    assert tok_jnp == tok_dbl
 
 
 def test_engine_pallas_dispatch_mla_absorb_equivalent():
