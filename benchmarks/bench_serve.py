@@ -405,6 +405,145 @@ def run_mesh_compare(args, mesh, kwargs) -> None:
         raise RuntimeError("single-device ledger charged collective bytes")
 
 
+def _run_router_bench(args, dp: int, tp: int, roles, kwargs) -> dict:
+    """One router-driven pass over the standard smoke prompts: build a
+    Cluster + Router at the given roles, serve everything, and return
+    outputs + migration/TTFT accounting in baseline-comparable form."""
+    from repro.serve import Cluster, Router
+
+    cfg = smoke(get_config(args.arch))
+    params = init_params(cfg, jax.random.key(0))
+    chip = TPU_V5E if kwargs["chip_name"] == "tpu_v5e" else HOST_CPU_FALLBACK
+    ecfg = EngineConfig(num_slots=kwargs["slots"],
+                        page_size=kwargs["page_size"],
+                        max_len=kwargs["prompt_len"] + kwargs["new_tokens"],
+                        prefill_chunk=kwargs["prefill_chunk"], chip=chip,
+                        kernel_backend=kwargs["backend"],
+                        prefix_cache=args.prefix_cache,
+                        num_pages=args.num_pages or None,
+                        watermark=args.watermark,
+                        preempt_mode=args.preempt)
+    cluster = Cluster(cfg, params, ecfg, mesh_shape=(dp, tp), roles=roles)
+    router = Router(cluster)
+    prompts = _prompts(cfg, kwargs["requests"], kwargs["prompt_len"],
+                       repetitive=False)
+    gen = GenerateConfig(max_new_tokens=kwargs["new_tokens"])
+    reqs = [router.submit(p, gen) for p in prompts]
+    t0 = time.perf_counter()
+    done = router.run()
+    dt = time.perf_counter() - t0
+    n_tokens = sum(len(r.generated) for r in done)
+    led = cluster.aggregate_ledger()
+    cap = capacity_report(cluster)
+    out = {
+        "generated": [list(r.generated) for r in
+                      sorted(done, key=lambda r: r.request_id)],
+        "requests": reqs, "done": done, "cluster": cluster,
+        "router": router, "ledger": led, "cfg": cfg, "ecfg": ecfg,
+        "tokens_per_s": n_tokens / dt,
+        "migrations": led.migrations,
+        "migration_bytes": led.migration_bytes,
+        "migration_pages": led.migration_pages,
+        "pages_peak": cap["pages_peak"],
+        "capacity_max_batch": cap["capacity_max_batch"],
+    }
+    tag = "disagg" if "prefill" in roles.roles else "mixed"
+    emit(f"serve_router_{args.arch}_dp{dp}_{tag}",
+         dt / max(n_tokens, 1) * 1e6,
+         f"tok/s={out['tokens_per_s']:.1f};migrations={led.migrations};"
+         f"mig_kB={led.migration_bytes / 1e3:.1f};"
+         f"colocated={int(cluster.colocated)}")
+    return out
+
+
+def run_router_compare(args, mesh, kwargs) -> None:
+    """The --router leg (CI: one-device colocated AND forced-8-device
+    dp=2): serve the same prompts through (a) the single engine, (b) a
+    mixed-role dp-replica cluster, (c) a disaggregated prefill/decode
+    cluster with KV-page migration — asserting the serving tier's
+    acceptance bars:
+
+    * greedy outputs byte-identical across all three paths,
+    * the disaggregated run migrates every request and its ledger
+      charges nonzero wire bytes on the RoleConfig link,
+    * analytic migration bytes (scheduler.slot_swap_bytes applied to the
+      migrated pages) within 15% of the measured packed-snapshot sizes,
+    * TTFT telescopes exactly into queue + prefill + first-decode,
+    * the roofline can NAME migration: a synthetic migration-heavy
+      variant of the fleet terms binds on the "migration" roof."""
+    import dataclasses as _dc
+
+    from repro.serve import RoleConfig
+    from repro.serve.scheduler import kv_line_bytes, state_bytes
+
+    kw = dict(kwargs, warmup=False)
+    base = run_bench(args.arch, mesh=(1, 1), **kw)
+    dp = max(mesh[0], 2)
+    mixed = _run_router_bench(args, dp, mesh[1], RoleConfig.mixed(dp),
+                              kwargs)
+    n_pf = max(dp // 2, 1)
+    disagg = _run_router_bench(
+        args, dp, mesh[1],
+        RoleConfig.disaggregated(n_pf, dp - n_pf), kwargs)
+    for tag, out in (("mixed", mixed), ("disagg", disagg)):
+        if out["generated"] != base["generated"]:
+            raise RuntimeError(
+                f"router {tag} greedy outputs diverged from the single "
+                f"engine: {out['generated']} vs {base['generated']}")
+    if mixed["migrations"] != 0:
+        raise RuntimeError("mixed-role cluster migrated on the happy "
+                           f"path: {mixed['migrations']} moves")
+    if not (disagg["migrations"] >= len(disagg["done"])
+            and disagg["migration_bytes"] > 0):
+        raise RuntimeError(
+            "disaggregated run did not migrate every request: "
+            f"{disagg['migrations']} moves, "
+            f"{disagg['migration_bytes']:.0f}B")
+    cfg = disagg["cfg"]
+    analytic = (disagg["migration_pages"] * args.page_size
+                * kv_line_bytes(cfg)
+                + disagg["migrations"] * state_bytes(cfg))
+    ratio = analytic / disagg["migration_bytes"]
+    if not 1 / 1.15 <= ratio <= 1.15:
+        raise RuntimeError(
+            "analytic migration bytes disagree with the measured packed "
+            f"snapshots beyond 15%: {analytic:.0f}B vs "
+            f"{disagg['migration_bytes']:.0f}B (ratio {ratio:.3f})")
+    for r in disagg["done"]:
+        bd = r.ttft_breakdown()
+        resid = abs(sum(bd.values()) - r.ttft)
+        if not resid < 1e-6:
+            raise RuntimeError(
+                f"req {r.request_id}: TTFT breakdown does not telescope "
+                f"(residual {resid:.2e}s): {bd} vs ttft {r.ttft:.6f}")
+    t = disagg["cluster"].roofline_terms()
+    if t.migration_bytes_dev <= 0 or "migration" not in t.roofs():
+        raise RuntimeError("fleet terms carry no migration roof despite "
+                           f"{disagg['migrations']} migrations")
+    # synthetic migration-heavy workload: same fleet terms, snapshots
+    # scaled until the wire can no longer hide behind HBM — the binding
+    # roof must NAME migration (the disaggregation-cost early warning)
+    heavy_bytes = (10.0 * t.flops_dev * t.chip.level_bw(t.migration_link)
+                   / min(t.roofs().values()))
+    heavy = _dc.replace(t, migration_bytes_dev=heavy_bytes,
+                        dcn_wire_bytes_dev=(
+                            t.dcn_wire_bytes_dev
+                            - t.migration_bytes_dev + heavy_bytes))
+    if heavy.binding_roof != "migration":
+        raise RuntimeError(
+            "synthetic migration-heavy terms bind on "
+            f"{heavy.binding_roof!r}, not 'migration' "
+            f"(roofs: {heavy.roofs()})")
+    print(f"[bench_serve/router] dp={dp} tp={mesh[1]} "
+          f"({'colocated' if disagg['cluster'].colocated else 'sub-mesh'}"
+          f" replicas): mixed {mixed['tokens_per_s']:.1f} tok/s, disagg "
+          f"{disagg['tokens_per_s']:.1f} tok/s, "
+          f"{disagg['migrations']} migrations "
+          f"({disagg['migration_bytes'] / 1e3:.1f} kB packed KV, analytic"
+          f"/measured {ratio:.3f}); outputs byte-identical, TTFT "
+          "telescopes, synthetic heavy workload binds on 'migration'")
+
+
 def run_overlap_compare(args, mesh) -> dict:
     """The ``--smoke --overlap``/``--pipeline`` leg (CI): serial engine
     vs overlapped twin at the same mesh, through the fenced steady-state
@@ -495,6 +634,16 @@ def main(argv=None):
                     help="admission slack as a fraction of pool pages")
     ap.add_argument("--preempt", choices=["swap", "recompute"],
                     default="swap")
+    ap.add_argument("--router", action="store_true",
+                    help="multi-replica serving leg (serve/router.py): "
+                         "single engine vs mixed-role cluster vs "
+                         "disaggregated prefill/decode cluster with "
+                         "KV-page migration, asserting byte-identical "
+                         "outputs, ledger-vs-measured migration bytes "
+                         "within 15%, a telescoping TTFT breakdown, and "
+                         "a nameable 'migration' binding roof.  dp comes "
+                         "from --mesh (default 2, colocated on one "
+                         "device)")
     ap.add_argument("--mesh", default=None,
                     help="device mesh 'dp,tp' (serve/shard.py): runs the "
                          "tensor-parallel engine AND the single-device "
@@ -550,6 +699,15 @@ def main(argv=None):
             if err:
                 raise SystemExit(f"--mesh {args.mesh}: {err}")
         run_overlap_compare(args, mesh)
+        return
+    if args.router:
+        mesh = parse_mesh(args.mesh) if args.mesh else (2, 1)
+        if mesh[1] > 1:
+            cfg = smoke(get_config(args.arch))
+            err = tp_sharding_error(cfg, mesh[1])
+            if err:
+                raise SystemExit(f"--mesh {args.mesh}: {err}")
+        run_router_compare(args, mesh, kwargs)
         return
     if args.mesh is not None:
         mesh = parse_mesh(args.mesh)

@@ -28,18 +28,21 @@ ALL = {
     "layernorm": bench_layernorm.main,         # paper appendix
     "arch_roofline": bench_arch_roofline.main,  # 40-cell §Roofline table
     "serve": lambda smoke=False, mesh=None, hierarchy=False,
-        overlap=False, pipeline=False:
+        overlap=False, pipeline=False, router=False:
         bench_serve.main(
             (["--smoke"] if smoke else [])
             + (["--mesh", mesh] if mesh else [])
             + (["--hierarchy"] if hierarchy else [])
             + (["--overlap"] if overlap else [])
-            + (["--pipeline"] if pipeline else [])),
+            + (["--pipeline"] if pipeline else [])
+            + (["--router"] if router else [])),
     # (--smoke also covers the speculative ngram pass and the block-pool
     # shared-prefix capacity assertion; --mesh dp,tp runs the sharded
     # engine against the single-device baseline; --hierarchy runs the
     # hierarchical/time-based roofline assertions; --overlap/--pipeline
-    # run the serial-vs-overlapped comparison leg; see bench_serve.py)
+    # run the serial-vs-overlapped comparison leg; --router runs the
+    # multi-replica front door vs single engine with mixed AND
+    # disaggregated roles; see bench_serve.py)
 }
 
 _SMOKEABLE = ("serve",)
@@ -62,6 +65,11 @@ def main() -> None:
     ap.add_argument("--pipeline", action="store_true",
                     help="forwarded to the serve bench: double-buffered "
                          "page-walk comparison leg (with --smoke)")
+    ap.add_argument("--router", action="store_true",
+                    help="forwarded to the serve bench: multi-replica "
+                         "router leg — single engine vs mixed vs "
+                         "disaggregated prefill/decode cluster (dp from "
+                         "--mesh, default 2 colocated)")
     args = ap.parse_args()
     failed = []
     names = [args.only] if args.only else list(ALL)
@@ -71,10 +79,10 @@ def main() -> None:
         try:
             if name == "serve" and (args.smoke or args.mesh
                                     or args.hierarchy or args.overlap
-                                    or args.pipeline):
+                                    or args.pipeline or args.router):
                 ALL[name](smoke=args.smoke, mesh=args.mesh,
                           hierarchy=args.hierarchy, overlap=args.overlap,
-                          pipeline=args.pipeline)
+                          pipeline=args.pipeline, router=args.router)
             elif args.smoke and name in _SMOKEABLE:
                 ALL[name](smoke=True)
             else:

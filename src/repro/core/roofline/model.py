@@ -79,6 +79,18 @@ class RooflineTerms:
     vmem_bytes_dev: float = 0.0
     host_bytes_dev: float = 0.0
 
+    # cross-replica KV-page migration (serve/router disaggregation): bytes
+    # that ride the ``migration_link`` wire level ("dcn" across replica
+    # groups, "ici" inside a pod) to move a packed SwapSnapshot from the
+    # prefill replica's pool to the decode replica's.  These bytes are
+    # ALSO included in that link's ``*_wire_bytes_dev`` total (so the
+    # per-level time terms price them once); :meth:`roofs` splits them
+    # back out into their own "migration" ceiling so :attr:`binding_roof`
+    # can name migration — not the link's collective traffic — as the
+    # binding term on a migration-heavy workload.
+    migration_bytes_dev: float = 0.0
+    migration_link: str = "dcn"
+
     # model-level accounting
     model_flops_total: Optional[float] = None   # e.g. 6*N*D for training
 
@@ -120,6 +132,15 @@ class RooflineTerms:
     @property
     def host_s(self) -> float:
         return _safe_time(self.host_bytes_dev, self.chip.level_bw("host"))
+
+    @property
+    def migration_s(self) -> float:
+        """Wire time of the KV-migration share of the step, priced at the
+        carrying link's beta.  An attribution view, NOT an extra additive
+        term: the bytes already sit inside that link's wire total, so
+        ``terms()``/``t_upper`` count them exactly once."""
+        return _safe_time(self.migration_bytes_dev,
+                          self.chip.level_bw(self.migration_link))
 
     def level_bytes(self, level: str) -> float:
         """Per-device bytes this step moved on one memory level."""
@@ -238,15 +259,30 @@ class RooflineTerms:
         I_level * beta_level.  The paper builds exactly this family for
         its NUMA scopes — the ceiling that sits lowest is the one that
         binds.  Zero-byte levels are omitted (unbound), so the dict never
-        contains an inf/NaN ceiling."""
+        contains an inf/NaN ceiling.
+
+        KV-migration bytes get their OWN ceiling: the carrying link's roof
+        is computed over that link's bytes *excluding* the migration share
+        (omitted if nothing else rides the link), and a separate
+        ``migration`` roof prices the migration bytes at the link's beta —
+        otherwise a migration-bound step would be reported as plain
+        "dcn"-bound and the remedy (route locally / co-locate roles) would
+        be indistinguishable from collective traffic."""
         out = {
             "compute": self.chip.flops_for(self.dtype),
             "hbm": self.arithmetic_intensity * self.chip.hbm_bw,
         }
         for level in ("vmem", "ici", "dcn", "host"):
-            roof = self.level_roof(level)
-            if roof is not None:
-                out[level] = roof
+            b, bw = self.level_bytes(level), self.chip.level_bw(level)
+            if level == self.migration_link:
+                b -= self.migration_bytes_dev
+            if b > 0 and bw > 0:
+                out[level] = self.flops_dev / b * bw
+        if self.migration_bytes_dev > 0:
+            bw = self.chip.level_bw(self.migration_link)
+            if bw > 0:
+                out["migration"] = (self.flops_dev
+                                    / self.migration_bytes_dev * bw)
         return out
 
     @property
@@ -259,7 +295,8 @@ class RooflineTerms:
 
     @property
     def binding_roof(self) -> str:
-        """Name of the ceiling that binds: compute | hbm | ici | dcn."""
+        """Name of the ceiling that binds:
+        compute | hbm | vmem | ici | dcn | host | migration."""
         r = self.roofs()
         return min(r, key=r.get)
 
@@ -318,6 +355,8 @@ def make_terms(
     model_flops_total: Optional[float] = None,
     vmem_bytes_dev: float = 0.0,
     host_bytes_dev: float = 0.0,
+    migration_bytes_dev: float = 0.0,
+    migration_link: str = "dcn",
     overlap: Optional[Dict[str, float]] = None,
 ) -> RooflineTerms:
     return RooflineTerms(
@@ -332,6 +371,8 @@ def make_terms(
         model_flops_total=model_flops_total,
         vmem_bytes_dev=vmem_bytes_dev,
         host_bytes_dev=host_bytes_dev,
+        migration_bytes_dev=migration_bytes_dev,
+        migration_link=migration_link,
         chip=scope.chip,
         overlap=dict(overlap or {}),
     )

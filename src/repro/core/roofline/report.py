@@ -88,6 +88,34 @@ COMM_HEADER = [
 ]
 
 
+def migration_row(label: str, t: RooflineTerms) -> List[str]:
+    """One row of the KV-migration roofline table: the migration bytes a
+    step moved cross-replica, the link that carried them (dcn across
+    replica groups, ici inside a pod), the migration intensity and the
+    ceiling it imposes next to the binding roof.  A step that migrated
+    nothing renders ``unbound`` — the migration roof simply is not there."""
+    roofs = t.roofs()
+    b = t.migration_bytes_dev
+    intensity = t.flops_dev / b if b > 0 else float("inf")
+    return [
+        label,
+        t.scope,
+        t.migration_link,
+        _fmt_si(b, "B") if b > 0 else "0B",
+        "unbound" if intensity == float("inf") else f"{intensity:.1f}",
+        _fmt_si(roofs["migration"], "F/s") if "migration" in roofs
+        else "unbound",
+        _fmt_s(t.migration_s),
+        t.binding_roof,
+    ]
+
+
+MIGRATION_HEADER = [
+    "cell", "scope", "link", "mig bytes/dev", "I_mig", "mig roof",
+    "mig time", "binds",
+]
+
+
 # --------------------------------------------------------------------------
 # Hierarchical + time-based roofline tables (arXiv 2009.05257 / 2009.04598)
 # --------------------------------------------------------------------------

@@ -102,6 +102,19 @@ def main():
                          "blocking row-parallel psum epilogues with ring "
                          "collective matmuls (parallel/collectives.py; "
                          "tp > 1 meshes only)")
+    ap.add_argument("--router", action="store_true",
+                    help="serve through the multi-replica front door "
+                         "(serve/router.py): dp replica engines behind "
+                         "ledger-predicted load balancing.  Implied by "
+                         "--mesh dp,tp with dp > 1")
+    ap.add_argument("--roles", choices=["mixed", "disagg"], default="mixed",
+                    help="replica roles for --router: 'mixed' serves each "
+                         "request end to end, 'disagg' splits the fleet "
+                         "into prefill and decode replicas with KV-page "
+                         "migration between them (serve/cluster.py)")
+    ap.add_argument("--link", choices=["dcn", "ici"], default="dcn",
+                    help="wire level the migration snapshots are priced "
+                         "on (the 'migration' roofline term)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -141,6 +154,8 @@ def main():
         else:
             scfg = SpecConfig(k=args.spec_k, proposer="ngram",
                               adaptive=args.spec_k_adaptive)
+    if args.router or mesh_shape[0] > 1:
+        return _run_router(args, cfg, params, ecfg, scfg, mesh_shape, chip)
     engine = make_engine(cfg, params, ecfg, scfg, mesh_shape=mesh_shape)
 
     prompts = jax.random.randint(jax.random.key(1),
@@ -221,6 +236,74 @@ def main():
               f"(predicted {s['predicted_tokens_per_pass']:.2f}), "
               f"predicted memory-bound speedup "
               f"x{s['predicted_speedup']:.2f}")
+    first = min(done, key=lambda r: r.request_id)
+    print("[serve] first sequence:", first.generated[:16])
+
+
+def _run_router(args, cfg, params, ecfg, scfg, mesh_shape, chip):
+    """The multi-replica tier: Cluster + Router over dp replica engines,
+    with the TTFT decomposition, migration ledger and fleet capacity
+    report alongside the usual throughput numbers."""
+    from repro.serve import Cluster, RoleConfig, Router
+
+    if not supports_paging(cfg):
+        raise SystemExit(f"{cfg.name}: --router needs the paged decode "
+                         "path (decoder-only archs)")
+    dp = max(mesh_shape[0], 2 if args.roles == "disagg" else 1)
+    if args.roles == "disagg":
+        roles = RoleConfig.disaggregated(max(dp // 2, 1), dp - max(dp // 2, 1),
+                                         link=args.link)
+    else:
+        roles = RoleConfig.mixed(dp, link=args.link)
+    cluster = Cluster(cfg, params, ecfg, scfg,
+                      mesh_shape=(dp, mesh_shape[1]), roles=roles)
+    router = Router(cluster)
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(1), (args.batch, args.prompt_len), 0, cfg.vocab_size))
+    gen = GenerateConfig(max_new_tokens=args.new_tokens,
+                         temperature=args.temperature, top_k=args.top_k,
+                         top_p=args.top_p)
+    reqs = [router.submit(prompts[b], gen,
+                          rng=jax.random.fold_in(jax.random.key(7), b))
+            for b in range(args.batch)]
+    t0 = time.perf_counter()
+    done = router.run()
+    dt = time.perf_counter() - t0
+    n_new = sum(len(r.generated) for r in done)
+    where = "colocated" if cluster.colocated else "sub-meshes"
+    print(f"[serve/router] {len(done)} requests, {n_new} new tokens in "
+          f"{dt:.2f}s ({n_new / dt:.1f} tok/s) over dp={dp} "
+          f"tp={mesh_shape[1]} replicas ({where}, roles "
+          f"{','.join(roles.roles)})")
+    for r in sorted(done, key=lambda r: r.request_id)[:4]:
+        bd = r.ttft_breakdown()
+        print(f"[serve/router]   req {r.request_id}: "
+              f"{len(r.generated)} tokens ({r.finish_reason}), "
+              f"ttft={r.ttft * 1e3:.1f}ms = queue "
+              f"{bd['queue_wait_s'] * 1e3:.1f} + prefill "
+              f"{bd['prefill_s'] * 1e3:.1f} + first-decode "
+              f"{bd['first_decode_s'] * 1e3:.1f}, "
+              f"migrations={r.ledger.migrations}")
+    stats = router.stats()
+    print(f"[serve/router] migrations={router.migrations} "
+          f"({stats['migration_bytes'] / 1e3:.1f} kB packed KV over "
+          f"{roles.link}), ttft p50={stats['ttft_p50_s'] * 1e3:.1f}ms "
+          f"p95={stats['ttft_p95_s'] * 1e3:.1f}ms")
+    if router.migrations:
+        from repro.core.roofline.report import (MIGRATION_HEADER,
+                                                migration_row, text_table)
+        t = cluster.roofline_terms()
+        print(f"[serve/router] migration roofline on {chip.name}:")
+        print(text_table([migration_row("fleet decode", t)],
+                         MIGRATION_HEADER))
+    cap = capacity_report(cluster)
+    per = ", ".join(
+        f"r{r['replica']}({r['role']}) {r['pages_peak']}pk"
+        f"/{r['pages_in_use']}use" if r["live"] else
+        f"r{r['replica']}({r['role']}) idle" for r in cap["replicas"])
+    print(f"[serve/capacity] fleet pages peak={cap['pages_peak']}"
+          f"/{cap['pages_total']}, per-replica [{per}], cluster B_max="
+          f"{cap['capacity_max_batch']} on {chip.name}")
     first = min(done, key=lambda r: r.request_id)
     print("[serve] first sequence:", first.generated[:16])
 

@@ -57,6 +57,29 @@ def single_device_mesh() -> jax.sharding.Mesh:
     return make_mesh((1, 1), ("data", "model"))
 
 
+def dp_submeshes(dp: int, tp: int = 1) -> list:
+    """Slice the first ``dp * tp`` devices into ``dp`` independent
+    ``(1, tp)`` (data, model) meshes — one per serving replica.
+
+    Serving replicas never communicate through a collective (the router
+    moves requests, not activations), so each replica gets its OWN mesh
+    over its device row instead of a slice of one global mesh: its
+    shard_map steps compile against exactly tp devices and the ``data``
+    axis stays size 1 inside every replica.  Device rows follow the same
+    row-major (data, model) order ``make_host_mesh(dp, tp)`` would use,
+    so replica ``i`` owns the devices global-mesh row ``i`` would."""
+    dp, tp = int(dp), int(tp)
+    if dp < 1 or tp < 1:
+        raise ValueError(f"dp_submeshes({dp}, {tp}): axes must be >= 1")
+    devs = jax.devices()
+    need = dp * tp
+    if len(devs) < need:
+        raise ValueError(f"need {need} devices, have {len(devs)}")
+    rows = np.asarray(devs[:need], dtype=object).reshape(dp, 1, tp)
+    return [jax.sharding.Mesh(rows[i], ("data", "model"))
+            for i in range(dp)]
+
+
 def mesh_axis_sizes(mesh: jax.sharding.Mesh) -> dict:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 

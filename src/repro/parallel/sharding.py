@@ -113,6 +113,13 @@ DEFAULT = ShardingRules(DEFAULT_RULES)
 # The tied embedding table is force-replicated separately (the token
 # lookup needs every row); an untied head stays vocab-sharded and the
 # logits edge all-gathers (layers.logits_from_hidden).
+#
+# The ``data`` axis at serve time is REPLICA parallelism, not a sharding
+# axis: dp > 1 runs N independent engines, each on its own (1, tp)
+# sub-mesh (parallel.mesh.dp_submeshes) with fully replicated params and
+# its own page pool, behind the serve/router.py front door.  No rule here
+# ever maps a serve-decode dim onto ``data`` — requests move between
+# replicas (packed KV snapshots), activations never do.
 DECODE_TP_RULES = DEFAULT.override(
     kv_seq=((),), seq_sp=((),), seq_fb=((),),
     batch=((),), expert_cap=((),), experts=((),),

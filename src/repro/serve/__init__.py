@@ -1,9 +1,11 @@
 from . import sampling
 from .block_pool import BlockPool, PoolStats, chain_hash, token_chain_hashes
+from .cluster import Cluster, RoleConfig
 from .engine import Engine, EngineConfig, GenerateConfig, StaticEngine
 from .kv_cache import (PagedKVCache, SwapSnapshot, supports_paging,
                        supports_prefix_cache)
 from .proposer import DraftModelProposer, NgramProposer, Proposal
+from .router import Router
 from .scheduler import Request, RequestState, RooflineLedger, Scheduler
 from .shard import (ShardedEngine, ShardedSpecEngine, make_engine,
                     parse_mesh, supports_tp, tp_local_config,
@@ -13,6 +15,7 @@ from .spec import (SpecConfig, SpecEngine, adaptive_k,
                    supports_spec)
 
 __all__ = [
+    "Cluster", "RoleConfig", "Router",
     "Engine", "EngineConfig", "GenerateConfig", "StaticEngine",
     "BlockPool", "PoolStats", "chain_hash", "token_chain_hashes",
     "PagedKVCache", "SwapSnapshot", "supports_paging",

@@ -1,0 +1,194 @@
+"""Multi-replica serving cluster: dp independent engines on the data axis.
+
+The millions-of-users serving shape is not one bigger engine — it is N
+copies of the SAME engine (each with its own page pool, scheduler and
+roofline ledger) on the ``data`` axis of the ``(data, model)`` mesh,
+behind a front door that moves *requests* between them, never
+activations.  This module owns the replica fleet; serve/router.py owns
+the front door (admission control, ledger-predicted load balancing,
+KV-page migration policy).
+
+Replica placement
+-----------------
+Each replica runs on its own ``(1, tp)`` sub-mesh
+(parallel.mesh.dp_submeshes): a tp > 1 replica wraps its decode step in
+shard_map over its device row exactly as serve/shard.py does on the full
+mesh, a tp = 1 replica pins params + pool to its device with no wrapper
+(byte-identical to the parent Engine).  When the host has fewer devices
+than ``dp * tp`` (the 1-device CI leg) and tp = 1, the fleet *colocates*:
+every replica lives on the default device, still with its own pool and
+scheduler — the scheduling, migration and ledger math are identical,
+only the physical parallelism is simulated.
+
+Roles (disaggregated prefill/decode)
+------------------------------------
+:class:`RoleConfig` assigns each replica ``"mixed"`` (default),
+``"prefill"`` or ``"decode"``.  Prefill-only replicas run admission +
+prefill and commit the first token (it comes from the prefill logits);
+the router then migrates the request — its pages packed into ONE
+:class:`~repro.serve.kv_cache.SwapSnapshot` DMA (kv_cache.swap_out) — to
+a decode replica, where swap_in re-materializes the pages
+(re-deduplicating against that pool's prefix index).  The packed bytes
+are charged to the migration ledger as wire traffic on ``link`` ("dcn"
+across replica groups, "ici" inside a pod), so the roofline can name
+"migration" as the binding term when moving KV outweighs decoding it
+(RooflineTerms.roofs / binding_roof).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+import jax
+
+from repro.models.common import ModelConfig
+from repro.parallel.mesh import dp_submeshes
+
+from .engine import Engine, EngineConfig
+from .scheduler import RooflineLedger
+from .shard import make_engine
+from .spec import SpecConfig
+
+ROLES = ("mixed", "prefill", "decode")
+
+
+@dataclasses.dataclass(frozen=True)
+class RoleConfig:
+    """Per-replica role assignment plus the migration wire level.
+
+    ``roles[i]`` is replica i's job: ``"mixed"`` serves a request end to
+    end, ``"prefill"`` hands every request off after its first token,
+    ``"decode"`` only ever receives migrated (or rescued) requests.
+    ``link`` names the wire the packed snapshots ride — it prices the
+    migration roofline term, "dcn" for replica groups in different pods,
+    "ici" for in-pod disaggregation."""
+
+    roles: Tuple[str, ...]
+    link: str = "dcn"
+
+    def __post_init__(self):
+        bad = [r for r in self.roles if r not in ROLES]
+        if bad:
+            raise ValueError(f"unknown roles {bad}; pick from {ROLES}")
+        if self.link not in ("dcn", "ici"):
+            raise ValueError(f"migration link {self.link!r}: 'dcn'|'ici'")
+        if not any(r in ("mixed", "prefill") for r in self.roles):
+            raise ValueError("no prefill-capable replica: every request "
+                             "needs a 'mixed' or 'prefill' home")
+        if ("prefill" in self.roles
+                and not any(r in ("mixed", "decode") for r in self.roles)):
+            raise ValueError("prefill-only replicas need a 'decode' (or "
+                             "'mixed') replica to migrate into")
+
+    @classmethod
+    def mixed(cls, n: int, link: str = "dcn") -> "RoleConfig":
+        return cls(("mixed",) * n, link=link)
+
+    @classmethod
+    def disaggregated(cls, n_prefill: int, n_decode: int,
+                      link: str = "dcn") -> "RoleConfig":
+        return cls(("prefill",) * n_prefill + ("decode",) * n_decode,
+                   link=link)
+
+    @property
+    def disaggregates(self) -> bool:
+        return "prefill" in self.roles or "decode" in self.roles
+
+
+class Cluster:
+    """``dp`` replica engines over the data axis, one pool each.
+
+    ::
+
+        cl = Cluster(cfg, params, ecfg, mesh_shape=(2, 1),
+                     roles=RoleConfig.disaggregated(1, 1))
+        router = Router(cl)                      # serve/router.py
+        router.submit(prompt_ids, gen); done = router.run()
+
+    The cluster is deliberately dumb: it builds and owns the replicas
+    (sub-mesh placement, role table, fleet-level ledger aggregation) and
+    leaves every scheduling decision to the Router."""
+
+    def __init__(self, cfg: ModelConfig, params,
+                 ecfg: Optional[EngineConfig] = None,
+                 scfg: Optional[SpecConfig] = None,
+                 mesh_shape: Tuple[int, int] = (2, 1),
+                 roles: Optional[RoleConfig] = None,
+                 colocate: Optional[bool] = None):
+        dp, tp = int(mesh_shape[0]), int(mesh_shape[1])
+        if dp < 1 or tp < 1:
+            raise ValueError(f"mesh {mesh_shape}: axes must be >= 1")
+        roles = roles or RoleConfig.mixed(dp)
+        if len(roles.roles) != dp:
+            raise ValueError(f"RoleConfig names {len(roles.roles)} "
+                             f"replicas for a dp={dp} mesh")
+        self.cfg, self.ecfg = cfg, ecfg or EngineConfig()
+        self.roles = roles
+        self.dp, self.tp = dp, tp
+        n_dev = len(jax.devices())
+        if colocate is None:
+            colocate = n_dev < dp * tp
+        if colocate and tp > 1:
+            raise ValueError(f"cannot colocate tp={tp} replicas: each "
+                             f"needs {tp} real devices ({n_dev} present)")
+        self.colocated = bool(colocate)
+        if self.colocated:
+            submeshes: List[Any] = [None] * dp
+            shapes = [(1, 1)] * dp
+        else:
+            submeshes = dp_submeshes(dp, tp)
+            shapes = [(dp, tp)] * dp
+        self.replicas = [
+            make_engine(cfg, params, self.ecfg, scfg,
+                        mesh_shape=shapes[i], submesh=submeshes[i],
+                        replica_id=i)
+            for i in range(dp)
+        ]
+
+    # -- role / capability queries ----------------------------------------
+
+    def role(self, i: int) -> str:
+        return self.roles.roles[i]
+
+    def prefill_capable(self) -> List[int]:
+        """Replica indexes that may receive fresh requests."""
+        return [i for i, r in enumerate(self.roles.roles)
+                if r in ("mixed", "prefill")]
+
+    def decode_capable(self) -> List[int]:
+        """Replica indexes that may decode (migration destinations).
+        With decode-only replicas present, they alone receive the
+        prefill handoffs — that is the disaggregation point."""
+        dec = [i for i, r in enumerate(self.roles.roles) if r == "decode"]
+        if dec:
+            return dec
+        return [i for i, r in enumerate(self.roles.roles) if r == "mixed"]
+
+    # -- fleet state -------------------------------------------------------
+
+    def has_work(self) -> bool:
+        return any(eng._sched is not None and eng._sched.has_work()
+                   for eng in self.replicas)
+
+    def aggregate_ledger(self) -> RooflineLedger:
+        """One ledger over every request the fleet has seen — the
+        cluster-level roofline view (its terms() carries the migration
+        wire bytes on the RoleConfig link)."""
+        agg = RooflineLedger()
+        agg.migration_link = self.roles.link
+        for eng in self.replicas:
+            led = eng.aggregate_ledger()
+            for f in dataclasses.fields(RooflineLedger):
+                v = getattr(led, f.name)
+                if isinstance(v, str):
+                    continue
+                setattr(agg, f.name, getattr(agg, f.name) + v)
+        return agg
+
+    def roofline_terms(self):
+        """Fleet-aggregate decode RooflineTerms on the target chip: the
+        per-replica scope (each replica is an independent tp-wide step;
+        migration bytes ride the RoleConfig link)."""
+        return self.aggregate_ledger().terms(self.cfg, self.ecfg.chip,
+                                             n_chips=max(self.tp, 1))

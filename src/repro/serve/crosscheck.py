@@ -131,7 +131,14 @@ def capacity_report(engine) -> Dict:
     ``effective_batch`` (live decode slots) compared against it says
     whether the deployment is slot-limited or capacity-limited; every
     deduplicated or on-demand-deferred page moves B_max's denominator.
+
+    A :class:`~repro.serve.cluster.Cluster` aggregates: per-replica rows
+    (each replica owns its own pool, so pages in use / peak are
+    per-replica facts) plus cluster-level sums — B_max adds across
+    replicas because each brings its own HBM.
     """
+    if hasattr(engine, "replicas"):
+        return _cluster_capacity_report(engine)
     if engine._kv is None:
         raise ValueError("engine has no live pool; submit work or reset()")
     kv, cfg, chip = engine._kv, engine.cfg, engine.ecfg.chip
@@ -159,6 +166,39 @@ def capacity_report(engine) -> Dict:
         "effective_batch": len(active),
         "capacity_max_batch": cap_batch,
     }
+
+
+_CAP_SUM_KEYS = ("pages_total", "pages_in_use", "pages_peak", "pages_cached",
+                 "pages_deduped", "cow_copies", "evictions", "preemptions",
+                 "pool_bytes", "effective_batch", "capacity_max_batch")
+
+
+def _cluster_capacity_report(cluster) -> Dict:
+    """Fleet capacity view: one row per live replica (role-tagged), sums
+    on the page/batch axes.  Replicas that never received work carry no
+    pool and are listed but not summed (``replicas_live``)."""
+    per = []
+    for i, eng in enumerate(cluster.replicas):
+        row: Dict = {"replica": i, "role": cluster.role(i)}
+        if eng._kv is None:
+            row["live"] = False
+        else:
+            row.update(capacity_report(eng))
+            row["live"] = True
+        per.append(row)
+    live = [r for r in per if r["live"]]
+    if not live:
+        raise ValueError("no replica has a live pool; route work through "
+                         "the Router (or engine.reset()) first")
+    out: Dict = {k: sum(r[k] for r in live) for k in _CAP_SUM_KEYS}
+    # per-chip facts are fleet-invariant (same cfg/ecfg on every replica)
+    for k in ("page_bytes", "params_bytes", "pages_per_request"):
+        out[k] = live[0][k]
+    agg = cluster.aggregate_ledger()
+    out.update(replicas=per, replicas_live=len(live),
+               migrations=int(agg.migrations),
+               migration_bytes=float(agg.migration_bytes))
+    return out
 
 
 def crosscheck_collectives(engine) -> Dict:

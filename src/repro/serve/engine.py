@@ -309,6 +309,34 @@ class Engine:
                       submit_time=time.perf_counter())
         return self._sched.submit(req)
 
+    def enqueue(self, req: Request) -> Request:
+        """Queue a pre-built :class:`Request` WITHOUT re-numbering it —
+        the Router front door stamps cluster-unique ids and the submit
+        wall-clock before dispatching to a replica, and replica-local
+        re-numbering would collide the ids the stream keys on."""
+        self._ensure(req.budget)
+        if req.submit_time == 0.0:
+            req.submit_time = time.perf_counter()
+        req.dispatch_time = time.perf_counter()
+        return self._sched.submit(req, keep_id=True)
+
+    def export_request(self, req: Request, link: str = "dcn") -> Request:
+        """Detach a request for migration to another replica
+        (scheduler.detach: its pages pack into one SwapSnapshot, the
+        bytes charge the migration ledger on ``link``).  Subclasses
+        release engine-side companion state (the speculative proposer's
+        slot) before the scheduler lets go."""
+        return self._sched.detach(req, link=link)
+
+    def import_request(self, req: Request) -> Request:
+        """Adopt a migrated request: it queues with resume priority and
+        the next :meth:`step` re-materializes its snapshot into this
+        pool (re-deduplicating against the local prefix index) and
+        re-points the packed decode rows — the standard swap-resume
+        path, so the token stream continues byte-identically."""
+        self._ensure(req.budget)
+        return self._sched.attach(req)
+
     def step(self) -> List[Request]:
         """One scheduler iteration: admit (resuming preempted requests
         first), prefill one chunk per admitted request, one packed decode
@@ -429,8 +457,12 @@ class Engine:
         reqs += list(self._sched.preempted) + list(self._sched.waiting)
         for req in reqs:
             for f in dataclasses.fields(RooflineLedger):
-                setattr(agg, f.name,
-                        getattr(agg, f.name) + getattr(req.ledger, f.name))
+                v = getattr(req.ledger, f.name)
+                if isinstance(v, str):      # migration_link: carry, not sum
+                    if req.ledger.migration_bytes > 0:
+                        setattr(agg, f.name, v)
+                    continue
+                setattr(agg, f.name, getattr(agg, f.name) + v)
         return agg
 
     def hierarchy_report(self, betas=None, label: str = "decode") -> str:
@@ -518,6 +550,13 @@ class Engine:
             wall_s=t1 - t0, steps=1, tokens=n_new)
         req.prefill_pos = end
         if end == fill_len:
+            # post-fence stamp of the LAST chunk: closes the TTFT prefill
+            # segment (ttft_breakdown) — sampling the first token is the
+            # "first decode" segment that follows.  Gated on the first
+            # token: a recompute-resume re-prefill AFTER it must not move
+            # the stamp past token_times[0]
+            if not req.token_times:
+                req.prefill_end_time = t1
             # charge only the compute actually run: a prefix-cache hit
             # skipped the first ``prefill_skip`` tokens entirely
             req.ledger.prefill_flops += model_flops(cfg, fill_len, 1,

@@ -1,0 +1,272 @@
+"""Ledger-routed front door over a replica :class:`~repro.serve.cluster.Cluster`.
+
+The router is the piece of the serving tier the roofline ledger built up
+to: every placement decision is priced with the SAME analytic terms the
+per-request ledger reports (core/roofline).  A request's predicted cost
+is its prefill compute time plus its decode memory time on the target
+chip — prefill lives on the compute roof (``flops / pi``), decode on the
+HBM roof (``bytes / beta``) — and dispatch sends it to the
+prefill-capable replica carrying the least predicted outstanding
+seconds.  No measured feedback loop is needed for the smoke tier; the
+model IS the load estimate.
+
+Lifecycle of a request under disaggregation::
+
+    submit -> router queue -> dispatch (prefill replica enqueue)
+           -> prefill + first token(s) on the prefill replica
+           -> export_request: pages packed into ONE SwapSnapshot DMA
+           -> import_request on a decode replica (swap_in re-dedups
+              against ITS prefix index), decode continues byte-identically
+           -> finished, streamed
+
+The handoff bytes are charged to the migration ledger as wire traffic on
+the RoleConfig link ("dcn"/"ici"), so the cluster-level RooflineTerms can
+name "migration" as the binding roof when moving KV outweighs decoding
+it.  A mixed-role cluster never migrates on the happy path; it still
+*rescues* — a request preempted on a full replica whose own pool cannot
+resume it is migrated mid-decode to a replica that can.
+
+Note on the first tokens: the prefill replica commits token 1 (it falls
+out of the prefill logits) and — when the export happens after a full
+engine step — possibly token 2 (the same step runs one packed decode).
+Migration happens at a request-level commit boundary, and sampling state
+is request-level (rng key + len(generated)), so the stream stays
+byte-identical to a single-engine run wherever the cut lands.
+"""
+
+from __future__ import annotations
+
+import collections
+import time
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.roofline.hardware import chip_scope
+from repro.core.roofline.model import make_terms
+from repro.models.common import model_flops
+
+from .cluster import Cluster
+from .engine import GenerateConfig
+from .scheduler import Request, RequestState, decode_token_bytes
+
+
+class Router:
+    """Admission control + ledger-predicted load balancing + migration.
+
+    ``admit_depth`` bounds each replica's *waiting* queue (scheduler
+    backlog the replica has not placed yet); the router holds the rest in
+    its own queue — that boundary is what the TTFT queue-wait segment
+    measures (Request.ttft_breakdown).  Default: the replica's slot
+    count, one queued wave behind the running wave."""
+
+    def __init__(self, cluster: Cluster, admit_depth: Optional[int] = None):
+        self.cluster = cluster
+        self.admit_depth = (admit_depth if admit_depth is not None
+                            else max(cluster.ecfg.num_slots, 1))
+        if self.admit_depth < 1:
+            raise ValueError("admit_depth must be >= 1")
+        self._next_id = 0
+        self.queue: collections.deque = collections.deque()
+        self.requests: Dict[int, Request] = {}
+        self.finished: List[Request] = []
+        self.home: Dict[int, int] = {}           # request_id -> replica
+        self.migrations = 0
+        self.migration_bytes = 0.0
+        self._cost: Dict[int, Dict[str, float]] = {}
+        self._charged: Dict[int, Tuple[int, float]] = {}
+        self._load = [0.0] * cluster.dp
+        self._streamed: Dict[int, int] = {}      # request_id -> tokens sent
+
+    # -- front door --------------------------------------------------------
+
+    def submit(self, prompt, gen: GenerateConfig,
+               rng: Optional[jax.Array] = None) -> Request:
+        """Accept a request into the router queue (never straight into a
+        replica): ids are cluster-unique, the submit stamp starts the
+        TTFT clock here at the front door."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        req = Request(prompt=prompt, max_new_tokens=gen.max_new_tokens,
+                      temperature=gen.temperature, top_k=gen.top_k,
+                      top_p=gen.top_p, stop_token=gen.stop_token, rng=rng,
+                      request_id=self._next_id,
+                      submit_time=time.perf_counter())
+        self._next_id += 1
+        self.queue.append(req)
+        self.requests[req.request_id] = req
+        return req
+
+    def predicted_cost(self, req: Request) -> Dict[str, float]:
+        """Price a request with the ledger's own roofline terms, before
+        it runs: prefill seconds off the compute roof, decode seconds off
+        the HBM roof (per-token bytes at full slot occupancy — the
+        steady-state the balancer should pack toward — times the token
+        budget).  Returned split so migration can re-home the decode
+        share without re-pricing."""
+        cfg, ecfg = self.cluster.cfg, self.cluster.ecfg
+        t = make_terms(
+            scope=chip_scope(ecfg.chip), dtype=cfg.dtype,
+            flops_dev=model_flops(cfg, req.prompt_len, 1, "prefill"),
+            hbm_bytes_dev=(decode_token_bytes(cfg, req.prompt_len,
+                                              ecfg.num_slots)
+                           * max(req.max_new_tokens, 1)),
+            ici_wire_bytes_dev=0.0, dcn_wire_bytes_dev=0.0,
+        )
+        return {"prefill_s": t.compute_s, "decode_s": t.memory_s,
+                "total_s": t.compute_s + t.memory_s}
+
+    # -- load bookkeeping --------------------------------------------------
+
+    def _charge(self, rid: int, replica: int, amount: float) -> None:
+        self._load[replica] += amount
+        self._charged[rid] = (replica, amount)
+
+    def _discharge(self, rid: int) -> None:
+        rep, amt = self._charged.pop(rid, (None, 0.0))
+        if rep is not None:
+            self._load[rep] -= amt
+
+    def _pick(self, candidates: List[int]) -> int:
+        return min(candidates, key=lambda i: (self._load[i], i))
+
+    def _dispatch(self) -> int:
+        """Drain the router queue onto the least-loaded prefill-capable
+        replicas, stopping at the admission bound."""
+        sent = 0
+        while self.queue:
+            open_replicas = [
+                i for i in self.cluster.prefill_capable()
+                if (self.cluster.replicas[i]._sched is None
+                    or len(self.cluster.replicas[i]._sched.waiting)
+                    < self.admit_depth)
+            ]
+            if not open_replicas:
+                break
+            req = self.queue.popleft()
+            i = self._pick(open_replicas)
+            cost = self.predicted_cost(req)
+            self._cost[req.request_id] = cost
+            self._charge(req.request_id, i, cost["total_s"])
+            self.home[req.request_id] = i
+            self.cluster.replicas[i].enqueue(req)
+            sent += 1
+        return sent
+
+    # -- migration ---------------------------------------------------------
+
+    def _move(self, req: Request, src: int, dst: int) -> None:
+        mb0 = req.ledger.migration_bytes
+        self.cluster.replicas[src].export_request(
+            req, link=self.cluster.roles.link)
+        self.cluster.replicas[dst].import_request(req)
+        self.migrations += 1
+        self.migration_bytes += req.ledger.migration_bytes - mb0
+        self.home[req.request_id] = dst
+        self._discharge(req.request_id)
+        cost = self._cost.get(req.request_id)
+        self._charge(req.request_id, dst,
+                     cost["decode_s"] if cost else 0.0)
+
+    def _migrate(self) -> None:
+        """Disaggregation handoff: any request RUNNING on a prefill-only
+        replica with its first token committed moves to the least-loaded
+        decode replica."""
+        for i, eng in enumerate(self.cluster.replicas):
+            if self.cluster.role(i) != "prefill" or eng._sched is None:
+                continue
+            ready = [r for r in list(eng._sched.active.values())
+                     if r.state is RequestState.RUNNING and r.generated]
+            for req in ready:
+                self._move(req, i, self._pick(self.cluster.decode_capable()))
+
+    def _resumable(self, eng, req: Request) -> bool:
+        """Would this replica's pool take the request back right now?"""
+        kv = eng._kv
+        if kv is None or req.budget > kv.max_len:
+            return False
+        if req.swap_snapshot is not None:
+            return (kv.free_slot_count > 0
+                    and kv.swap_in_pages_needed(req.swap_snapshot)
+                    <= kv.available_page_count)
+        return kv.can_admit_tokens(req.fill_tokens,
+                                   reserve_pages=eng._sched.watermark_pages)
+
+    def _rescue(self) -> None:
+        """Mid-decode migration: a preempted request whose OWN replica
+        cannot resume it (pool still full) moves to a decode-capable
+        replica that can — preemption pressure spills across the fleet
+        instead of serializing on one pool."""
+        for i, eng in enumerate(self.cluster.replicas):
+            sched = eng._sched
+            if sched is None or not sched.preempted:
+                continue
+            for req in list(sched.preempted):
+                if self._resumable(eng, req):
+                    continue                     # home replica will resume
+                dests = [j for j in self.cluster.decode_capable()
+                         if j != i and self._resumable(
+                             self.cluster.replicas[j], req)]
+                if dests:
+                    self._move(req, i, self._pick(dests))
+
+    # -- serving loop ------------------------------------------------------
+
+    def step(self) -> List[Request]:
+        """One cluster iteration: dispatch, rescue stuck preemptees, one
+        engine step per replica with work, then the disaggregation
+        handoff.  Returns requests finished this step."""
+        self._dispatch()
+        self._rescue()
+        done: List[Request] = []
+        for eng in self.cluster.replicas:
+            if eng._sched is not None and eng._sched.has_work():
+                done.extend(eng.step())
+        self._migrate()
+        for req in done:
+            self._discharge(req.request_id)
+            self._cost.pop(req.request_id, None)
+            self.home.pop(req.request_id, None)
+            self.finished.append(req)
+        return done
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or self.cluster.has_work()
+
+    def run(self) -> List[Request]:
+        """Drain everything; returns requests finished by this call."""
+        n0 = len(self.finished)
+        while self.has_work():
+            self.step()
+        return self.finished[n0:]
+
+    def stream(self) -> Iterator[Tuple[int, int]]:
+        """Per-token streaming: step the cluster and yield
+        ``(request_id, token)`` as commits land, across all replicas and
+        across migrations (ids are cluster-unique, so a request's stream
+        is seamless through a handoff)."""
+        while self.has_work():
+            self.step()
+            for rid, req in self.requests.items():
+                sent = self._streamed.get(rid, 0)
+                for tok in req.generated[sent:]:
+                    yield rid, int(tok)
+                self._streamed[rid] = len(req.generated)
+
+    # -- reporting ---------------------------------------------------------
+
+    def stats(self) -> Dict[str, float]:
+        led = self.cluster.aggregate_ledger()
+        done = self.finished
+        ttfts = [r.ttft for r in done if r.token_times]
+        return {
+            "finished": float(len(done)),
+            "queued": float(len(self.queue)),
+            "migrations": float(self.migrations),
+            "migration_bytes": float(self.migration_bytes),
+            "ledger_migration_bytes": float(led.migration_bytes),
+            "ttft_p50_s": (float(np.percentile(ttfts, 50)) if ttfts
+                           else float("nan")),
+            "ttft_p95_s": (float(np.percentile(ttfts, 95)) if ttfts
+                           else float("nan")),
+        }

@@ -321,6 +321,14 @@ class RooflineLedger:
     swap_bytes: float = 0.0          # host<->device swap traffic
     prefix_cached_tokens: int = 0    # prompt tokens served from the index
     pages_peak: int = 0              # most physical pages held at once
+    # cross-replica KV-page migration (serve/cluster.py): each migration
+    # packs the slot's pages into one SwapSnapshot on the source replica
+    # and re-materializes it in the destination's pool; the bytes ride
+    # ``migration_link`` ("dcn" across replica groups, "ici" in-pod).
+    migrations: int = 0              # replica-to-replica moves
+    migration_bytes: float = 0.0     # packed-snapshot bytes moved
+    migration_pages: int = 0         # physical pages those snapshots held
+    migration_link: str = "dcn"      # wire level that carried them
 
     def add_decode_token(self, cfg: ModelConfig, context_len: int,
                          active_batch: int, ici_bytes: float = 0.0,
@@ -419,25 +427,37 @@ class RooflineLedger:
         walks the full compressed cache — and ``decode_ici_bytes`` is
         already the per-device wire traffic the sharded engine charged.
         The terms therefore expose the honest per-chip HBM roof next to
-        the ICI roof at this TP width (RooflineTerms.binding_roof)."""
+        the ICI roof at this TP width (RooflineTerms.binding_roof).
+
+        Migration bytes land on their carrying wire level
+        (``migration_link``) AND in ``migration_bytes_dev``, so the terms
+        grow a separate "migration" roof (RooflineTerms.roofs) that can
+        out-bind decode bandwidth on a migration-heavy workload."""
         n = max(n_chips, 1)
         hbm_dev = ((self.decode_bytes - self.decode_kv_bytes) / n
                    + self.decode_kv_bytes * kv_shard_fraction(cfg, n))
         # VMEM shards like HBM (the stream follows the KV pools, the
         # resident re-touches follow the heads) — scale by the same
         # per-device fraction; swap DMAs move each chip's pool shard, so
-        # the host level follows the KV shard fraction.
+        # the host level follows the KV shard fraction — and so do the
+        # packed migration snapshots (each chip ships its pool shard).
         vmem_dev = (self.decode_vmem_bytes * hbm_dev
                     / max(self.decode_bytes, 1.0))
+        mig_dev = self.migration_bytes * kv_shard_fraction(cfg, n)
         return make_terms(
             scope=tp_scope(chip, n_chips),
             dtype=cfg.dtype,
             flops_dev=self.decode_flops / n,
             hbm_bytes_dev=hbm_dev,
-            ici_wire_bytes_dev=self.decode_ici_bytes,
-            dcn_wire_bytes_dev=0.0,
+            ici_wire_bytes_dev=(self.decode_ici_bytes
+                                + (mig_dev if self.migration_link == "ici"
+                                   else 0.0)),
+            dcn_wire_bytes_dev=(mig_dev if self.migration_link == "dcn"
+                                else 0.0),
             vmem_bytes_dev=vmem_dev,
             host_bytes_dev=self.swap_bytes * kv_shard_fraction(cfg, n),
+            migration_bytes_dev=mig_dev,
+            migration_link=self.migration_link,
             model_flops_total=self.decode_flops,
         )
 
@@ -467,11 +487,23 @@ class Request:
     prefill_src: Optional[np.ndarray] = None
     swap_snapshot: Optional[Any] = None
     # latency trace: wall-clock stamps from the serving host.  submit_time
-    # is set by Engine.submit; one entry lands in token_times per committed
-    # token (speculative commits share one stamp — their inter-token gap
-    # really is ~0, that is the point).
+    # is set by Engine.submit (or the Router front door); one entry lands
+    # in token_times per committed token (speculative commits share one
+    # stamp — their inter-token gap really is ~0, that is the point).
+    # dispatch_time marks the router -> replica handoff (0.0 = the request
+    # never crossed a router), prefill_start_time the FIRST placement into
+    # a decode slot, prefill_end_time the fence after the last prefill
+    # chunk — so TTFT telescopes into queue wait + prefill + first decode
+    # (ttft_breakdown).
     submit_time: float = 0.0
+    dispatch_time: float = 0.0
+    prefill_start_time: float = 0.0
+    prefill_end_time: float = 0.0
     token_times: List[float] = dataclasses.field(default_factory=list)
+    # cross-replica migration state (serve/cluster.py): True between
+    # Scheduler.detach on the source and the swap-in on the destination —
+    # flips the restore's phase/ledger charge from "swap" to "migrate".
+    migrating: bool = False
 
     @property
     def prompt_len(self) -> int:
@@ -490,6 +522,29 @@ class Request:
         if not self.token_times:
             return float("nan")
         return self.token_times[0] - self.submit_time
+
+    def ttft_breakdown(self) -> Dict[str, float]:
+        """TTFT split into its three telescoping segments:
+
+            queue_wait_s   = prefill_start_time - submit_time
+            prefill_s      = prefill_end_time - prefill_start_time
+            first_decode_s = token_times[0] - prefill_end_time
+
+        The stamps bracket each other (submit -> first slot placement ->
+        post-prefill fence -> first commit), so the segments sum to
+        :attr:`ttft` exactly — no residual bucket.  Queue wait covers both
+        the router queue (submit -> dispatch) and the replica's admission
+        queue (dispatch -> placement); ``dispatch_time`` splits them when
+        a Router was in the path.  NaNs before the first commit."""
+        if not self.token_times:
+            nan = float("nan")
+            return {"queue_wait_s": nan, "prefill_s": nan,
+                    "first_decode_s": nan}
+        return {
+            "queue_wait_s": self.prefill_start_time - self.submit_time,
+            "prefill_s": self.prefill_end_time - self.prefill_start_time,
+            "first_decode_s": self.token_times[0] - self.prefill_end_time,
+        }
 
     def latency_stats(self) -> Dict[str, float]:
         """TTFT + inter-token latency percentiles for this request."""
@@ -559,9 +614,16 @@ class Scheduler:
     def watermark_pages(self) -> int:
         return int(math.ceil(self.watermark * (self.kv.num_pages - 1)))
 
-    def submit(self, req: Request) -> Request:
-        req.request_id = self._next_id
-        self._next_id += 1
+    def submit(self, req: Request, keep_id: bool = False) -> Request:
+        """Queue a request.  ``keep_id`` preserves a caller-assigned id
+        (the Router stamps cluster-unique ids before dispatch — replica
+        schedulers must not re-number them) and keeps the local counter
+        clear of it so direct submits never collide."""
+        if keep_id:
+            self._next_id = max(self._next_id, req.request_id + 1)
+        else:
+            req.request_id = self._next_id
+            self._next_id += 1
         req.state = RequestState.WAITING
         self.waiting.append(req)
         return req
@@ -584,6 +646,11 @@ class Scheduler:
                 req.ledger.prefix_cached_tokens, req.prefill_pos)
         else:
             req.state = RequestState.RUNNING
+        if req.prefill_start_time == 0.0:
+            # first placement into a slot: the TTFT queue-wait segment
+            # ends here (kept across preemption round-trips — only the
+            # first placement bounds the queue)
+            req.prefill_start_time = time.perf_counter()
         req.ledger.pages_peak = max(req.ledger.pages_peak,
                                     self.kv.slot_pages(slot))
 
@@ -600,10 +667,18 @@ class Scheduler:
             if slot is None:
                 return False
             jax.block_until_ready(self.kv.pools)
-            self.phases["swap"].add(host=float(snap.nbytes),
-                                    wall_s=time.perf_counter() - t0)
+            if req.migrating:
+                # restore leg of a cross-replica migration: the wire
+                # bytes were charged at detach; the restore DMA is host
+                # traffic on THIS replica, phase "migrate" not "swap"
+                self.phases["migrate"].add(host=float(snap.nbytes),
+                                           wall_s=time.perf_counter() - t0)
+                req.migrating = False
+            else:
+                self.phases["swap"].add(host=float(snap.nbytes),
+                                        wall_s=time.perf_counter() - t0)
+                req.ledger.swap_bytes += snap.nbytes
             req.swap_snapshot = None
-            req.ledger.swap_bytes += snap.nbytes
             self._place(req, slot, prefilling=False)
             return True
         fill = req.fill_tokens
@@ -662,6 +737,56 @@ class Scheduler:
         req.ledger.preemptions += 1
         self.preempt_count += 1
         self.preempted.append(req)
+
+    def detach(self, req: Request, link: str = "dcn") -> Request:
+        """Remove a request from this replica for migration to another
+        (serve/cluster.py): pack its pages into one :class:`SwapSnapshot`
+        (the single-DMA swap path) if it still holds a slot, or adopt the
+        snapshot a preemption already parked (mid-decode migration), and
+        charge the packed bytes to the migration ledger as wire traffic
+        on ``link`` ("dcn" across replica groups, "ici" in-pod).  The
+        caller hands the request to the destination's :meth:`attach`.
+
+        A recompute-mode preemptee carries tokens, not pages — it
+        migrates for free (the destination re-prefills) and charges no
+        migration bytes."""
+        assert req.state in (RequestState.RUNNING, RequestState.PREEMPTED), (
+            req.state)
+        if req.state is RequestState.RUNNING:
+            del self.active[req.slot]
+            t0 = time.perf_counter()
+            snap = self.kv.swap_out(req.slot)
+            wall = time.perf_counter() - t0
+            req.swap_snapshot = snap
+            req.slot = -1
+            req.state = RequestState.PREEMPTED
+        else:
+            if req in self.preempted:
+                self.preempted.remove(req)
+            snap = req.swap_snapshot          # pack DMA already charged
+            wall = 0.0
+            if snap is None:                  # recompute-mode preemptee
+                return req
+        req.migrating = True
+        req.ledger.migrations += 1
+        req.ledger.migration_bytes += float(snap.nbytes)
+        req.ledger.migration_pages += int(snap.n_blocks)
+        req.ledger.migration_link = link
+        self.phases["migrate"].add(host=float(snap.nbytes), wall_s=wall,
+                                   **{link: float(snap.nbytes)})
+        return req
+
+    def attach(self, req: Request) -> Request:
+        """Adopt a detached request from another replica: keep its
+        cluster-unique id clear of the local counter and queue it with
+        resume priority.  The next :meth:`admit` re-materializes its
+        snapshot into THIS pool — re-deduplicating against the local
+        prefix index (kv_cache.swap_in) — or re-prefills its snapshotted
+        context (recompute-mode preemptee)."""
+        self._next_id = max(self._next_id, req.request_id + 1)
+        req.state = RequestState.PREEMPTED
+        self.preempted.append(req)
+        return req
 
     def preempt_victim(self) -> Optional[Request]:
         """Newest-admitted running request — the standard last-in victim

@@ -32,11 +32,17 @@ the ICI ceiling next to the HBM one (``binding_roof``), and
 serve/crosscheck.crosscheck_collectives validates the charged wire bytes
 against the all-reduce / all-gather ops in the compiled shard_map HLO.
 
-Scope notes: ``dp`` (data-parallel serving replicas) is parsed but must
-be 1 for now — replica engines need per-replica page pools and a request
-router, a separate subsystem; MoE FFNs need expert-parallel dispatch and
-are gated off (``tp_sharding_error``); recurrent mixers carry per-slot
-state rows that have no head dim to shard.
+Scope notes: ``dp`` (data-parallel serving replicas) runs as N
+INDEPENDENT engines, each on its own ``(1, tp)`` sub-mesh
+(parallel.mesh.dp_submeshes) behind the ledger-routed front door in
+serve/cluster.py + serve/router.py — replicas exchange requests (packed
+KV snapshots over DCN/ICI), never activations, so no collective spans
+the ``data`` axis.  Constructing a single engine with ``dp > 1`` and no
+sub-mesh still raises: one engine cannot BE two replicas — build a
+``serve.cluster.Cluster``.  MoE FFNs need expert-parallel dispatch and
+are gated off (``tp_sharding_error``) — the same route-by-cost problem
+the Router solves over ``data``, replayed over ``model``; recurrent
+mixers carry per-slot state rows that have no head dim to shard.
 """
 
 from __future__ import annotations
@@ -52,7 +58,8 @@ from jax.experimental.shard_map import shard_map
 from repro.models import model_param_defs, paged_cache_defs
 from repro.models.common import ModelConfig
 from repro.parallel import sharding as shd
-from repro.parallel.mesh import MODEL_AXIS, make_host_mesh
+from repro.parallel.mesh import (MODEL_AXIS, make_host_mesh,
+                                 mesh_axis_sizes)
 
 from . import sampling
 from .engine import Engine, EngineConfig
@@ -86,8 +93,10 @@ def tp_sharding_error(cfg: ModelConfig, tp: int) -> Optional[str]:
         return (f"{cfg.name}: recurrent mixers {sorted(set(bad))} keep "
                 "per-slot state rows with no head dim to shard")
     if any(b.ffn == "moe" for b in cfg.block_pattern):
-        return (f"{cfg.name}: MoE FFNs need expert-parallel dispatch "
-                "(future PR); tensor-parallel decode shards dense FFNs")
+        return (f"{cfg.name}: MoE FFNs need expert-parallel dispatch — "
+                "the serve/router.py route-by-cost problem over the "
+                "model axis (future PR); tensor-parallel decode shards "
+                "dense FFNs")
     if cfg.n_heads % tp:
         return f"{cfg.name}: n_heads {cfg.n_heads} not divisible by tp={tp}"
     if (any(b.mixer == "attn" for b in cfg.block_pattern)
@@ -152,20 +161,42 @@ class _ShardedStepMixin:
     build the mesh, place params/pools, and re-wrap the parents' jitted
     step bodies in shard_map on every ``reset()``."""
 
-    def _init_mesh(self, mesh_shape: Tuple[int, int]) -> None:
+    def _init_mesh(self, mesh_shape: Tuple[int, int],
+                   submesh: Optional[Any] = None,
+                   replica_id: int = 0) -> None:
         dp, tp = int(mesh_shape[0]), int(mesh_shape[1])
         if dp < 1 or tp < 1:
             raise ValueError(f"mesh {mesh_shape}: axes must be >= 1")
-        if dp != 1:
+        if dp != 1 and submesh is None:
             raise NotImplementedError(
-                "data-parallel serving replicas need per-replica page "
-                "pools and a request router; this subsystem shards "
-                "tensor-parallel only (--mesh 1,tp)")
+                "dp > 1 serving replicas are independent engines behind "
+                "a router — one engine cannot be two replicas.  Build a "
+                "serve.cluster.Cluster: it slices the (data, model) mesh "
+                "into per-replica sub-meshes (parallel.mesh.dp_submeshes) "
+                "and hands each engine its own via submesh=")
         self.dp, self.tp = dp, tp
+        self.replica_id = int(replica_id)
         self.mesh = None
-        if tp == 1:
+        self._replica_device = None
+        if submesh is not None:
+            sizes = mesh_axis_sizes(submesh)
+            if sizes.get("model", 1) != tp or sizes.get("data", 1) != 1:
+                raise ValueError(
+                    f"replica submesh axes {sizes} do not match "
+                    f"(data=1, model={tp})")
+            if tp == 1:
+                # single-device replica: pin params (and, on reset, the
+                # pool) to the submesh's device — no shard_map, so the
+                # step stays byte-identical to the parent Engine's
+                dev = submesh.devices.reshape(-1)[0]
+                self.params = jax.device_put(self.params, dev)
+                self._replica_device = dev
+                return
+            self.mesh = submesh
+        elif tp == 1:
             return
-        self.mesh = make_host_mesh(data=dp, model=tp)
+        else:
+            self.mesh = make_host_mesh(data=dp, model=tp)
         self.cfg_local = tp_local_config(self.cfg, tp,
                                          overlap=self.ecfg.overlap)
         self._param_specs = param_pspecs(self.cfg, self.mesh)
@@ -181,6 +212,10 @@ class _ShardedStepMixin:
         super().reset(num_slots=num_slots, max_len=max_len)
         if self.mesh is not None:
             self._apply_mesh()
+        elif self._replica_device is not None:
+            # tp=1 replica on its own device: the pool follows the params
+            self._kv.pools = jax.device_put(self._kv.pools,
+                                            self._replica_device)
 
     def _step_collective_bytes(self, n_tokens: int) -> float:
         if self.mesh is None:
@@ -269,9 +304,10 @@ class ShardedEngine(_ShardedStepMixin, Engine):
 
     def __init__(self, cfg: ModelConfig, params,
                  ecfg: Optional[EngineConfig] = None,
-                 mesh_shape: Tuple[int, int] = (1, 1)):
+                 mesh_shape: Tuple[int, int] = (1, 1),
+                 submesh: Optional[Any] = None, replica_id: int = 0):
         super().__init__(cfg, params, ecfg)
-        self._init_mesh(mesh_shape)
+        self._init_mesh(mesh_shape, submesh=submesh, replica_id=replica_id)
 
 
 class ShardedSpecEngine(_ShardedStepMixin, SpecEngine):
@@ -285,18 +321,24 @@ class ShardedSpecEngine(_ShardedStepMixin, SpecEngine):
     def __init__(self, cfg: ModelConfig, params,
                  ecfg: Optional[EngineConfig] = None,
                  scfg: Optional[SpecConfig] = None,
-                 mesh_shape: Tuple[int, int] = (1, 1)):
+                 mesh_shape: Tuple[int, int] = (1, 1),
+                 submesh: Optional[Any] = None, replica_id: int = 0):
         super().__init__(cfg, params, ecfg, scfg)
-        self._init_mesh(mesh_shape)
+        self._init_mesh(mesh_shape, submesh=submesh, replica_id=replica_id)
 
 
 def make_engine(cfg: ModelConfig, params,
                 ecfg: Optional[EngineConfig] = None,
                 scfg: Optional[SpecConfig] = None,
-                mesh_shape: Tuple[int, int] = (1, 1)):
-    """Engine factory the launcher/bench share: spec config picks the
-    speculative subclass, mesh_shape > (1,1) picks the sharded ones."""
+                mesh_shape: Tuple[int, int] = (1, 1),
+                submesh: Optional[Any] = None, replica_id: int = 0):
+    """Engine factory the launcher/bench/cluster share: spec config picks
+    the speculative subclass, mesh_shape > (1,1) picks the sharded ones;
+    ``submesh`` pins one dp replica to its own (1, tp) device row
+    (serve/cluster.py passes parallel.mesh.dp_submeshes slices)."""
     if scfg is not None:
         return ShardedSpecEngine(cfg, params, ecfg, scfg,
-                                 mesh_shape=mesh_shape)
-    return ShardedEngine(cfg, params, ecfg, mesh_shape=mesh_shape)
+                                 mesh_shape=mesh_shape, submesh=submesh,
+                                 replica_id=replica_id)
+    return ShardedEngine(cfg, params, ecfg, mesh_shape=mesh_shape,
+                         submesh=submesh, replica_id=replica_id)

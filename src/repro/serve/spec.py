@@ -359,6 +359,16 @@ class SpecEngine(Engine):
         self.proposer.release(req)
         super()._preempt(req)
 
+    def export_request(self, req: Request, link: str = "dcn") -> Request:
+        # migrating a running target must free the proposer's mirrored
+        # slot here (a preempted one already released at preempt time);
+        # the acceptance EWMA leaves with the request — the destination's
+        # proposer re-admits from the committed context
+        if req.state is RequestState.RUNNING:
+            self.proposer.release(req)
+        self._accept_ewma.pop(req.request_id, None)
+        return super().export_request(req, link=link)
+
     def step(self) -> List[Request]:
         done = super().step()
         for req in done:

@@ -1,0 +1,319 @@
+"""Multi-replica serving tier: Cluster + Router + KV-page migration.
+
+The contracts pinned here are the serving tier's acceptance bars:
+
+* byte-identity — a request prefilled on replica A and decoded on
+  replica B (disaggregated roles, or a mid-decode rescue after
+  preemption) emits exactly the tokens a single engine would, for a GQA
+  arch and an MLA arch;
+* the migration ledger — packed-snapshot bytes land on the RoleConfig
+  wire, agree with the analytic page model within 15%, and surface as a
+  nameable "migration" roof in RooflineTerms;
+* the TTFT trace — queue wait + prefill + first decode telescope exactly
+  to the measured TTFT through the router front door;
+* fleet bookkeeping — capacity_report aggregates per-replica pools,
+  admission depth bounds replica backlogs, stream() yields every token
+  once across migrations.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke
+from repro.models import init_params
+from repro.models.common import BlockDef
+from repro.serve import (Cluster, Engine, EngineConfig, GenerateConfig,
+                         RoleConfig, Router)
+from repro.serve.crosscheck import capacity_report
+from repro.serve.scheduler import RequestState, kv_line_bytes, state_bytes
+
+
+@functools.lru_cache(maxsize=None)
+def _gqa():
+    cfg = smoke(get_config("qwen3-0.6b"))
+    return cfg, init_params(cfg, jax.random.key(0))
+
+
+@functools.lru_cache(maxsize=None)
+def _mla():
+    # MoE-free MLA config: expert-capacity cutoffs carry a batch
+    # -composition discontinuity, and migration changes which rows batch
+    # together — dense FFNs keep the byte-identity contract exact
+    cfg = smoke(get_config("deepseek-v2-236b"))
+    cfg = dataclasses.replace(
+        cfg, name="mla-dense-smoke", mla_absorb=True, n_experts=0,
+        moe_top_k=0, moe_d_ff=0, n_shared_experts=0, moe_first_dense=0,
+        n_layers=2, block_pattern=(BlockDef("mla", "dense"),))
+    return cfg, init_params(cfg, jax.random.key(0))
+
+
+def _prompts(cfg, n=3, seed=500):
+    return [np.asarray(jax.random.randint(
+        jax.random.key(seed + i), (5 + i,), 0, cfg.vocab_size), np.int32)
+        for i in range(n)]
+
+
+def _ecfg(**kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_len", 32)
+    return EngineConfig(**kw)
+
+
+def _single_tokens(cfg, params, ecfg, prompts, gen):
+    eng = Engine(cfg, params, ecfg)
+    reqs = [eng.submit(p, gen) for p in prompts]
+    eng.run()
+    return [list(r.generated) for r in reqs]
+
+
+def _router_run(cfg, params, ecfg, prompts, gen, roles, **router_kw):
+    cluster = Cluster(cfg, params, ecfg, mesh_shape=(len(roles.roles), 1),
+                      roles=roles)
+    router = Router(cluster, **router_kw)
+    reqs = [router.submit(p, gen) for p in prompts]
+    done = router.run()
+    assert len(done) == len(prompts)
+    return cluster, router, reqs
+
+
+# -- byte-identity across the disaggregation seam --------------------------
+
+@pytest.mark.parametrize("cfg_fn,seed", [(_gqa, 500), (_mla, 600)])
+def test_disaggregated_byte_identity(cfg_fn, seed):
+    """Prefill on replica A, decode on replica B: the packed-snapshot
+    handoff (swap_out -> wire -> swap_in) must not perturb one token,
+    for the GQA KV layout and the MLA latent layout."""
+    cfg, params = cfg_fn()
+    ecfg = _ecfg(prefix_cache=True)
+    prompts = _prompts(cfg, seed=seed)
+    gen = GenerateConfig(max_new_tokens=6)
+    base = _single_tokens(cfg, params, ecfg, prompts, gen)
+    _, router, reqs = _router_run(cfg, params, ecfg, prompts, gen,
+                                  RoleConfig.disaggregated(1, 1))
+    assert [list(r.generated) for r in reqs] == base
+    assert router.migrations >= len(prompts)
+    assert router.migration_bytes > 0
+    for r in reqs:
+        assert r.ledger.migrations >= 1
+        assert r.ledger.migration_link == "dcn"
+
+
+def test_mixed_cluster_byte_identity_no_migration():
+    cfg, params = _gqa()
+    ecfg = _ecfg()
+    prompts = _prompts(cfg)
+    gen = GenerateConfig(max_new_tokens=6)
+    base = _single_tokens(cfg, params, ecfg, prompts, gen)
+    _, router, reqs = _router_run(cfg, params, ecfg, prompts, gen,
+                                  RoleConfig.mixed(2))
+    assert [list(r.generated) for r in reqs] == base
+    assert router.migrations == 0 and router.migration_bytes == 0.0
+
+
+@pytest.mark.parametrize("cfg_fn,seed", [(_gqa, 700), (_mla, 800)])
+def test_mid_decode_migration_after_preemption(cfg_fn, seed):
+    """A request preempted mid-decode (pages parked in a SwapSnapshot)
+    migrates to another replica and finishes there byte-identically —
+    the detach path that adopts the parked snapshot instead of packing
+    a live slot."""
+    cfg, params = cfg_fn()
+    ecfg = _ecfg()
+    prompts = _prompts(cfg, n=1, seed=seed)
+    gen = GenerateConfig(max_new_tokens=8)
+    base = _single_tokens(cfg, params, ecfg, prompts, gen)
+    cluster = Cluster(cfg, params, ecfg, mesh_shape=(2, 1),
+                      roles=RoleConfig.mixed(2))
+    router = Router(cluster)
+    req = router.submit(prompts[0], gen)
+    router.step()                                # prefill + first tokens
+    src = cluster.replicas[router.home[req.request_id]]
+    assert req.state is RequestState.RUNNING and len(req.generated) >= 2
+    src._sched.preempt(req)                      # park pages mid-decode
+    assert req.swap_snapshot is not None
+    router._move(req, router.home[req.request_id],
+                 1 - router.home[req.request_id])
+    router.run()
+    assert list(req.generated) == base[0]
+    assert req.ledger.preemptions == 1
+    assert req.ledger.migrations == 1
+    assert req.ledger.migration_bytes > 0
+    assert router.migrations == 1
+
+
+# -- migration ledger vs the analytic page model ---------------------------
+
+def test_migration_bytes_match_analytic():
+    """Ledger-measured packed-snapshot bytes within 15% of the analytic
+    wire model (pages * page_bytes_per_token-line + per-move state) —
+    the acceptance bar that lets the migration roof be trusted without
+    instrumenting the interconnect."""
+    cfg, params = _gqa()
+    ecfg = _ecfg()
+    prompts = _prompts(cfg)
+    gen = GenerateConfig(max_new_tokens=6)
+    cluster, _, _ = _router_run(cfg, params, ecfg, prompts, gen,
+                                RoleConfig.disaggregated(1, 1))
+    led = cluster.aggregate_ledger()
+    assert led.migrations >= len(prompts) and led.migration_pages > 0
+    analytic = (led.migration_pages * ecfg.page_size * kv_line_bytes(cfg)
+                + led.migrations * state_bytes(cfg))
+    ratio = analytic / led.migration_bytes
+    assert 1 / 1.15 <= ratio <= 1.15, ratio
+
+
+def test_migration_roof_nameable():
+    """roofs() splits migration bytes out of the carrying link so the
+    binding roof can NAME migration; scaling the snapshots up must flip
+    the binding to 'migration' (the disaggregation early warning)."""
+    cfg, params = _gqa()
+    ecfg = _ecfg()
+    prompts = _prompts(cfg)
+    gen = GenerateConfig(max_new_tokens=6)
+    cluster, _, _ = _router_run(cfg, params, ecfg, prompts, gen,
+                                RoleConfig.disaggregated(1, 1))
+    t = cluster.roofline_terms()
+    assert t.migration_bytes_dev > 0
+    roofs = t.roofs()
+    assert "migration" in roofs
+    # the wire total prices migration bytes ONCE: the link's own roof
+    # entry is net of them
+    assert t.dcn_wire_bytes_dev >= t.migration_bytes_dev
+    heavy_bytes = (10.0 * t.flops_dev * t.chip.level_bw("dcn")
+                   / min(roofs.values()))
+    heavy = dataclasses.replace(
+        t, migration_bytes_dev=heavy_bytes,
+        dcn_wire_bytes_dev=(t.dcn_wire_bytes_dev - t.migration_bytes_dev
+                            + heavy_bytes))
+    assert heavy.binding_roof == "migration", heavy.roofs()
+    assert heavy.migration_s > t.migration_s
+
+
+# -- TTFT decomposition ----------------------------------------------------
+
+def test_ttft_breakdown_telescopes():
+    """queue_wait + prefill + first_decode == ttft exactly, through the
+    router front door; dispatch_time sits inside the queue segment."""
+    cfg, params = _gqa()
+    ecfg = _ecfg()
+    prompts = _prompts(cfg)
+    gen = GenerateConfig(max_new_tokens=4)
+    for roles in (RoleConfig.mixed(2), RoleConfig.disaggregated(1, 1)):
+        _, _, reqs = _router_run(cfg, params, ecfg, prompts, gen, roles)
+        for r in reqs:
+            bd = r.ttft_breakdown()
+            assert abs(sum(bd.values()) - r.ttft) < 1e-9
+            assert bd["queue_wait_s"] >= 0
+            assert bd["prefill_s"] >= 0
+            assert bd["first_decode_s"] >= 0
+            assert (r.submit_time <= r.dispatch_time
+                    <= r.prefill_start_time)
+
+
+def test_ttft_breakdown_single_engine():
+    """The trace also telescopes without a router (dispatch_time stays
+    0.0 — no front door was crossed)."""
+    cfg, params = _gqa()
+    eng = Engine(cfg, params, _ecfg())
+    req = eng.submit(_prompts(cfg, n=1)[0], GenerateConfig(max_new_tokens=4))
+    eng.run()
+    bd = req.ttft_breakdown()
+    assert abs(sum(bd.values()) - req.ttft) < 1e-9
+    assert req.dispatch_time == 0.0
+
+
+# -- fleet bookkeeping -----------------------------------------------------
+
+def test_capacity_report_aggregates_cluster():
+    cfg, params = _gqa()
+    ecfg = _ecfg()
+    prompts = _prompts(cfg)
+    gen = GenerateConfig(max_new_tokens=4)
+    cluster, _, _ = _router_run(cfg, params, ecfg, prompts, gen,
+                                RoleConfig.disaggregated(1, 1))
+    cap = capacity_report(cluster)
+    per = cap["replicas"]
+    assert [r["role"] for r in per] == ["prefill", "decode"]
+    live = [r for r in per if r["live"]]
+    assert len(live) == cap["replicas_live"] == 2
+    for key in ("pages_in_use", "pages_peak", "pages_total",
+                "capacity_max_batch"):
+        assert cap[key] == sum(r[key] for r in live)
+    assert cap["capacity_max_batch"] > 0
+    assert cap["migrations"] >= len(prompts)
+    assert cap["migration_bytes"] > 0
+    # single-engine report still works and carries no cluster keys
+    eng = Engine(cfg, params, ecfg)
+    eng.submit(prompts[0], gen)
+    eng.run()
+    assert "replicas" not in capacity_report(eng)
+
+
+def test_admission_depth_bounds_replica_backlog():
+    cfg, params = _gqa()
+    cluster = Cluster(cfg, params, _ecfg(), mesh_shape=(1, 1),
+                      roles=RoleConfig.mixed(1))
+    router = Router(cluster, admit_depth=1)
+    prompts = _prompts(cfg, n=4)
+    gen = GenerateConfig(max_new_tokens=4)
+    reqs = [router.submit(p, gen) for p in prompts]
+    router._dispatch()
+    assert len(router.queue) == 3          # one per replica backlog slot
+    assert len(cluster.replicas[0]._sched.waiting) == 1
+    done = router.run()
+    assert len(done) == 4
+    assert [list(r.generated) for r in reqs] == _single_tokens(
+        cfg, params, _ecfg(), prompts, gen)
+
+
+def test_stream_yields_every_token_once():
+    cfg, params = _gqa()
+    ecfg = _ecfg()
+    prompts = _prompts(cfg)
+    gen = GenerateConfig(max_new_tokens=5)
+    cluster = Cluster(cfg, params, ecfg, mesh_shape=(2, 1),
+                      roles=RoleConfig.disaggregated(1, 1))
+    router = Router(cluster)
+    reqs = [router.submit(p, gen) for p in prompts]
+    streamed = {r.request_id: [] for r in reqs}
+    for rid, tok in router.stream():
+        streamed[rid].append(tok)
+    for r in reqs:
+        assert streamed[r.request_id] == list(r.generated)
+    assert router.migrations >= len(prompts)
+
+
+def test_role_config_validation():
+    with pytest.raises(ValueError, match="unknown roles"):
+        RoleConfig(("mixed", "verifier"))
+    with pytest.raises(ValueError, match="prefill-capable"):
+        RoleConfig(("decode", "decode"))
+    with pytest.raises(ValueError, match="migrate into"):
+        RoleConfig(("prefill", "prefill"))
+    with pytest.raises(ValueError, match="link"):
+        RoleConfig(("mixed",), link="pcie")
+    assert RoleConfig.disaggregated(1, 2).roles == \
+        ("prefill", "decode", "decode")
+    assert not RoleConfig.mixed(3).disaggregates
+
+
+def test_cluster_validation():
+    cfg, params = _gqa()
+    with pytest.raises(ValueError, match="names 1 replicas"):
+        Cluster(cfg, params, _ecfg(), mesh_shape=(2, 1),
+                roles=RoleConfig.mixed(1))
+    with pytest.raises(ValueError, match="colocate"):
+        Cluster(cfg, params, _ecfg(), mesh_shape=(2, 4), colocate=True)
+
+
+def test_dp_submeshes_need_devices():
+    from repro.parallel.mesh import dp_submeshes
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="devices"):
+        dp_submeshes(n + 1, 1)
+    with pytest.raises(ValueError, match=">= 1"):
+        dp_submeshes(0, 1)

@@ -177,12 +177,40 @@ def test_sharded_engine_1x1_identity():
 
 
 def test_dp_gate_and_bad_mesh():
+    """dp > 1 without a replica sub-mesh is not a sharding problem — one
+    engine cannot be two replicas; the gate points at the Cluster."""
     cfg = smoke(get_config("qwen3-0.6b"))
     params = init_params(cfg, jax.random.key(0))
-    with pytest.raises(NotImplementedError):
+    with pytest.raises(NotImplementedError, match="Cluster"):
         ShardedEngine(cfg, params, mesh_shape=(2, 1))
     with pytest.raises(ValueError):
         ShardedEngine(cfg, params, mesh_shape=(0, 1))
+
+
+def test_dp_replica_submesh_engine():
+    """A (dp, tp) engine built WITH a replica sub-mesh is legal: it pins
+    params + pool to its replica device and serves byte-identically to
+    the plain engine (tp = 1 wraps nothing in shard_map)."""
+    from repro.parallel.mesh import dp_submeshes
+
+    cfg = smoke(get_config("qwen3-0.6b"))
+    params = init_params(cfg, jax.random.key(0))
+    ecfg = EngineConfig(num_slots=2, page_size=4, max_len=32)
+    gen = GenerateConfig(max_new_tokens=6)
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.key(40 + i), (5 + i,), 0, cfg.vocab_size))
+        for i in range(2)]
+
+    base = Engine(cfg, params, ecfg)
+    done_b = [base.submit(p, gen) for p in prompts]
+    base.run()
+
+    sub = dp_submeshes(1, 1)[0]
+    sh = ShardedEngine(cfg, params, ecfg, mesh_shape=(2, 1),
+                       submesh=sub, replica_id=1)
+    done_s = [sh.submit(p, gen) for p in prompts]
+    sh.run()
+    assert [r.generated for r in done_b] == [r.generated for r in done_s]
 
 
 # --------------------------------------------------------------------------
