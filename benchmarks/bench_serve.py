@@ -99,7 +99,7 @@ def run_bench(arch: str, *, requests: int, slots: int, page_size: int,
               prefix_cache: bool = False, num_pages: int = 0,
               watermark: float = 0.0, preempt: str = "swap",
               warmup: bool = True, mesh=(1, 1), pipeline: str = "off",
-              overlap: str = "none") -> dict:
+              overlap: str = "none", kv_dtype: str = None) -> dict:
     cfg = smoke(get_config(arch))
     params = init_params(cfg, jax.random.key(0))
     chip = TPU_V5E if chip_name == "tpu_v5e" else HOST_CPU_FALLBACK
@@ -112,7 +112,7 @@ def run_bench(arch: str, *, requests: int, slots: int, page_size: int,
                         kernel_backend=backend, prefix_cache=prefix_cache,
                         num_pages=num_pages or None, watermark=watermark,
                         preempt_mode=preempt, pipeline=pipeline,
-                        overlap=overlap)
+                        overlap=overlap, kv_dtype=kv_dtype)
     scfg = None
     if spec != "none":
         if spec == "draft":
@@ -144,7 +144,10 @@ def run_bench(arch: str, *, requests: int, slots: int, page_size: int,
     n_tokens = sum(r.ledger.decode_tokens + 1 for r in done)
     tps = n_tokens / dt
     mean_batch = float(np.mean([r.ledger.mean_batch for r in done]))
-    bytes_tok = decode_token_bytes(cfg, prompt_len + new_tokens // 2,
+    # the engine's cfg carries any EngineConfig.kv_dtype override, so the
+    # ceiling prices the quantized KV line when one is active
+    bytes_tok = decode_token_bytes(getattr(engine, "cfg", cfg),
+                                   prompt_len + new_tokens // 2,
                                    max(int(round(mean_batch)), 1))
     ceiling_tps = chip.hbm_bw / bytes_tok
     ledgers = [engine.roofline_terms(r) for r in done]
@@ -174,13 +177,16 @@ def run_bench(arch: str, *, requests: int, slots: int, page_size: int,
            "preemptions": cap["preemptions"],
            "capacity_max_batch": cap["capacity_max_batch"],
            "generated": [list(r.generated) for r in
-                         sorted(done, key=lambda r: r.request_id)]}
+                         sorted(done, key=lambda r: r.request_id)],
+           "engine": engine, "done": done}
     derived = (f"tok/s={tps:.1f};ceiling={ceiling_tps:.0f};"
                f"frac={frac:.4f};AI={ai:.2f};{bound};"
                f"mean_batch={mean_batch:.2f};ttft_ms={ttft * 1e3:.1f};"
                f"itl_p50_ms={itl_p50 * 1e3:.2f};"
                f"itl_p95_ms={itl_p95 * 1e3:.2f}")
     name = f"serve_{arch}_b{slots}"
+    if kv_dtype:
+        name += f"_{kv_dtype}"
     if tp > 1:
         name += f"_tp{tp}"
         derived += (f";tp={tp};ici_B={ici_dev:.0f};"
@@ -544,6 +550,69 @@ def run_router_compare(args, mesh, kwargs) -> None:
           "telescopes, synthetic heavy workload binds on 'migration'")
 
 
+def run_kv_dtype_compare(args, mesh, kwargs) -> None:
+    """The ``--kv-dtype`` leg (CI: ``--smoke --kv-dtype int8``, 1-device
+    and forced-8-device ``--mesh 1,2``): bf16 baseline vs quantized KV
+    pool over the same prompts, asserting the tentpole acceptance bars of
+    the quantized page walk:
+
+    * the quantized run's ledger arithmetic intensity is strictly above
+      the bf16 baseline's (decode is memory-bound, so shrinking the KV
+      line is a direct AI multiplier: I' ~= I * line/line_q),
+    * the Pallas engine's greedy outputs are byte-identical to the
+      identically-quantized jnp oracle (kernels quantize/dequantize with
+      the exact op sequence of the reference, so this is exact — no
+      tolerance),
+    * the analytic decode ledger agrees with the compiled-HLO byte count
+      within 15% (serve.crosscheck.crosscheck_decode) at the quantized
+      line size,
+    * with tp > 1: the sharded quantized engine emits the same tokens
+      and its ledger/HLO collective crosscheck holds within 15%."""
+    from repro.serve.crosscheck import crosscheck_decode
+
+    kw = dict(kwargs, warmup=False)
+    base = run_bench(args.arch, mesh=(1, 1), **kw)
+    quant = run_bench(args.arch, mesh=(1, 1), kv_dtype=args.kv_dtype,
+                      **dict(kw, backend="pallas"))
+    oracle = run_bench(args.arch, mesh=(1, 1), kv_dtype=args.kv_dtype,
+                       **dict(kw, backend="jnp"))
+    cd = crosscheck_decode(quant["engine"], requests=quant["done"])
+    print(f"[bench_serve/kv_dtype] {args.kv_dtype}: "
+          f"AI={quant['arithmetic_intensity']:.2f} vs bf16 "
+          f"{base['arithmetic_intensity']:.2f}, ledger/HLO bytes ratio "
+          f"{cd['bytes_ratio']:.3f}, B_max "
+          f"{quant['capacity_max_batch']} vs {base['capacity_max_batch']}")
+    if quant["generated"] != oracle["generated"]:
+        raise RuntimeError(
+            f"{args.kv_dtype} Pallas engine outputs diverged from the "
+            f"identically-quantized jnp oracle: {quant['generated']} vs "
+            f"{oracle['generated']}")
+    if not quant["arithmetic_intensity"] > base["arithmetic_intensity"]:
+        raise RuntimeError(
+            f"quantized ledger intensity did not exceed the bf16 "
+            f"baseline: {quant['arithmetic_intensity']} <= "
+            f"{base['arithmetic_intensity']}")
+    if abs(cd["bytes_ratio"] - 1.0) > 0.15:
+        raise RuntimeError(
+            "quantized decode ledger disagrees with the HLO byte count "
+            f"beyond 15%: ratio {cd['bytes_ratio']:.3f}")
+    if mesh[1] > 1:
+        shrd = run_bench(args.arch, mesh=mesh, kv_dtype=args.kv_dtype,
+                         **kw)
+        cc = shrd["collective_crosscheck"]
+        print(f"[bench_serve/kv_dtype] tp={mesh[1]}: collective "
+              f"crosscheck ratio {cc['ici_ratio']:.3f}")
+        if shrd["generated"] != quant["generated"]:
+            raise RuntimeError(
+                f"sharded {args.kv_dtype} outputs diverged from the "
+                f"single-device quantized engine: {shrd['generated']} vs "
+                f"{quant['generated']}")
+        if not 1 / 1.15 <= cc["ici_ratio"] <= 1.15:
+            raise RuntimeError(
+                "sharded quantized ledger collective bytes disagree with "
+                f"the HLO crosscheck beyond 15%: {cc['ici_ratio']:.3f}")
+
+
 def run_overlap_compare(args, mesh) -> dict:
     """The ``--smoke --overlap``/``--pipeline`` leg (CI): serial engine
     vs overlapped twin at the same mesh, through the fenced steady-state
@@ -602,6 +671,11 @@ def main(argv=None):
                     default=None,
                     help="paged-attention kernel backend (registry default"
                          " when omitted)")
+    ap.add_argument("--kv-dtype", choices=["bf16", "int8", "fp8_e4m3"],
+                    default=None,
+                    help="KV-page storage dtype (kernels/quantize.py); "
+                         "with --smoke runs the bf16-vs-quantized "
+                         "comparison leg (run_kv_dtype_compare)")
     ap.add_argument("--pipeline", nargs="?", const="double", default="off",
                     choices=["off", "double"],
                     help="double-buffer the Pallas page walk (bare flag = "
@@ -691,6 +765,15 @@ def main(argv=None):
                   backend=args.backend, spec_k=args.spec_k,
                   draft_arch=args.draft_arch,
                   spec_k_adaptive=args.spec_k_adaptive)
+    if args.smoke and args.kv_dtype:
+        mesh = parse_mesh(args.mesh) if args.mesh else (1, 1)
+        if mesh[1] > 1:
+            cfg = smoke(get_config(args.arch))
+            err = tp_sharding_error(cfg, mesh[1])
+            if err:
+                raise SystemExit(f"--mesh {args.mesh}: {err}")
+        run_kv_dtype_compare(args, mesh, kwargs)
+        return
     if args.smoke and (args.pipeline != "off" or args.overlap != "none"):
         mesh = parse_mesh(args.mesh) if args.mesh else (1, 1)
         if mesh[1] > 1:
@@ -722,7 +805,7 @@ def main(argv=None):
                     prefix_cache=args.prefix_cache,
                     num_pages=args.num_pages, watermark=args.watermark,
                     preempt=args.preempt, pipeline=args.pipeline,
-                    overlap=args.overlap,
+                    overlap=args.overlap, kv_dtype=args.kv_dtype,
                     warmup=not args.shared_prefix, **kwargs)
     if args.shared_prefix:
         print(f"[bench_serve/capacity] pages_peak={out['pages_peak']} "

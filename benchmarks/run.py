@@ -28,21 +28,23 @@ ALL = {
     "layernorm": bench_layernorm.main,         # paper appendix
     "arch_roofline": bench_arch_roofline.main,  # 40-cell §Roofline table
     "serve": lambda smoke=False, mesh=None, hierarchy=False,
-        overlap=False, pipeline=False, router=False:
+        overlap=False, pipeline=False, router=False, kv_dtype=None:
         bench_serve.main(
             (["--smoke"] if smoke else [])
             + (["--mesh", mesh] if mesh else [])
             + (["--hierarchy"] if hierarchy else [])
             + (["--overlap"] if overlap else [])
             + (["--pipeline"] if pipeline else [])
-            + (["--router"] if router else [])),
+            + (["--router"] if router else [])
+            + (["--kv-dtype", kv_dtype] if kv_dtype else [])),
     # (--smoke also covers the speculative ngram pass and the block-pool
     # shared-prefix capacity assertion; --mesh dp,tp runs the sharded
     # engine against the single-device baseline; --hierarchy runs the
     # hierarchical/time-based roofline assertions; --overlap/--pipeline
     # run the serial-vs-overlapped comparison leg; --router runs the
     # multi-replica front door vs single engine with mixed AND
-    # disaggregated roles; see bench_serve.py)
+    # disaggregated roles; --kv-dtype int8 runs the bf16-vs-quantized
+    # KV-pool comparison leg; see bench_serve.py)
 }
 
 _SMOKEABLE = ("serve",)
@@ -70,6 +72,12 @@ def main() -> None:
                          "router leg — single engine vs mixed vs "
                          "disaggregated prefill/decode cluster (dp from "
                          "--mesh, default 2 colocated)")
+    ap.add_argument("--kv-dtype", choices=["bf16", "int8", "fp8_e4m3"],
+                    default=None,
+                    help="forwarded to the serve bench: quantized KV-pool "
+                         "comparison leg (bf16 baseline vs quantized "
+                         "pages; asserts higher ledger intensity, oracle-"
+                         "identical outputs, ledger/HLO bytes within 15%%)")
     args = ap.parse_args()
     failed = []
     names = [args.only] if args.only else list(ALL)
@@ -79,10 +87,12 @@ def main() -> None:
         try:
             if name == "serve" and (args.smoke or args.mesh
                                     or args.hierarchy or args.overlap
-                                    or args.pipeline or args.router):
+                                    or args.pipeline or args.router
+                                    or args.kv_dtype):
                 ALL[name](smoke=args.smoke, mesh=args.mesh,
                           hierarchy=args.hierarchy, overlap=args.overlap,
-                          pipeline=args.pipeline, router=args.router)
+                          pipeline=args.pipeline, router=args.router,
+                          kv_dtype=args.kv_dtype)
             elif args.smoke and name in _SMOKEABLE:
                 ALL[name](smoke=True)
             else:

@@ -51,7 +51,10 @@ def paged_attention_kernel_bytes(context_lens, kv_line_bytes: float,
     query tokens, which is exactly why verification raises intensity.
 
     ``context_lens``: iterable of per-slot context lengths L_i;
-    ``kv_line_bytes``: all-layer cache line (scheduler.kv_line_bytes);
+    ``kv_line_bytes``: all-layer cache line (scheduler.kv_line_bytes —
+    for quantized pools this is already the SHRUNK line: storage-itemsize
+    values plus per-line f32 scales, so the substitution prices the
+    quantized page walk with no extra plumbing);
     ``qo_bytes_per_slot``: per-slot q + o vector traffic (optional).
     """
     total = 0.0

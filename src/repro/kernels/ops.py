@@ -198,36 +198,43 @@ register_kernel("flash_attention",
 
 
 def paged_attention(q, k_pool, v_pool, block_tables, pos, *, scale,
-                    soft_cap: float = 0.0, backend: Optional[str] = None,
+                    soft_cap: float = 0.0, k_scale=None, v_scale=None,
+                    backend: Optional[str] = None,
                     sharded: bool = False, pipeline: Optional[str] = None):
     """Dispatching GQA paged-decode attention (see kernels/paged_attention).
 
     q (B, KV, G, hd); pools (P, page, KV, hd); block_tables (B, n_blocks);
-    pos (B,).  Returns (B, KV, G, hd).
+    pos (B,).  Returns (B, KV, G, hd).  ``k_scale``/``v_scale``
+    (P, page, KV) float32 dequantize quantized pools (kernels/quantize.py)
+    — both backends apply the identical dequant, so the oracle contract
+    holds on quantized caches.
     """
     impl = resolve("paged_attention", backend, sharded=sharded,
                    pipeline=pipeline)
     return impl(q, k_pool, v_pool, block_tables, pos, scale=scale,
-                soft_cap=soft_cap)
+                soft_cap=soft_cap, k_scale=k_scale, v_scale=v_scale)
 
 
 def mla_paged_attention(q_lat, q_rope, c_pool, r_pool, block_tables, pos, *,
-                        scale, backend: Optional[str] = None,
+                        scale, c_scale=None, r_scale=None,
+                        backend: Optional[str] = None,
                         sharded: bool = False,
                         pipeline: Optional[str] = None):
     """Dispatching MLA paged-decode attention over the compressed cache.
 
     q_lat (B, H, r); q_rope (B, H, dr); pools (P, page, r) / (P, page, dr);
     block_tables (B, n_blocks); pos (B,).  Returns o_lat (B, H, r).
+    ``c_scale``/``r_scale`` (P, page) float32 dequantize quantized pools.
     """
     impl = resolve("mla_paged_attention", backend, sharded=sharded,
                    pipeline=pipeline)
     return impl(q_lat, q_rope, c_pool, r_pool, block_tables, pos,
-                scale=scale)
+                scale=scale, c_scale=c_scale, r_scale=r_scale)
 
 
 def paged_attention_verify(q, k_pool, v_pool, block_tables, pos, *, scale,
-                           soft_cap: float = 0.0,
+                           soft_cap: float = 0.0, k_scale=None,
+                           v_scale=None,
                            backend: Optional[str] = None,
                            sharded: bool = False,
                            pipeline: Optional[str] = None):
@@ -240,11 +247,11 @@ def paged_attention_verify(q, k_pool, v_pool, block_tables, pos, *, scale,
     impl = resolve("paged_attention_verify", backend, sharded=sharded,
                    pipeline=pipeline)
     return impl(q, k_pool, v_pool, block_tables, pos, scale=scale,
-                soft_cap=soft_cap)
+                soft_cap=soft_cap, k_scale=k_scale, v_scale=v_scale)
 
 
 def mla_paged_attention_verify(q_lat, q_rope, c_pool, r_pool, block_tables,
-                               pos, *, scale,
+                               pos, *, scale, c_scale=None, r_scale=None,
                                backend: Optional[str] = None,
                                sharded: bool = False,
                                pipeline: Optional[str] = None):
@@ -256,7 +263,7 @@ def mla_paged_attention_verify(q_lat, q_rope, c_pool, r_pool, block_tables,
     impl = resolve("mla_paged_attention_verify", backend, sharded=sharded,
                    pipeline=pipeline)
     return impl(q_lat, q_rope, c_pool, r_pool, block_tables, pos,
-                scale=scale)
+                scale=scale, c_scale=c_scale, r_scale=r_scale)
 
 
 @functools.partial(jax.jit, static_argnames=("fuse",))

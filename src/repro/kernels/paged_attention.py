@@ -74,7 +74,7 @@ references.
 from __future__ import annotations
 
 import functools
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -83,29 +83,62 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+# Quantized KV pools (kernels/quantize.py): every kernel and reference
+# below optionally takes float32 scale pools alongside the K/V (or latent)
+# pools — GQA scales (P, page, KV) per (page, line, kv_head), MLA scales
+# (P, page) per (page, line).  Dequantization is
+# ``values.astype(f32) * scale`` applied to each streamed slab BEFORE the
+# score matmul, the same op sequence in the Pallas walk and the jnp
+# gather, so the oracle stays byte-comparable.  Dequant happens in VMEM
+# after the (smaller) quantized page crossed HBM->VMEM — bandwidth-free
+# on the HBM level the decode roofline is bound by.
+
 
 # --------------------------------------------------------------------------
 # jnp references (the byte-checked oracles; extracted verbatim from the
 # pre-registry models/attention.py + models/mla.py inline gathers)
 # --------------------------------------------------------------------------
 
+def _gather_kv(pool, scale_pool, block_tables, B, S, KV, hd):
+    """Gather pages to (B, S, KV, hd), dequantizing when a scale pool is
+    supplied (scale (P, page, KV) -> broadcast over hd)."""
+    g = pool[block_tables].reshape(B, S, KV, hd)
+    if scale_pool is None:
+        return g
+    s = scale_pool[block_tables].reshape(B, S, KV)
+    return g.astype(jnp.float32) * s[..., None]
+
+
+def _gather_latent(pool, scale_pool, block_tables, B, S):
+    """Gather latent pages to (B, S, d), dequantizing when quantized."""
+    g = pool[block_tables].reshape(B, S, -1)
+    if scale_pool is None:
+        return g
+    s = scale_pool[block_tables].reshape(B, S)
+    return g.astype(jnp.float32) * s[..., None]
+
+
 def paged_attention_reference(
     q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     block_tables: jax.Array, pos: jax.Array, *,
     scale: float, soft_cap: float = 0.0,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
     """GQA paged decode, gather-and-attend.
 
     q (B, KV, G, hd); k/v pools (P, page, KV, hd); block_tables
     (B, n_blocks); pos (B,) last written position.  Returns (B, KV, G, hd).
+    ``k_scale``/``v_scale`` (P, page, KV) float32 dequantize a quantized
+    pool before attending.
     """
     B = q.shape[0]
     KV, hd = k_pool.shape[2], k_pool.shape[3]
     page_size = k_pool.shape[1]
     S = block_tables.shape[1] * page_size
     posb = pos.astype(jnp.int32)[:, None]                       # (B, 1)
-    k = k_pool[block_tables].reshape(B, S, KV, hd)              # gather pages
-    v = v_pool[block_tables].reshape(B, S, KV, hd)
+    k = _gather_kv(k_pool, k_scale, block_tables, B, S, KV, hd)
+    v = _gather_kv(v_pool, v_scale, block_tables, B, S, KV, hd)
     qb = q[:, None]                                             # (B,1,KV,G,hd)
     k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     s = jnp.einsum("bqkgh,bskh->bkgqs", qb, k).astype(jnp.float32) * scale
@@ -115,13 +148,15 @@ def paged_attention_reference(
     s = jnp.where(m[:, None, None, :, :], s, NEG_INF)
     p_attn = jax.nn.softmax(s, axis=-1).astype(v.dtype)
     o = jnp.einsum("bkgqs,bskh->bqkgh", p_attn, v)
-    return o[:, 0]
+    return o[:, 0].astype(q.dtype)
 
 
 def paged_attention_verify_reference(
     q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     block_tables: jax.Array, pos: jax.Array, *,
     scale: float, soft_cap: float = 0.0,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
     """GQA multi-token paged verification, gather-and-attend.
 
@@ -133,8 +168,8 @@ def paged_attention_verify_reference(
     KV, hd = k_pool.shape[2], k_pool.shape[3]
     page_size = k_pool.shape[1]
     S = block_tables.shape[1] * page_size
-    k = k_pool[block_tables].reshape(B, S, KV, hd)
-    v = v_pool[block_tables].reshape(B, S, KV, hd)
+    k = _gather_kv(k_pool, k_scale, block_tables, B, S, KV, hd)
+    v = _gather_kv(v_pool, v_scale, block_tables, B, S, KV, hd)
     q_pos = pos.astype(jnp.int32)[:, None] + jnp.arange(T, dtype=jnp.int32)
     k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     s = jnp.einsum("btkgh,bskh->bkgts", q, k).astype(jnp.float32) * scale
@@ -143,38 +178,43 @@ def paged_attention_verify_reference(
     m = q_pos[:, :, None] >= k_pos[:, None, :]                  # (B, T, S)
     s = jnp.where(m[:, None, None, :, :], s, NEG_INF)
     p_attn = jax.nn.softmax(s, axis=-1).astype(v.dtype)
-    return jnp.einsum("bkgts,bskh->btkgh", p_attn, v)
+    return jnp.einsum("bkgts,bskh->btkgh", p_attn, v).astype(q.dtype)
 
 
 def mla_paged_attention_reference(
     q_lat: jax.Array, q_rope: jax.Array, c_pool: jax.Array,
     r_pool: jax.Array, block_tables: jax.Array, pos: jax.Array, *,
     scale: float,
+    c_scale: Optional[jax.Array] = None,
+    r_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
     """MLA paged decode in the compressed latent space (absorbed form).
 
     q_lat (B, H, r) — q_nope already folded through wk_b; q_rope (B, H, dr);
     c/r pools (P, page, r) / (P, page, dr); pos (B,).  Returns o_lat
-    (B, H, r) — the caller folds wv_b/wo back out.
+    (B, H, r) — the caller folds wv_b/wo back out.  ``c_scale``/``r_scale``
+    (P, page) float32 dequantize a quantized latent pool.
     """
     B = q_lat.shape[0]
     page_size = c_pool.shape[1]
     S = block_tables.shape[1] * page_size
-    c_kv = c_pool[block_tables].reshape(B, S, -1)
-    k_rope = r_pool[block_tables].reshape(B, S, -1)
+    c_kv = _gather_latent(c_pool, c_scale, block_tables, B, S)
+    k_rope = _gather_latent(r_pool, r_scale, block_tables, B, S)
     s = (jnp.einsum("bhr,bsr->bhs", q_lat, c_kv)
          + jnp.einsum("bhk,bsk->bhs", q_rope, k_rope))
     s = s.astype(jnp.float32) * scale
     valid = jnp.arange(S, dtype=jnp.int32)[None, :] <= pos[:, None]
     s = jnp.where(valid[:, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1).astype(c_kv.dtype)
-    return jnp.einsum("bhs,bsr->bhr", w, c_kv)
+    return jnp.einsum("bhs,bsr->bhr", w, c_kv).astype(q_lat.dtype)
 
 
 def mla_paged_attention_verify_reference(
     q_lat: jax.Array, q_rope: jax.Array, c_pool: jax.Array,
     r_pool: jax.Array, block_tables: jax.Array, pos: jax.Array, *,
     scale: float,
+    c_scale: Optional[jax.Array] = None,
+    r_scale: Optional[jax.Array] = None,
 ) -> jax.Array:
     """MLA multi-token paged verification in the compressed latent space.
 
@@ -185,8 +225,8 @@ def mla_paged_attention_verify_reference(
     B, T = q_lat.shape[0], q_lat.shape[1]
     page_size = c_pool.shape[1]
     S = block_tables.shape[1] * page_size
-    c_kv = c_pool[block_tables].reshape(B, S, -1)
-    k_rope = r_pool[block_tables].reshape(B, S, -1)
+    c_kv = _gather_latent(c_pool, c_scale, block_tables, B, S)
+    k_rope = _gather_latent(r_pool, r_scale, block_tables, B, S)
     s = (jnp.einsum("bthr,bsr->bhts", q_lat, c_kv)
          + jnp.einsum("bthk,bsk->bhts", q_rope, k_rope))
     s = s.astype(jnp.float32) * scale
@@ -194,7 +234,7 @@ def mla_paged_attention_verify_reference(
     valid = q_pos[:, :, None] >= jnp.arange(S, dtype=jnp.int32)[None, None, :]
     s = jnp.where(valid[:, None, :, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1).astype(c_kv.dtype)
-    return jnp.einsum("bhts,bsr->bthr", w, c_kv)
+    return jnp.einsum("bhts,bsr->bthr", w, c_kv).astype(q_lat.dtype)
 
 
 # --------------------------------------------------------------------------
@@ -209,10 +249,16 @@ def _check_pipeline(pipeline: str) -> None:
         raise ValueError(f"pipeline {pipeline!r} not in {PIPELINES}")
 
 
-def _paged_decode_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
-                         m_ref, l_ref, acc_ref, *, page_size: int,
-                         scale: float, soft_cap: float):
-    """One (slot, kv_head, block) grid step of the GQA decode walk."""
+def _paged_decode_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, *rest,
+                         page_size: int, scale: float, soft_cap: float,
+                         quantized: bool = False):
+    """One (slot, kv_head, block) grid step of the GQA decode walk.  When
+    ``quantized`` two float32 scale slabs ((page,) for the mapped kv head)
+    follow k/v and dequantize the streamed page in VMEM."""
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     b, j = pl.program_id(0), pl.program_id(2)
     n_blocks = pl.num_programs(2)
 
@@ -225,6 +271,9 @@ def _paged_decode_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
     q = q_ref[0, 0].astype(jnp.float32)                     # (G, hd)
     k = k_ref[0, :, 0, :].astype(jnp.float32)               # (page, hd)
     v = v_ref[0, :, 0, :].astype(jnp.float32)
+    if quantized:
+        k = k * ks_ref[0, :, 0][:, None]
+        v = v * vs_ref[0, :, 0][:, None]
     s = (q @ k.T) * scale                                   # (G, page)
     if soft_cap > 0:
         s = jnp.tanh(s / soft_cap) * soft_cap
@@ -249,8 +298,10 @@ def _paged_decode_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
 def paged_attention(
     q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     block_tables: jax.Array, pos: jax.Array, *,
-    scale: float, soft_cap: float = 0.0, interpret: bool = False,
-    pipeline: str = "off",
+    scale: float, soft_cap: float = 0.0,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+    interpret: bool = False, pipeline: str = "off",
 ) -> jax.Array:
     """Pallas GQA paged decode; same contract as the reference."""
     _check_pipeline(pipeline)
@@ -258,22 +309,31 @@ def paged_attention(
     if pipeline == "double":
         return _gqa_paged_double(
             q, k_pool, v_pool, block_tables, pos, n_group=G, scale=scale,
-            soft_cap=soft_cap, interpret=interpret)
+            soft_cap=soft_cap, k_scale=k_scale, v_scale=v_scale,
+            interpret=interpret)
     _, page_size, _, _ = k_pool.shape
     n_blocks = block_tables.shape[1]
+    quantized = k_scale is not None
     kernel = functools.partial(
         _paged_decode_kernel, page_size=page_size, scale=scale,
-        soft_cap=soft_cap)
+        soft_cap=soft_cap, quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, 1, G, hd), lambda b, h, j, bt, ps: (b, h, 0, 0)),
+        pl.BlockSpec((1, page_size, 1, hd),
+                     lambda b, h, j, bt, ps: (bt[b, j], 0, h, 0)),
+        pl.BlockSpec((1, page_size, 1, hd),
+                     lambda b, h, j, bt, ps: (bt[b, j], 0, h, 0)),
+    ]
+    args = [block_tables, pos.astype(jnp.int32), q, k_pool, v_pool]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, page_size, 1),
+                                  lambda b, h, j, bt, ps: (bt[b, j], 0, h))
+                     ] * 2
+        args += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                  # block tables + positions
         grid=(B, KV, n_blocks),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, bt, ps: (b, h, 0, 0)),
-            pl.BlockSpec((1, page_size, 1, hd),
-                         lambda b, h, j, bt, ps: (bt[b, j], 0, h, 0)),
-            pl.BlockSpec((1, page_size, 1, hd),
-                         lambda b, h, j, bt, ps: (bt[b, j], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, hd),
                                lambda b, h, j, bt, ps: (b, h, 0, 0)),
         scratch_shapes=[
@@ -287,13 +347,18 @@ def paged_attention(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
         interpret=interpret,
-    )(block_tables, pos.astype(jnp.int32), q, k_pool, v_pool)
+    )(*args)
 
 
 def _mla_paged_decode_kernel(bt_ref, pos_ref, ql_ref, qr_ref, c_ref, r_ref,
-                             o_ref, m_ref, l_ref, acc_ref, *,
-                             page_size: int, scale: float):
-    """One (slot, block) grid step of the latent-space MLA decode walk."""
+                             *rest, page_size: int, scale: float,
+                             quantized: bool = False):
+    """One (slot, block) grid step of the latent-space MLA decode walk.
+    When ``quantized`` two float32 per-line scale slabs follow c/kr."""
+    if quantized:
+        cs_ref, rs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     b, j = pl.program_id(0), pl.program_id(1)
     n_blocks = pl.num_programs(1)
 
@@ -307,6 +372,9 @@ def _mla_paged_decode_kernel(bt_ref, pos_ref, ql_ref, qr_ref, c_ref, r_ref,
     q_rope = qr_ref[0].astype(jnp.float32)                  # (H, dr)
     c = c_ref[0].astype(jnp.float32)                        # (page, r)
     kr = r_ref[0].astype(jnp.float32)                       # (page, dr)
+    if quantized:
+        c = c * cs_ref[0][:, None]
+        kr = kr * rs_ref[0][:, None]
     s = (q_lat @ c.T + q_rope @ kr.T) * scale               # (H, page)
     k_pos = j * page_size + jax.lax.broadcasted_iota(
         jnp.int32, s.shape, 1)
@@ -329,7 +397,10 @@ def _mla_paged_decode_kernel(bt_ref, pos_ref, ql_ref, qr_ref, c_ref, r_ref,
 def mla_paged_attention(
     q_lat: jax.Array, q_rope: jax.Array, c_pool: jax.Array,
     r_pool: jax.Array, block_tables: jax.Array, pos: jax.Array, *,
-    scale: float, interpret: bool = False, pipeline: str = "off",
+    scale: float,
+    c_scale: Optional[jax.Array] = None,
+    r_scale: Optional[jax.Array] = None,
+    interpret: bool = False, pipeline: str = "off",
 ) -> jax.Array:
     """Pallas MLA paged decode over the compressed cache."""
     _check_pipeline(pipeline)
@@ -337,23 +408,33 @@ def mla_paged_attention(
     if pipeline == "double":
         return _mla_paged_double(
             q_lat, q_rope, c_pool, r_pool, block_tables, pos, n_heads=H,
-            scale=scale, interpret=interpret)
+            scale=scale, c_scale=c_scale, r_scale=r_scale,
+            interpret=interpret)
     dr = q_rope.shape[-1]
     page_size = c_pool.shape[1]
     n_blocks = block_tables.shape[1]
+    quantized = c_scale is not None
     kernel = functools.partial(
-        _mla_paged_decode_kernel, page_size=page_size, scale=scale)
+        _mla_paged_decode_kernel, page_size=page_size, scale=scale,
+        quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, H, r), lambda b, j, bt, ps: (b, 0, 0)),
+        pl.BlockSpec((1, H, dr), lambda b, j, bt, ps: (b, 0, 0)),
+        pl.BlockSpec((1, page_size, r),
+                     lambda b, j, bt, ps: (bt[b, j], 0, 0)),
+        pl.BlockSpec((1, page_size, dr),
+                     lambda b, j, bt, ps: (bt[b, j], 0, 0)),
+    ]
+    args = [block_tables, pos.astype(jnp.int32), q_lat, q_rope, c_pool,
+            r_pool]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, page_size),
+                                  lambda b, j, bt, ps: (bt[b, j], 0))] * 2
+        args += [c_scale, r_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, n_blocks),
-        in_specs=[
-            pl.BlockSpec((1, H, r), lambda b, j, bt, ps: (b, 0, 0)),
-            pl.BlockSpec((1, H, dr), lambda b, j, bt, ps: (b, 0, 0)),
-            pl.BlockSpec((1, page_size, r),
-                         lambda b, j, bt, ps: (bt[b, j], 0, 0)),
-            pl.BlockSpec((1, page_size, dr),
-                         lambda b, j, bt, ps: (bt[b, j], 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, H, r), lambda b, j, bt, ps: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((H, 1), jnp.float32),
@@ -366,19 +447,23 @@ def mla_paged_attention(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, r), q_lat.dtype),
         interpret=interpret,
-    )(block_tables, pos.astype(jnp.int32), q_lat, q_rope, c_pool, r_pool)
+    )(*args)
 
 
 # --------------------------------------------------------------------------
 # Multi-token verification kernels (speculative decoding)
 # --------------------------------------------------------------------------
 
-def _paged_verify_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
-                         m_ref, l_ref, acc_ref, *, page_size: int,
-                         n_group: int, scale: float, soft_cap: float):
+def _paged_verify_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, *rest,
+                         page_size: int, n_group: int, scale: float,
+                         soft_cap: float, quantized: bool = False):
     """One (slot, kv_head, block) grid step scoring T*G flattened query
     rows; row r belongs to draft token t = r // n_group at position
     ``pos + t``."""
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     b, j = pl.program_id(0), pl.program_id(2)
     n_blocks = pl.num_programs(2)
 
@@ -391,6 +476,9 @@ def _paged_verify_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
     q = q_ref[0, 0].astype(jnp.float32)                     # (T*G, hd)
     k = k_ref[0, :, 0, :].astype(jnp.float32)               # (page, hd)
     v = v_ref[0, :, 0, :].astype(jnp.float32)
+    if quantized:
+        k = k * ks_ref[0, :, 0][:, None]
+        v = v * vs_ref[0, :, 0][:, None]
     s = (q @ k.T) * scale                                   # (T*G, page)
     if soft_cap > 0:
         s = jnp.tanh(s / soft_cap) * soft_cap
@@ -415,8 +503,10 @@ def _paged_verify_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
 def paged_attention_verify(
     q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     block_tables: jax.Array, pos: jax.Array, *,
-    scale: float, soft_cap: float = 0.0, interpret: bool = False,
-    pipeline: str = "off",
+    scale: float, soft_cap: float = 0.0,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+    interpret: bool = False, pipeline: str = "off",
 ) -> jax.Array:
     """Pallas GQA multi-token verify; same contract as the reference.
 
@@ -431,22 +521,31 @@ def paged_attention_verify(
     if pipeline == "double":
         o = _gqa_paged_double(
             qf, k_pool, v_pool, block_tables, pos, n_group=G, scale=scale,
-            soft_cap=soft_cap, interpret=interpret)
+            soft_cap=soft_cap, k_scale=k_scale, v_scale=v_scale,
+            interpret=interpret)
         return o.reshape(B, KV, T, G, hd).transpose(0, 2, 1, 3, 4)
+    quantized = k_scale is not None
     kernel = functools.partial(
         _paged_verify_kernel, page_size=page_size, n_group=G, scale=scale,
-        soft_cap=soft_cap)
+        soft_cap=soft_cap, quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, 1, T * G, hd),
+                     lambda b, h, j, bt, ps: (b, h, 0, 0)),
+        pl.BlockSpec((1, page_size, 1, hd),
+                     lambda b, h, j, bt, ps: (bt[b, j], 0, h, 0)),
+        pl.BlockSpec((1, page_size, 1, hd),
+                     lambda b, h, j, bt, ps: (bt[b, j], 0, h, 0)),
+    ]
+    args = [block_tables, pos.astype(jnp.int32), qf, k_pool, v_pool]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, page_size, 1),
+                                  lambda b, h, j, bt, ps:
+                                  (bt[b, j], 0, h))] * 2
+        args += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, KV, n_blocks),
-        in_specs=[
-            pl.BlockSpec((1, 1, T * G, hd),
-                         lambda b, h, j, bt, ps: (b, h, 0, 0)),
-            pl.BlockSpec((1, page_size, 1, hd),
-                         lambda b, h, j, bt, ps: (bt[b, j], 0, h, 0)),
-            pl.BlockSpec((1, page_size, 1, hd),
-                         lambda b, h, j, bt, ps: (bt[b, j], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, T * G, hd),
                                lambda b, h, j, bt, ps: (b, h, 0, 0)),
         scratch_shapes=[
@@ -460,15 +559,19 @@ def paged_attention_verify(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KV, T * G, hd), q.dtype),
         interpret=interpret,
-    )(block_tables, pos.astype(jnp.int32), qf, k_pool, v_pool)
+    )(*args)
     return o.reshape(B, KV, T, G, hd).transpose(0, 2, 1, 3, 4)
 
 
 def _mla_paged_verify_kernel(bt_ref, pos_ref, ql_ref, qr_ref, c_ref, r_ref,
-                             o_ref, m_ref, l_ref, acc_ref, *,
-                             page_size: int, n_heads: int, scale: float):
+                             *rest, page_size: int, n_heads: int,
+                             scale: float, quantized: bool = False):
     """One (slot, block) grid step over T*H flattened latent query rows;
     row r belongs to draft token t = r // n_heads."""
+    if quantized:
+        cs_ref, rs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     b, j = pl.program_id(0), pl.program_id(1)
     n_blocks = pl.num_programs(1)
 
@@ -482,6 +585,9 @@ def _mla_paged_verify_kernel(bt_ref, pos_ref, ql_ref, qr_ref, c_ref, r_ref,
     q_rope = qr_ref[0].astype(jnp.float32)                  # (T*H, dr)
     c = c_ref[0].astype(jnp.float32)                        # (page, r)
     kr = r_ref[0].astype(jnp.float32)                       # (page, dr)
+    if quantized:
+        c = c * cs_ref[0][:, None]
+        kr = kr * rs_ref[0][:, None]
     s = (q_lat @ c.T + q_rope @ kr.T) * scale               # (T*H, page)
     k_pos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     t = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // n_heads
@@ -504,7 +610,10 @@ def _mla_paged_verify_kernel(bt_ref, pos_ref, ql_ref, qr_ref, c_ref, r_ref,
 def mla_paged_attention_verify(
     q_lat: jax.Array, q_rope: jax.Array, c_pool: jax.Array,
     r_pool: jax.Array, block_tables: jax.Array, pos: jax.Array, *,
-    scale: float, interpret: bool = False, pipeline: str = "off",
+    scale: float,
+    c_scale: Optional[jax.Array] = None,
+    r_scale: Optional[jax.Array] = None,
+    interpret: bool = False, pipeline: str = "off",
 ) -> jax.Array:
     """Pallas MLA multi-token verify over the compressed cache."""
     _check_pipeline(pipeline)
@@ -517,22 +626,30 @@ def mla_paged_attention_verify(
     if pipeline == "double":
         o = _mla_paged_double(
             qlf, qrf, c_pool, r_pool, block_tables, pos, n_heads=H,
-            scale=scale, interpret=interpret)
+            scale=scale, c_scale=c_scale, r_scale=r_scale,
+            interpret=interpret)
         return o.reshape(B, T, H, r)
+    quantized = c_scale is not None
     kernel = functools.partial(
         _mla_paged_verify_kernel, page_size=page_size, n_heads=H,
-        scale=scale)
+        scale=scale, quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, T * H, r), lambda b, j, bt, ps: (b, 0, 0)),
+        pl.BlockSpec((1, T * H, dr), lambda b, j, bt, ps: (b, 0, 0)),
+        pl.BlockSpec((1, page_size, r),
+                     lambda b, j, bt, ps: (bt[b, j], 0, 0)),
+        pl.BlockSpec((1, page_size, dr),
+                     lambda b, j, bt, ps: (bt[b, j], 0, 0)),
+    ]
+    args = [block_tables, pos.astype(jnp.int32), qlf, qrf, c_pool, r_pool]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, page_size),
+                                  lambda b, j, bt, ps: (bt[b, j], 0))] * 2
+        args += [c_scale, r_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, n_blocks),
-        in_specs=[
-            pl.BlockSpec((1, T * H, r), lambda b, j, bt, ps: (b, 0, 0)),
-            pl.BlockSpec((1, T * H, dr), lambda b, j, bt, ps: (b, 0, 0)),
-            pl.BlockSpec((1, page_size, r),
-                         lambda b, j, bt, ps: (bt[b, j], 0, 0)),
-            pl.BlockSpec((1, page_size, dr),
-                         lambda b, j, bt, ps: (bt[b, j], 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, T * H, r), lambda b, j, bt, ps: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((T * H, 1), jnp.float32),
@@ -545,7 +662,7 @@ def mla_paged_attention_verify(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, T * H, r), q_lat.dtype),
         interpret=interpret,
-    )(block_tables, pos.astype(jnp.int32), qlf, qrf, c_pool, r_pool)
+    )(*args)
     return o.reshape(B, T, H, r)
 
 
@@ -553,17 +670,25 @@ def mla_paged_attention_verify(
 # Double-buffered kernels (pipeline="double"): manual two-slab DMA walk
 # --------------------------------------------------------------------------
 
-def _gqa_double_kernel(bt_ref, pos_ref, q_ref, k_hbm, v_hbm, o_ref,
-                       k_slab, v_slab, k_sem, v_sem, *, page_size: int,
-                       n_group: int, n_blocks: int, scale: float,
-                       soft_cap: float):
+def _gqa_double_kernel(bt_ref, pos_ref, q_ref, k_hbm, v_hbm, *rest,
+                       page_size: int, n_group: int, n_blocks: int,
+                       scale: float, soft_cap: float,
+                       quantized: bool = False):
     """Grid (B, KV): the whole block walk runs inside the kernel.  Two
     (page, hd) VMEM slabs per stream; the DMA for page j+1 starts before
     the wait on page j, so the fetch pipelines one block ahead of the
     flash math.  Row r of the (rows, hd) query slab belongs to draft
     token t = r // n_group (t = 0 everywhere for single-token decode) —
     the per-block compute is the exact op sequence of the single-buffered
-    kernels, so the output is bit-identical to ``pipeline="off"``."""
+    kernels, so the output is bit-identical to ``pipeline="off"``.
+    Quantized pools add two (page,) f32 scale slabs that ride the same
+    one-block lookahead; the dequant multiply sits at the identical op
+    position as the single-buffered kernel's, keeping the bit-identity."""
+    if quantized:
+        (ks_hbm, vs_hbm, o_ref, k_slab, v_slab, ks_slab, vs_slab,
+         k_sem, v_sem, ks_sem, vs_sem) = rest
+    else:
+        o_ref, k_slab, v_slab, k_sem, v_sem = rest
     b, h = pl.program_id(0), pl.program_id(1)
 
     def k_dma(slot, j):
@@ -576,8 +701,19 @@ def _gqa_double_kernel(bt_ref, pos_ref, q_ref, k_hbm, v_hbm, o_ref,
             v_hbm.at[bt_ref[b, j], :, h, :], v_slab.at[slot],
             v_sem.at[slot])
 
+    def scale_dmas(slot, j):
+        return (pltpu.make_async_copy(
+                    ks_hbm.at[bt_ref[b, j], :, h], ks_slab.at[slot],
+                    ks_sem.at[slot]),
+                pltpu.make_async_copy(
+                    vs_hbm.at[bt_ref[b, j], :, h], vs_slab.at[slot],
+                    vs_sem.at[slot]))
+
     k_dma(0, 0).start()
     v_dma(0, 0).start()
+    if quantized:
+        for dma in scale_dmas(0, 0):
+            dma.start()
     q = q_ref[0, 0].astype(jnp.float32)                     # (rows, hd)
     rows, hd = q_ref.shape[2], q_ref.shape[3]
 
@@ -589,11 +725,19 @@ def _gqa_double_kernel(bt_ref, pos_ref, q_ref, k_hbm, v_hbm, o_ref,
         def _prefetch():
             k_dma(1 - slot, j + 1).start()
             v_dma(1 - slot, j + 1).start()
+            if quantized:
+                for dma in scale_dmas(1 - slot, j + 1):
+                    dma.start()
 
         k_dma(slot, j).wait()
         v_dma(slot, j).wait()
         k = k_slab[slot].astype(jnp.float32)                # (page, hd)
         v = v_slab[slot].astype(jnp.float32)
+        if quantized:
+            for dma in scale_dmas(slot, j):
+                dma.wait()
+            k = k * ks_slab[slot][:, None]
+            v = v * vs_slab[slot][:, None]
         s = (q @ k.T) * scale                               # (rows, page)
         if soft_cap > 0:
             s = jnp.tanh(s / soft_cap) * soft_cap
@@ -619,47 +763,65 @@ def _gqa_double_kernel(bt_ref, pos_ref, q_ref, k_hbm, v_hbm, o_ref,
 def _gqa_paged_double(qf: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                       block_tables: jax.Array, pos: jax.Array, *,
                       n_group: int, scale: float, soft_cap: float,
+                      k_scale: Optional[jax.Array] = None,
+                      v_scale: Optional[jax.Array] = None,
                       interpret: bool) -> jax.Array:
     """qf (B, KV, rows, hd) flattened queries -> (B, KV, rows, hd)."""
     B, KV, rows, hd = qf.shape
     page_size = k_pool.shape[1]
     n_blocks = block_tables.shape[1]
+    quantized = k_scale is not None
     kernel = functools.partial(
         _gqa_double_kernel, page_size=page_size, n_group=n_group,
-        n_blocks=n_blocks, scale=scale, soft_cap=soft_cap)
+        n_blocks=n_blocks, scale=scale, soft_cap=soft_cap,
+        quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, 1, rows, hd),
+                     lambda b, h, bt, ps: (b, h, 0, 0)),
+        pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+        pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+    ]
+    args = [block_tables, pos.astype(jnp.int32), qf, k_pool, v_pool]
+    scratch = [
+        pltpu.VMEM((2, page_size, hd), k_pool.dtype),
+        pltpu.VMEM((2, page_size, hd), v_pool.dtype),
+    ]
+    sems = [pltpu.SemaphoreType.DMA((2,))] * 2
+    if quantized:
+        in_specs += [pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)] * 2
+        args += [k_scale, v_scale]
+        scratch += [pltpu.VMEM((2, page_size), jnp.float32)] * 2
+        sems += [pltpu.SemaphoreType.DMA((2,))] * 2
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, KV),
-        in_specs=[
-            pl.BlockSpec((1, 1, rows, hd),
-                         lambda b, h, bt, ps: (b, h, 0, 0)),
-            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
-            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, rows, hd),
                                lambda b, h, bt, ps: (b, h, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((2, page_size, hd), k_pool.dtype),
-            pltpu.VMEM((2, page_size, hd), v_pool.dtype),
-            pltpu.SemaphoreType.DMA((2,)),
-            pltpu.SemaphoreType.DMA((2,)),
-        ],
+        scratch_shapes=scratch + sems,
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KV, rows, hd), qf.dtype),
         interpret=interpret,
-    )(block_tables, pos.astype(jnp.int32), qf, k_pool, v_pool)
+    )(*args)
 
 
 def _mla_double_kernel(bt_ref, pos_ref, ql_ref, qr_ref, c_hbm, r_hbm,
-                       o_ref, c_slab, r_slab, c_sem, r_sem, *,
-                       page_size: int, n_heads: int, n_blocks: int,
-                       scale: float):
+                       *rest, page_size: int, n_heads: int, n_blocks: int,
+                       scale: float, quantized: bool = False):
     """Grid (B,): the latent block walk with two (page, r) + (page, dr)
     slabs and a one-block DMA lookahead.  Row r of the flattened query
-    slabs belongs to draft token t = r // n_heads (0 for decode)."""
+    slabs belongs to draft token t = r // n_heads (0 for decode).
+    Quantized pools add two (page,) f32 scale slabs on the same
+    lookahead; dequant sits at the single-buffered kernel's op position
+    so the output stays bit-identical to ``pipeline="off"``."""
+    if quantized:
+        (cs_hbm, rs_hbm, o_ref, c_slab, r_slab, cs_slab, rs_slab,
+         c_sem, r_sem, cs_sem, rs_sem) = rest
+    else:
+        o_ref, c_slab, r_slab, c_sem, r_sem = rest
     b = pl.program_id(0)
 
     def c_dma(slot, j):
@@ -670,8 +832,19 @@ def _mla_double_kernel(bt_ref, pos_ref, ql_ref, qr_ref, c_hbm, r_hbm,
         return pltpu.make_async_copy(
             r_hbm.at[bt_ref[b, j]], r_slab.at[slot], r_sem.at[slot])
 
+    def scale_dmas(slot, j):
+        return (pltpu.make_async_copy(
+                    cs_hbm.at[bt_ref[b, j]], cs_slab.at[slot],
+                    cs_sem.at[slot]),
+                pltpu.make_async_copy(
+                    rs_hbm.at[bt_ref[b, j]], rs_slab.at[slot],
+                    rs_sem.at[slot]))
+
     c_dma(0, 0).start()
     r_dma(0, 0).start()
+    if quantized:
+        for dma in scale_dmas(0, 0):
+            dma.start()
     q_lat = ql_ref[0].astype(jnp.float32)                   # (rows, r)
     q_rope = qr_ref[0].astype(jnp.float32)                  # (rows, dr)
     rows, r = ql_ref.shape[1], ql_ref.shape[2]
@@ -684,11 +857,19 @@ def _mla_double_kernel(bt_ref, pos_ref, ql_ref, qr_ref, c_hbm, r_hbm,
         def _prefetch():
             c_dma(1 - slot, j + 1).start()
             r_dma(1 - slot, j + 1).start()
+            if quantized:
+                for dma in scale_dmas(1 - slot, j + 1):
+                    dma.start()
 
         c_dma(slot, j).wait()
         r_dma(slot, j).wait()
         c = c_slab[slot].astype(jnp.float32)                # (page, r)
         kr = r_slab[slot].astype(jnp.float32)               # (page, dr)
+        if quantized:
+            for dma in scale_dmas(slot, j):
+                dma.wait()
+            c = c * cs_slab[slot][:, None]
+            kr = kr * rs_slab[slot][:, None]
         s = (q_lat @ c.T + q_rope @ kr.T) * scale           # (rows, page)
         k_pos = j * page_size + jax.lax.broadcasted_iota(
             jnp.int32, s.shape, 1)
@@ -712,38 +893,48 @@ def _mla_double_kernel(bt_ref, pos_ref, ql_ref, qr_ref, c_hbm, r_hbm,
 def _mla_paged_double(qlf: jax.Array, qrf: jax.Array, c_pool: jax.Array,
                       r_pool: jax.Array, block_tables: jax.Array,
                       pos: jax.Array, *, n_heads: int, scale: float,
+                      c_scale: Optional[jax.Array] = None,
+                      r_scale: Optional[jax.Array] = None,
                       interpret: bool) -> jax.Array:
     """qlf (B, rows, r) / qrf (B, rows, dr) -> o_lat (B, rows, r)."""
     B, rows, r = qlf.shape
     dr = qrf.shape[-1]
     page_size = c_pool.shape[1]
     n_blocks = block_tables.shape[1]
+    quantized = c_scale is not None
     kernel = functools.partial(
         _mla_double_kernel, page_size=page_size, n_heads=n_heads,
-        n_blocks=n_blocks, scale=scale)
+        n_blocks=n_blocks, scale=scale, quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, rows, r), lambda b, bt, ps: (b, 0, 0)),
+        pl.BlockSpec((1, rows, dr), lambda b, bt, ps: (b, 0, 0)),
+        pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+        pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+    ]
+    args = [block_tables, pos.astype(jnp.int32), qlf, qrf, c_pool, r_pool]
+    scratch = [
+        pltpu.VMEM((2, page_size, r), c_pool.dtype),
+        pltpu.VMEM((2, page_size, dr), r_pool.dtype),
+    ]
+    sems = [pltpu.SemaphoreType.DMA((2,))] * 2
+    if quantized:
+        in_specs += [pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)] * 2
+        args += [c_scale, r_scale]
+        scratch += [pltpu.VMEM((2, page_size), jnp.float32)] * 2
+        sems += [pltpu.SemaphoreType.DMA((2,))] * 2
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B,),
-        in_specs=[
-            pl.BlockSpec((1, rows, r), lambda b, bt, ps: (b, 0, 0)),
-            pl.BlockSpec((1, rows, dr), lambda b, bt, ps: (b, 0, 0)),
-            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
-            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, rows, r), lambda b, bt, ps: (b, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((2, page_size, r), c_pool.dtype),
-            pltpu.VMEM((2, page_size, dr), r_pool.dtype),
-            pltpu.SemaphoreType.DMA((2,)),
-            pltpu.SemaphoreType.DMA((2,)),
-        ],
+        scratch_shapes=scratch + sems,
     )
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, rows, r), qlf.dtype),
         interpret=interpret,
-    )(block_tables, pos.astype(jnp.int32), qlf, qrf, c_pool, r_pool)
+    )(*args)
 
 
 # --------------------------------------------------------------------------
@@ -772,6 +963,7 @@ def live_blocks(context_len: int, page_size: int, n_q: int = 1) -> int:
 def paged_decode_vmem_bytes(
     *, context_len: int, page_size: int, n_heads: int, kv_heads: int,
     head_dim: int, isize: int, n_q: int = 1, pipeline: str = "off",
+    kv_isize: int = 0, scale_isize: int = 0,
 ) -> float:
     """VMEM bytes one slot moves in the GQA paged decode (``n_q == 1``)
     or verify (``n_q == T``) kernel.
@@ -786,22 +978,30 @@ def paged_decode_vmem_bytes(
     block walk runs inside one (slot, kv_head) program, so the query
     slab is fetched ONCE instead of re-read per block step (the streamed
     page bytes and the per-block fp32 carry updates are unchanged — the
-    second slab doubles VMEM *capacity*, not traffic)."""
+    second slab doubles VMEM *capacity*, not traffic).
+
+    Quantized pools (``kv_isize`` = storage itemsize, ``scale_isize`` = 4
+    for the f32 per-(line, kv_head) scale) shrink the STREAMED slab bytes
+    — the query slab, fp32 carries, and output flush stay at the
+    activation ``isize``.  ``kv_isize=0`` means unquantized (pages stored
+    at ``isize``, no scale stream)."""
     g = n_heads // kv_heads
     rows = g * n_q
     nb = live_blocks(context_len, page_size, n_q)
     q_steps = nb if pipeline == "off" else 1
-    stream = kv_heads * nb * 2 * page_size * head_dim * isize
+    kv_line = head_dim * (kv_isize or isize) + scale_isize
+    stream = kv_heads * nb * 2 * page_size * kv_line
     q_reread = kv_heads * q_steps * rows * head_dim * isize
     carries = kv_heads * nb * 2 * rows * (head_dim + 2) * 4
     out = kv_heads * rows * head_dim * isize
-    appended = n_q * 2 * kv_heads * head_dim * isize
+    appended = n_q * 2 * kv_heads * kv_line
     return float(stream + q_reread + carries + out + appended)
 
 
 def mla_paged_decode_vmem_bytes(
     *, context_len: int, page_size: int, n_heads: int, lora_rank: int,
     rope_dim: int, isize: int, n_q: int = 1, pipeline: str = "off",
+    kv_isize: int = 0, scale_isize: int = 0,
 ) -> float:
     """VMEM bytes one slot moves in the MLA paged decode/verify kernel.
 
@@ -810,14 +1010,18 @@ def mla_paged_decode_vmem_bytes(
     (H * n_q, r) + (H * n_q, dr) query slabs, and reads+writes the fp32
     carries (m, l: (rows, 1); acc: (rows, r)).  ``pipeline="double"``:
     grid (B,), query slabs fetched once per program (see
-    :func:`paged_decode_vmem_bytes`)."""
+    :func:`paged_decode_vmem_bytes`).  Quantized pools: the streamed
+    latent+rope line shrinks to ``(r + dr) * kv_isize`` plus TWO f32
+    scales per line (latent + rope streams); query slabs stay at
+    ``isize``."""
     rows = n_heads * n_q
     nb = live_blocks(context_len, page_size, n_q)
     q_steps = nb if pipeline == "off" else 1
     line = (lora_rank + rope_dim) * isize
-    stream = nb * page_size * line
+    kv_line = (lora_rank + rope_dim) * (kv_isize or isize) + 2 * scale_isize
+    stream = nb * page_size * kv_line
     q_reread = q_steps * rows * line
     carries = nb * 2 * rows * (lora_rank + 2) * 4
     out = rows * lora_rank * isize
-    appended = n_q * line
+    appended = n_q * kv_line
     return float(stream + q_reread + carries + out + appended)

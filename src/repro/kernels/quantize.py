@@ -1,0 +1,87 @@
+"""KV-cache quantization helpers shared by pools, kernels, and oracles.
+
+Scheme (absmax / symmetric, the pallas-guide idiom):
+
+* GQA pools quantize per (page, line, kv_head) — absmax over the head_dim
+  axis only.  Under tensor parallelism the pools shard over ``kv_heads``,
+  so per-kv-head scales shard WITH the pool and each device quantizes its
+  local heads with no cross-shard communication.
+* MLA latent pools quantize per (page, line) — absmax over the latent /
+  rope vector.
+* ``scale = absmax / qmax`` (clamped away from zero), stored float32.
+* int8: ``round(x / scale)`` clipped to [-127, 127].
+* fp8_e4m3: ``x / scale`` clipped to [-448, 448] then cast — the cast's
+  rounding IS the quantization.
+* dequant: ``q.astype(f32) * scale`` — the exact op sequence both the
+  Pallas page walk and the jnp oracle perform, so engine byte-checks of
+  pallas-vs-jnp hold on quantized caches too.
+
+Every helper here is pure jnp and safe inside jit / shard_map / pallas
+reference paths.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+KV_DTYPES = ("bf16", "int8", "fp8_e4m3")
+
+_QMAX = {"int8": 127.0, "fp8_e4m3": 448.0}
+
+# guard a division by an all-zero line (fresh pool pages are zeros)
+_SCALE_FLOOR = 1e-12
+
+
+def validate_kv_dtype(kv_dtype: str) -> str:
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"kv_dtype {kv_dtype!r} not in {KV_DTYPES}")
+    if kv_dtype == "fp8_e4m3" and not hasattr(jnp, "float8_e4m3fn"):
+        raise ValueError("fp8_e4m3 needs jnp.float8_e4m3fn (jax too old)")
+    return kv_dtype
+
+
+def is_quantized(kv_dtype: str) -> bool:
+    return kv_dtype != "bf16"
+
+
+def store_dtype(kv_dtype: str, value_dtype) -> object:
+    """The dtype pages are stored in: the model dtype for bf16, else the
+    quantized storage type."""
+    if kv_dtype == "bf16":
+        return value_dtype
+    if kv_dtype == "int8":
+        return jnp.int8
+    validate_kv_dtype(kv_dtype)
+    return jnp.float8_e4m3fn
+
+
+def store_itemsize(kv_dtype: str, value_dtype) -> int:
+    return jnp.dtype(store_dtype(kv_dtype, value_dtype)).itemsize
+
+
+def qmax(kv_dtype: str) -> float:
+    return _QMAX[kv_dtype]
+
+
+def quantize(x, kv_dtype: str, axis):
+    """Quantize ``x`` over ``axis`` (the per-line value axis/axes).
+
+    Returns ``(q, scale)``: ``q`` in :func:`store_dtype`, ``scale`` float32
+    with ``axis`` reduced away.  ``dequant = q.astype(f32) * scale``.
+    """
+    m = _QMAX[kv_dtype]
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=axis)
+    scale = jnp.maximum(absmax / m, _SCALE_FLOOR)
+    y = xf / jnp.expand_dims(scale, axis)
+    if kv_dtype == "int8":
+        q = jnp.clip(jnp.round(y), -m, m).astype(jnp.int8)
+    else:
+        q = jnp.clip(y, -m, m).astype(jnp.float8_e4m3fn)
+    return q, scale
+
+
+def dequantize(q, scale):
+    """``q.astype(f32) * scale`` with scale broadcast over trailing axes."""
+    extra = q.ndim - scale.ndim
+    return q.astype(jnp.float32) * scale.reshape(scale.shape + (1,) * extra)

@@ -87,6 +87,12 @@ def main():
                     default=None,
                     help="paged-attention kernel backend (kernels/ops.py "
                          "registry; default = registry 'auto')")
+    ap.add_argument("--kv-dtype", choices=["bf16", "int8", "fp8_e4m3"],
+                    default=None,
+                    help="KV-page storage dtype (kernels/quantize.py): "
+                         "quantized pools store int8/fp8 values with "
+                         "per-page-line f32 scales, shrinking the decode "
+                         "page walk ~2x (default = model config, bf16)")
     ap.add_argument("--mesh", default="1,1",
                     help="device mesh 'dp,tp' for tensor-parallel decode "
                          "(serve/shard.py; needs dp*tp visible devices — "
@@ -136,7 +142,8 @@ def main():
         prefix_cache=args.prefix_cache,
         num_pages=args.num_pages or None,
         watermark=args.watermark, preempt_mode=args.preempt,
-        pipeline=args.pipeline, overlap=args.overlap)
+        pipeline=args.pipeline, overlap=args.overlap,
+        kv_dtype=args.kv_dtype)
     scfg = None
     if args.spec != "off":
         if not supports_spec(cfg):

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kernel_ops
+from repro.kernels import quantize as kvq
 from repro.parallel import collectives as coll
 from repro.parallel.sharding import ParamDef, constrain
 from .common import ModelConfig
@@ -179,16 +180,46 @@ def paged_pool_defs(cfg: ModelConfig, num_pages: int, page_size: int
 
     Pages carry no batch dim — a per-slot block table maps logical block
     index -> physical page, so slots of different lengths share one pool
-    (vLLM-style paging; the block table is shared across layers)."""
+    (vLLM-style paging; the block table is shared across layers).
+
+    With ``cfg.kv_dtype`` quantized (int8 / fp8_e4m3) the k/v pools store
+    quantized values plus float32 absmax scales per (page, line, kv_head).
+    Scales carry the same ``kv_seq``/``kv_heads`` logical axes as the
+    pools minus ``head_dim``, so under tensor parallelism they shard WITH
+    the kv heads and every page lifecycle op (CoW, swap, migration) treats
+    them as just another paged leaf."""
     KV, hd = cfg.n_kv_heads, cfg.hd
-    return {
+    store = kvq.store_dtype(cfg.kv_dtype, cfg.dtype)
+    defs = {
         "k": ParamDef((num_pages, page_size, KV, hd),
-                      ("none", "kv_seq", "kv_heads", "head_dim"), cfg.dtype,
+                      ("none", "kv_seq", "kv_heads", "head_dim"), store,
                       init="zeros"),
         "v": ParamDef((num_pages, page_size, KV, hd),
-                      ("none", "kv_seq", "kv_heads", "head_dim"), cfg.dtype,
+                      ("none", "kv_seq", "kv_heads", "head_dim"), store,
                       init="zeros"),
     }
+    if kvq.is_quantized(cfg.kv_dtype):
+        for name in ("k_scale", "v_scale"):
+            defs[name] = ParamDef((num_pages, page_size, KV),
+                                  ("none", "kv_seq", "kv_heads"), "float32",
+                                  init="ones")
+    return defs
+
+
+def _commit_kv(pool: Dict[str, jax.Array], name: str, blk, off, new,
+               cfg: ModelConfig) -> Dict[str, jax.Array]:
+    """Write new K or V lines into the page pool, quantizing on the way in
+    when the pool is quantized.  ``new`` (..., KV, hd) indexed by
+    ``blk``/``off`` of matching leading shape; returns the updated leaves
+    ({name} and, when quantized, {name}_scale)."""
+    out = {}
+    if f"{name}_scale" in pool:
+        q, s = kvq.quantize(new, cfg.kv_dtype, -1)
+        out[name] = pool[name].at[blk, off].set(q)
+        out[f"{name}_scale"] = pool[f"{name}_scale"].at[blk, off].set(s)
+    else:
+        out[name] = pool[name].at[blk, off].set(new.astype(pool[name].dtype))
+    return out
 
 
 def decode_attention_paged(
@@ -216,12 +247,15 @@ def decode_attention_paged(
     q, k_new, v_new = _project_qkv(p, x, x, cfg, posb, posb)
     blk = jnp.take_along_axis(block_tables, posb // page_size, axis=1)[:, 0]
     off = pos % page_size
-    pool_k = pool["k"].at[blk, off].set(k_new[:, 0].astype(pool["k"].dtype))
-    pool_v = pool["v"].at[blk, off].set(v_new[:, 0].astype(pool["v"].dtype))
+    pool = {**pool,
+            **_commit_kv(pool, "k", blk, off, k_new[:, 0], cfg),
+            **_commit_kv(pool, "v", blk, off, v_new[:, 0], cfg)}
     with jax.named_scope("paged_attention"):
         o = kernel_ops.paged_attention(
-            q.reshape(B, KV, G, hd), pool_k, pool_v, block_tables, pos,
-            scale=1.0 / (hd ** 0.5), soft_cap=cfg.attn_logit_soft_cap,
+            q.reshape(B, KV, G, hd), pool["k"], pool["v"], block_tables,
+            pos, scale=1.0 / (hd ** 0.5),
+            soft_cap=cfg.attn_logit_soft_cap,
+            k_scale=pool.get("k_scale"), v_scale=pool.get("v_scale"),
             backend=backend, sharded=cfg.tp_axis is not None,
             pipeline=pipeline,
             ).reshape(B, 1, H, hd)
@@ -236,7 +270,7 @@ def decode_attention_paged(
         if cfg.tp_axis is not None:
             # head-parallel shard: the o-proj contracted local heads only
             out = coll.row_parallel_psum(out, cfg.tp_axis)
-    return constrain(out, "batch", "seq", "d_model"), {"k": pool_k, "v": pool_v}
+    return constrain(out, "batch", "seq", "d_model"), pool
 
 
 def decode_verify_paged(
@@ -266,12 +300,15 @@ def decode_verify_paged(
     blk_idx = jnp.minimum(posq // page_size, n_blocks - 1)
     blk = jnp.take_along_axis(block_tables, blk_idx, axis=1)    # (B, T)
     off = posq % page_size
-    pool_k = pool["k"].at[blk, off].set(k_new.astype(pool["k"].dtype))
-    pool_v = pool["v"].at[blk, off].set(v_new.astype(pool["v"].dtype))
+    pool = {**pool,
+            **_commit_kv(pool, "k", blk, off, k_new, cfg),
+            **_commit_kv(pool, "v", blk, off, v_new, cfg)}
     with jax.named_scope("paged_attention"):
         o = kernel_ops.paged_attention_verify(
-            q.reshape(B, T, KV, G, hd), pool_k, pool_v, block_tables, pos,
-            scale=1.0 / (hd ** 0.5), soft_cap=cfg.attn_logit_soft_cap,
+            q.reshape(B, T, KV, G, hd), pool["k"], pool["v"], block_tables,
+            pos, scale=1.0 / (hd ** 0.5),
+            soft_cap=cfg.attn_logit_soft_cap,
+            k_scale=pool.get("k_scale"), v_scale=pool.get("v_scale"),
             backend=backend, sharded=cfg.tp_axis is not None,
             pipeline=pipeline,
             ).reshape(B, T, H, hd)
@@ -283,8 +320,7 @@ def decode_verify_paged(
         out = jnp.einsum("bqhx,hxd->bqd", o.astype(x.dtype), p["wo"])
         if cfg.tp_axis is not None:
             out = coll.row_parallel_psum(out, cfg.tp_axis)
-    return constrain(out, "batch", "seq", "d_model"), {"k": pool_k,
-                                                       "v": pool_v}
+    return constrain(out, "batch", "seq", "d_model"), pool
 
 
 def prefill_attention_paged(
@@ -300,18 +336,29 @@ def prefill_attention_paged(
     idx = offset + jnp.arange(T, dtype=jnp.int32)               # (T,)
     q, k_new, v_new = _project_qkv(p, x, x, cfg, idx[None, :], idx[None, :])
     blk, off = block_table[idx // page_size], idx % page_size
-    pool_k = pool["k"].at[blk, off].set(k_new[0].astype(pool["k"].dtype))
-    pool_v = pool["v"].at[blk, off].set(v_new[0].astype(pool["v"].dtype))
+    pool = {**pool,
+            **_commit_kv(pool, "k", blk, off, k_new[0], cfg),
+            **_commit_kv(pool, "v", blk, off, v_new[0], cfg)}
     S = block_table.shape[0] * page_size
-    k = pool_k[block_table].reshape(1, S, KV, hd)
-    v = pool_v[block_table].reshape(1, S, KV, hd)
+    if "k_scale" in pool:
+        # chunked prefill re-reads earlier chunks through the quantized
+        # pages — the same dequantized values every later decode step sees
+        k = kvq.dequantize(pool["k"][block_table],
+                           pool["k_scale"][block_table]).astype(cfg.dtype)
+        v = kvq.dequantize(pool["v"][block_table],
+                           pool["v_scale"][block_table]).astype(cfg.dtype)
+        k = k.reshape(1, S, KV, hd)
+        v = v.reshape(1, S, KV, hd)
+    else:
+        k = pool["k"][block_table].reshape(1, S, KV, hd)
+        v = pool["v"][block_table].reshape(1, S, KV, hd)
     q = q.reshape(B, T, KV, G, hd)
     k_pos = jnp.arange(S, dtype=jnp.int32)[None, :]
     o = _attn_core(q, k, v, idx[None, :], k_pos, causal=True,
                    scale=1.0 / (hd ** 0.5),
                    soft_cap=cfg.attn_logit_soft_cap).reshape(B, T, H, hd)
     out = jnp.einsum("bqhx,hxd->bqd", o, p["wo"])
-    return constrain(out, "batch", "seq", "d_model"), {"k": pool_k, "v": pool_v}
+    return constrain(out, "batch", "seq", "d_model"), pool
 
 
 def decode_attention(

@@ -86,6 +86,12 @@ class ModelConfig:
 
     # numerics / training
     dtype: str = "bfloat16"
+    # paged-KV storage dtype (serve path): "bf16" stores pages in ``dtype``
+    # (no quantization); "int8" / "fp8_e4m3" store quantized values with a
+    # float32 scale per (page, line[, kv_head]) living alongside the pool
+    # and dequantize inside the paged-attention page walk.  See
+    # kernels/quantize.py for the exact scheme.
+    kv_dtype: str = "bf16"
     remat: str = "full"              # full | dots | none
     max_seq_len: int = 524288
     # §Perf levers (off in the paper-faithful baseline)

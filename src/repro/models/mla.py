@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kernel_ops
+from repro.kernels import quantize as kvq
 from repro.parallel import collectives as coll
 from repro.parallel.sharding import ParamDef, constrain
 from .common import ModelConfig
@@ -149,13 +150,38 @@ def mla_cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Para
 def mla_paged_pool_defs(cfg: ModelConfig, num_pages: int, page_size: int
                         ) -> Dict[str, ParamDef]:
     """Physical page pool for the latent cache: (num_pages, page, r) — same
-    block-table indirection as the GQA pool, ~57x fewer bytes per token."""
-    return {
+    block-table indirection as the GQA pool, ~57x fewer bytes per token.
+
+    With ``cfg.kv_dtype`` quantized the latent/rope pools store quantized
+    values plus a float32 absmax scale per (page, line) — the latent
+    vector is one quantization group.  Latent pools replicate under TP, so
+    the per-line scales do too."""
+    store = kvq.store_dtype(cfg.kv_dtype, cfg.dtype)
+    defs = {
         "c_kv": ParamDef((num_pages, page_size, cfg.kv_lora_rank),
-                         ("none", "kv_seq", "none"), cfg.dtype, init="zeros"),
+                         ("none", "kv_seq", "none"), store, init="zeros"),
         "k_rope": ParamDef((num_pages, page_size, cfg.rope_head_dim),
-                           ("none", "kv_seq", "none"), cfg.dtype, init="zeros"),
+                           ("none", "kv_seq", "none"), store, init="zeros"),
     }
+    if kvq.is_quantized(cfg.kv_dtype):
+        for name in ("c_kv_scale", "k_rope_scale"):
+            defs[name] = ParamDef((num_pages, page_size),
+                                  ("none", "kv_seq"), "float32", init="ones")
+    return defs
+
+
+def _commit_latent(pool: Dict[str, jax.Array], name: str, blk, off, new,
+                   cfg: ModelConfig) -> Dict[str, jax.Array]:
+    """Write new latent/rope lines into the page pool, quantizing on the
+    way in when the pool is quantized (see attention._commit_kv)."""
+    out = {}
+    if f"{name}_scale" in pool:
+        q, s = kvq.quantize(new, cfg.kv_dtype, -1)
+        out[name] = pool[name].at[blk, off].set(q)
+        out[f"{name}_scale"] = pool[f"{name}_scale"].at[blk, off].set(s)
+    else:
+        out[name] = pool[name].at[blk, off].set(new.astype(pool[name].dtype))
+    return out
 
 
 def _mla_attend(p, q_nope, q_rope, c_kv, k_rope, valid, cfg: ModelConfig):
@@ -210,14 +236,18 @@ def mla_decode_paged(p, x: jax.Array, pool: Dict[str, jax.Array],
     c_new, kr_new = _latent_kv(p, x, posb, cfg)
     blk = jnp.take_along_axis(block_tables, posb // page_size, axis=1)[:, 0]
     off = pos % page_size
-    pool_c = pool["c_kv"].at[blk, off].set(c_new[:, 0].astype(pool["c_kv"].dtype))
-    pool_r = pool["k_rope"].at[blk, off].set(kr_new[:, 0].astype(pool["k_rope"].dtype))
+    pool = {**pool,
+            **_commit_latent(pool, "c_kv", blk, off, c_new[:, 0], cfg),
+            **_commit_latent(pool, "k_rope", blk, off, kr_new[:, 0], cfg)}
     scale = 1.0 / ((dn + dr) ** 0.5)
     q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"])     # (B,1,H,r)
     with jax.named_scope("paged_attention"):
         o_lat = kernel_ops.mla_paged_attention(
-            q_lat[:, 0], q_rope[:, 0], pool_c, pool_r, block_tables, pos,
-            scale=scale, backend=backend,
+            q_lat[:, 0], q_rope[:, 0], pool["c_kv"], pool["k_rope"],
+            block_tables, pos, scale=scale,
+            c_scale=pool.get("c_kv_scale"),
+            r_scale=pool.get("k_rope_scale"),
+            backend=backend,
             sharded=cfg.tp_axis is not None,
             pipeline=pipeline)[:, None]                         # (B,1,H,r)
     o = jnp.einsum("bqhr,rhk->bqhk", o_lat.astype(x.dtype), p["wv_b"])
@@ -234,7 +264,7 @@ def mla_decode_paged(p, x: jax.Array, pool: Dict[str, jax.Array],
             # local heads only
             out = coll.row_parallel_psum(out, cfg.tp_axis)
     out = constrain(out, "batch", "seq", "d_model")
-    return out, {"c_kv": pool_c, "k_rope": pool_r}
+    return out, pool
 
 
 def mla_decode_verify_paged(p, x: jax.Array, pool: Dict[str, jax.Array],
@@ -262,15 +292,18 @@ def mla_decode_verify_paged(p, x: jax.Array, pool: Dict[str, jax.Array],
     blk_idx = jnp.minimum(posq // page_size, n_blocks - 1)
     blk = jnp.take_along_axis(block_tables, blk_idx, axis=1)
     off = posq % page_size
-    pool_c = pool["c_kv"].at[blk, off].set(c_new.astype(pool["c_kv"].dtype))
-    pool_r = pool["k_rope"].at[blk, off].set(
-        kr_new.astype(pool["k_rope"].dtype))
+    pool = {**pool,
+            **_commit_latent(pool, "c_kv", blk, off, c_new, cfg),
+            **_commit_latent(pool, "k_rope", blk, off, kr_new, cfg)}
     scale = 1.0 / ((dn + dr) ** 0.5)
     q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["wk_b"])     # (B,T,H,r)
     with jax.named_scope("paged_attention"):
         o_lat = kernel_ops.mla_paged_attention_verify(
-            q_lat, q_rope, pool_c, pool_r, block_tables, pos,
-            scale=scale, backend=backend,
+            q_lat, q_rope, pool["c_kv"], pool["k_rope"], block_tables, pos,
+            scale=scale,
+            c_scale=pool.get("c_kv_scale"),
+            r_scale=pool.get("k_rope_scale"),
+            backend=backend,
             sharded=cfg.tp_axis is not None,
             pipeline=pipeline)                                  # (B,T,H,r)
     o = jnp.einsum("bqhr,rhk->bqhk", o_lat.astype(x.dtype), p["wv_b"])
@@ -284,7 +317,7 @@ def mla_decode_verify_paged(p, x: jax.Array, pool: Dict[str, jax.Array],
         if cfg.tp_axis is not None:
             out = coll.row_parallel_psum(out, cfg.tp_axis)
     out = constrain(out, "batch", "seq", "d_model")
-    return out, {"c_kv": pool_c, "k_rope": pool_r}
+    return out, pool
 
 
 def mla_prefill_paged(p, x: jax.Array, pool: Dict[str, jax.Array],
@@ -298,15 +331,24 @@ def mla_prefill_paged(p, x: jax.Array, pool: Dict[str, jax.Array],
     q_nope, q_rope = _queries(p, x, idx[None, :], cfg)
     c_new, kr_new = _latent_kv(p, x, idx[None, :], cfg)
     blk, off = block_table[idx // page_size], idx % page_size
-    pool_c = pool["c_kv"].at[blk, off].set(c_new[0].astype(pool["c_kv"].dtype))
-    pool_r = pool["k_rope"].at[blk, off].set(kr_new[0].astype(pool["k_rope"].dtype))
+    pool = {**pool,
+            **_commit_latent(pool, "c_kv", blk, off, c_new[0], cfg),
+            **_commit_latent(pool, "k_rope", blk, off, kr_new[0], cfg)}
     S = block_table.shape[0] * page_size
-    c_kv = pool_c[block_table].reshape(1, S, -1)
-    k_rope = pool_r[block_table].reshape(1, S, -1)
+    if "c_kv_scale" in pool:
+        c_kv = kvq.dequantize(pool["c_kv"][block_table],
+                              pool["c_kv_scale"][block_table]
+                              ).astype(cfg.dtype).reshape(1, S, -1)
+        k_rope = kvq.dequantize(pool["k_rope"][block_table],
+                                pool["k_rope_scale"][block_table]
+                                ).astype(cfg.dtype).reshape(1, S, -1)
+    else:
+        c_kv = pool["c_kv"][block_table].reshape(1, S, -1)
+        k_rope = pool["k_rope"][block_table].reshape(1, S, -1)
     valid = (idx[:, None] >= jnp.arange(S, dtype=jnp.int32)[None, :])[None]
     out = _mla_attend(p, q_nope, q_rope, c_kv, k_rope, valid, cfg)
     out = constrain(out, "batch", "seq", "d_model")
-    return out, {"c_kv": pool_c, "k_rope": pool_r}
+    return out, pool
 
 
 def mla_decode(p, x: jax.Array, cache: Dict[str, jax.Array], pos: jax.Array,

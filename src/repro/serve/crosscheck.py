@@ -349,9 +349,12 @@ def _kernel_grid_vmem_walk(cfg, context_len: int, page_size: int,
     closed-form pricing (kernels.paged_decode_vmem_bytes) must agree
     with this walk; drift means someone changed the kernel's block
     geometry without repricing the ledger."""
+    from repro.kernels import quantize as kvq
     from repro.kernels.paged_attention import _check_pipeline, live_blocks
     _check_pipeline(pipeline)
     isize = jnp.dtype(cfg.dtype).itemsize
+    kv_isize = kvq.store_itemsize(cfg.kv_dtype, cfg.dtype)
+    s = 4 if kvq.is_quantized(cfg.kv_dtype) else 0
     nb = live_blocks(context_len, page_size, n_q)
     q_steps = nb if pipeline == "off" else 1
     total = 0.0
@@ -361,22 +364,26 @@ def _kernel_grid_vmem_walk(cfg, context_len: int, page_size: int,
                 KV, G, hd = (cfg.n_kv_heads,
                              cfg.n_heads // cfg.n_kv_heads, cfg.hd)
                 rows = G * n_q
-                per_step = (2 * page_size * hd * isize    # k + v slabs
+                # quantized pools stream (page, hd) k/v slabs at the
+                # storage itemsize plus a (page,) f32 scale slab each
+                kv_line = hd * kv_isize + s
+                per_step = (2 * page_size * kv_line       # k + v (+scale)
                             + 2 * rows * (hd + 2) * 4)    # m/l/acc r+w
                 walk = KV * (q_steps * rows * hd * isize  # q block(s)
                              + nb * per_step
                              + rows * hd * isize)         # out flush
-                walk += n_q * 2 * KV * hd * isize        # appended line
+                walk += n_q * 2 * KV * kv_line            # appended line
             elif b.mixer == "mla":
                 H, r, dr = (cfg.n_heads, cfg.kv_lora_rank,
                             cfg.rope_head_dim)
                 rows = H * n_q
-                per_step = (page_size * (r + dr) * isize  # c + r slabs
+                kv_line = (r + dr) * kv_isize + 2 * s     # c + rope scales
+                per_step = (page_size * kv_line           # c + r slabs
                             + 2 * rows * (r + 2) * 4)     # m/l/acc r+w
                 walk = (q_steps * rows * (r + dr) * isize  # ql + qr blocks
                         + nb * per_step
                         + rows * r * isize)               # out flush
-                walk += n_q * (r + dr) * isize            # appended line
+                walk += n_q * kv_line                     # appended line
             else:
                 continue
             total += reps * walk

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.roofline.hardware import ChipSpec, TPU_V5E
+from repro.kernels import quantize
 from repro.models import (decode_step, decode_step_paged, init_cache,
                           prefill, prefill_chunk_paged, prefill_padded)
 from repro.models.common import ModelConfig, model_flops
@@ -75,6 +76,11 @@ class EngineConfig:
     preempt_mode: str = "swap"        # "swap" | "recompute" on pool-dry
     pipeline: str = "off"             # kernel page streaming: "off"|"double"
     overlap: str = "none"             # TP epilogue schedule: "none"|"ring"
+    # paged-KV storage dtype override: None keeps the model config's
+    # ``kv_dtype``; "bf16"|"int8"|"fp8_e4m3" rewrite it at engine build
+    # (kernels/quantize.py — quantized pools store int8/fp8 values with
+    # per-line f32 scales and dequantize inside the page walk)
+    kv_dtype: Optional[str] = None
 
 
 def _bucket_len(n: int, floor: int) -> int:
@@ -175,9 +181,13 @@ class Engine:
 
     def __init__(self, cfg: ModelConfig, params,
                  ecfg: Optional[EngineConfig] = None):
+        self.ecfg = ecfg or EngineConfig()
+        if (self.ecfg.kv_dtype is not None
+                and self.ecfg.kv_dtype != cfg.kv_dtype):
+            quantize.validate_kv_dtype(self.ecfg.kv_dtype)
+            cfg = dataclasses.replace(cfg, kv_dtype=self.ecfg.kv_dtype)
         self.cfg = cfg
         self.params = params
-        self.ecfg = ecfg or EngineConfig()
         self.paged_ok = supports_paging(cfg)
         self._static: Optional[StaticEngine] = None
         self._kv: Optional[PagedKVCache] = None

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import quantize as kvq
 from repro.models.common import ModelConfig
 from repro.models import transformer as tfm
 from repro.parallel.sharding import ParamDef, tree_instantiate
@@ -582,6 +583,7 @@ class PagedKVCache:
         idx = np.arange(start, prompt_len)
         phys = jnp.asarray(row[idx // self.page_size])
         off = jnp.asarray(idx % self.page_size)
+        states = self._quantize_states(states)
 
         def f(pool, state, paged):
             if paged:
@@ -594,10 +596,39 @@ class PagedKVCache:
             self.pools[i] = jax.tree.map(f, seg_pool, seg_state,
                                          self._paged[i])
 
+    def _quantize_states(self, states: List[Any]) -> List[Any]:
+        """Quantized pools (cfg.kv_dtype != bf16) carry per-line scale
+        leaves the collected prefill states don't have: quantize each
+        value stream over its line axis (the same kernels/quantize.py op
+        the decode commit path uses) and add the matching ``*_scale``
+        state, so the paged scatter is a plain tree.map over identical
+        structures — and the ``astype(pool.dtype)`` on the already-
+        quantized values is a no-op, never a raw cast."""
+        if not kvq.is_quantized(self.cfg.kv_dtype):
+            return states
+        out: List[Any] = []
+        for seg_pool, seg_state in zip(self.pools, states):
+            new_seg = {}
+            for bname, blk_pool in seg_pool.items():
+                blk = dict(seg_state[bname])
+                for name in blk_pool:
+                    if not name.endswith("_scale"):
+                        continue
+                    base = name[: -len("_scale")]
+                    q, s = kvq.quantize(blk[base], self.cfg.kv_dtype, -1)
+                    blk[base] = q
+                    blk[name] = s
+                new_seg[bname] = blk
+            out.append(new_seg)
+        return out
+
     def dense_view(self, slot: int) -> List[Any]:
         """Gather one slot's cache back into the dense ``init_cache`` layout
         (batch 1): paged leaves -> (reps, 1, max_len, ...), state leaves ->
-        (reps, 1, ...).  For tests and debugging."""
+        (reps, 1, ...).  Quantized pools are dequantized back to the model
+        dtype and their scale leaves dropped, so the view matches the
+        dense layout regardless of ``kv_dtype``.  For tests and debugging.
+        """
         row = jnp.asarray(self.block_tables[slot])
 
         def f(pool, paged):
@@ -608,5 +639,13 @@ class PagedKVCache:
                                  *g.shape[3:])[:, :, : self.max_len]
             return jax.lax.dynamic_slice_in_dim(pool, slot, 1, axis=1)
 
-        return [jax.tree.map(f, seg, flag)
-                for seg, flag in zip(self.pools, self._paged)]
+        dense = [jax.tree.map(f, seg, flag)
+                 for seg, flag in zip(self.pools, self._paged)]
+        if kvq.is_quantized(self.cfg.kv_dtype):
+            for seg in dense:
+                for blk in seg.values():
+                    for name in [n for n in blk if n.endswith("_scale")]:
+                        base = name[: -len("_scale")]
+                        blk[base] = kvq.dequantize(
+                            blk[base], blk.pop(name)).astype(self.cfg.dtype)
+        return dense

@@ -24,8 +24,11 @@ Semantics (per row ``b``):
   the draw (ties at the k-th value are all kept, the usual caveat).
 * ``0 < top_ps[b] < 1`` -> nucleus (top-p) filter: only the smallest set
   of tokens whose probability mass reaches ``top_ps[b]`` survives.  Both
-  filters share ONE descending sort (the O(V log V) the top-k pass already
-  pays), so adding top-p costs a cumsum, not a second sort.
+  filters reduce to per-row *value* thresholds, found either by ONE
+  shared descending sort (``_filter_logits_sort``) or, when k << V — the
+  serving case — by a sort-free partitioned-threshold scan
+  (``_filter_logits_scan``: 32 binary-radix compare+reduce passes that
+  run at memory bandwidth); ``_filter_logits`` dispatches between them.
 
 This module also hosts the speculative-decoding acceptance rule
 (:func:`spec_accept`): the Leviathan/Chen rejection-sampling step that
@@ -71,9 +74,9 @@ def batch_key_data(rng: Optional[jax.Array], batch: int) -> np.ndarray:
     return np.asarray(keys, np.uint32)
 
 
-def _filter_logits(logits: jax.Array, top_ks: jax.Array,
-                   top_ps: Optional[jax.Array] = None,
-                   temps: Optional[jax.Array] = None) -> jax.Array:
+def _filter_logits_sort(logits: jax.Array, top_ks: jax.Array,
+                        top_ps: Optional[jax.Array] = None,
+                        temps: Optional[jax.Array] = None) -> jax.Array:
     """Mask logits outside each row's top-k and/or nucleus (0 = keep all).
 
     ``top_ks`` is traced, so the k-th threshold comes from a full
@@ -84,8 +87,8 @@ def _filter_logits(logits: jax.Array, top_ks: jax.Array,
     membership reduces to a per-row logit threshold.  Nucleus mass is
     measured on the TEMPERED distribution — the one actually sampled from
     (temperature-then-top-p, the HF/vLLM convention).  One O(V log V)
-    sort serves both filters — swap for a partitioned threshold pass if V
-    ever dominates the decode step.  Ties at either threshold are all
+    sort serves both filters (:func:`_filter_logits_scan` is the
+    sort-free twin for k << V).  Ties at either threshold are all
     kept, the usual caveat.
     """
     V = logits.shape[-1]
@@ -114,6 +117,93 @@ def _filter_logits(logits: jax.Array, top_ks: jax.Array,
         off = (top_ps[:, None] <= 0.0) | (top_ps[:, None] >= 1.0)
         keep = keep & (off | (logits >= p_thresh))
     return jnp.where(keep, logits, NEG_INF)
+
+
+def _sortable_bits(x: jax.Array) -> jax.Array:
+    """Map float32 to uint32 monotonically: a >= b iff map(a) >= map(b).
+    The standard radix-sort key (flip the sign bit for positives, all
+    bits for negatives) — lets value thresholds be bisected bit by bit."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    return jnp.where(bits >> 31 != 0, ~bits,
+                     bits | jnp.uint32(0x80000000))
+
+
+def _threshold_scan(mapped: jax.Array, weights: jax.Array,
+                    target: jax.Array) -> jax.Array:
+    """Per-row largest uint32 threshold ``t`` with
+    ``sum(weights[mapped >= t]) >= target`` — 32 binary-radix partition
+    steps, each one streaming compare + masked reduce over the row.  The
+    weighted count is non-increasing in ``t``, so fixing one threshold
+    bit at a time (high to low) lands exactly on the boundary value."""
+    B = mapped.shape[0]
+
+    def step(i, t):
+        cand = t | (jnp.uint32(1) << (jnp.uint32(31) - jnp.uint32(i)))
+        hit = jnp.sum(jnp.where(mapped >= cand[:, None], weights, 0.0),
+                      axis=-1)
+        return jnp.where(hit >= target, cand, t)
+
+    return jax.lax.fori_loop(0, 32, step, jnp.zeros((B,), jnp.uint32))
+
+
+def _filter_logits_scan(logits: jax.Array, top_ks: jax.Array,
+                        top_ps: Optional[jax.Array] = None,
+                        temps: Optional[jax.Array] = None) -> jax.Array:
+    """Partitioned-threshold twin of :func:`_filter_logits_sort`: same
+    keep semantics, no sort.
+
+    The k-th-largest logit and the nucleus boundary are both *value*
+    thresholds (the kept set is always an upper set of logit values), so
+    each is found by :func:`_threshold_scan` — 32 streaming O(V) passes
+    instead of an O(V log V) sort, the win the serving case (k << V)
+    cares about: the scan is pure compare-and-reduce over the logit row,
+    so it runs at memory bandwidth and fuses into the decode step.  The
+    top-k pass counts survivors (weights 1); the top-p pass reuses the
+    same mapped bits with the tempered top-k-renormalized probabilities
+    as weights, finding the smallest value whose strictly-above mass is
+    still short of ``top_ps`` (the first token always survives).  Ties at
+    either threshold are all kept — for tie-free logits the selection is
+    identical to the sort path (ties at the k-th value differ: the sort
+    path's nucleus mass counts exactly k ranks, the scan all ties)."""
+    V = logits.shape[-1]
+    mapped = _sortable_bits(logits)
+    k_tgt = jnp.clip(top_ks.astype(jnp.int32), 1, V).astype(jnp.float32)
+    t_k = _threshold_scan(mapped, jnp.ones(logits.shape, jnp.float32),
+                          k_tgt)
+    in_k = (top_ks[:, None] <= 0) | (mapped >= t_k[:, None])
+    keep = in_k
+    if top_ps is not None:
+        scaled = logits.astype(jnp.float32)
+        if temps is not None:
+            safe_t = jnp.maximum(temps, 1e-6).astype(jnp.float32)
+            scaled = scaled / safe_t[:, None]
+        probs = jax.nn.softmax(jnp.where(in_k, scaled, NEG_INF), axis=-1)
+        t_p = _threshold_scan(mapped, jnp.where(in_k, probs, 0.0),
+                              top_ps.astype(jnp.float32))
+        off = (top_ps[:, None] <= 0.0) | (top_ps[:, None] >= 1.0)
+        keep = keep & (off | (mapped >= t_p[:, None]))
+    return jnp.where(keep, logits, NEG_INF)
+
+
+# below this vocab size one sort is cheaper than 32 streaming passes, and
+# the auto dispatch does not bother tracing the scan branch at all
+_SCAN_MIN_VOCAB = 1024
+
+
+def _filter_logits(logits: jax.Array, top_ks: jax.Array,
+                   top_ps: Optional[jax.Array] = None,
+                   temps: Optional[jax.Array] = None) -> jax.Array:
+    """Dispatch between the sort and partitioned-scan filters: the scan
+    when every requested k sits far below V (the serving case — top-k
+    64 over a 150k vocab), the full sort otherwise (large k amortizes
+    the sort; ``top_ks`` is traced so the choice is a runtime cond)."""
+    V = logits.shape[-1]
+    if V < _SCAN_MIN_VOCAB:
+        return _filter_logits_sort(logits, top_ks, top_ps, temps)
+    small = jnp.max(top_ks) * 8 <= V
+    return jax.lax.cond(
+        small, lambda l: _filter_logits_scan(l, top_ks, top_ps, temps),
+        lambda l: _filter_logits_sort(l, top_ks, top_ps, temps), logits)
 
 
 def _maybe_filter(logits: jax.Array, top_ks: jax.Array,

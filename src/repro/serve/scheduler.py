@@ -69,6 +69,7 @@ import numpy as np
 
 from repro.core.roofline.hardware import ChipSpec, TPU_V5E, tp_scope
 from repro.core.roofline.model import PhaseTraffic, RooflineTerms, make_terms
+from repro.kernels import quantize as kvq
 from repro.kernels.paged_attention import (mla_paged_decode_vmem_bytes,
                                            paged_decode_vmem_bytes)
 from repro.models.common import ModelConfig, model_flops, param_counts
@@ -85,18 +86,35 @@ def _dtype_bytes(dtype: str) -> int:
     return jnp.dtype(dtype).itemsize
 
 
+def _kv_store_isize(cfg: ModelConfig) -> int:
+    """Itemsize KV pages are stored at (quantized storage type when
+    cfg.kv_dtype != bf16, else the activation dtype)."""
+    return kvq.store_itemsize(cfg.kv_dtype, cfg.dtype)
+
+
+def _kv_scale_isize(cfg: ModelConfig) -> int:
+    """Per-line f32 scale bytes a quantized pool adds (0 when bf16)."""
+    return 4 if kvq.is_quantized(cfg.kv_dtype) else 0
+
+
 @functools.lru_cache(maxsize=None)
 def kv_line_bytes(cfg: ModelConfig) -> int:
     """Bytes of growing cache per token summed over all layers: the KV line
-    read once per context token per decode step."""
-    isize = _dtype_bytes(cfg.dtype)
+    read once per context token per decode step.  Quantized pools
+    (cfg.kv_dtype int8/fp8_e4m3) shrink the value bytes to the storage
+    itemsize and add the per-line float32 scales the page walk streams
+    alongside — one per kv head for GQA (k and v each), two per line for
+    MLA (latent + rope)."""
+    isize = _kv_store_isize(cfg)
+    s = _kv_scale_isize(cfg)
     total = 0
     for unit, reps in cfg.segments():
         for b in unit:
             if b.mixer == "attn":
-                total += 2 * cfg.n_kv_heads * cfg.hd * isize * reps
+                total += 2 * cfg.n_kv_heads * (cfg.hd * isize + s) * reps
             elif b.mixer == "mla":
-                total += (cfg.kv_lora_rank + cfg.rope_head_dim) * isize * reps
+                total += ((cfg.kv_lora_rank + cfg.rope_head_dim) * isize
+                          + 2 * s) * reps
     return total
 
 
@@ -154,6 +172,8 @@ def attn_kernel_vmem_bytes(cfg: ModelConfig, context_len: int,
     ``pipeline="double"`` prices the two-slab DMA kernels (query slab
     fetched once per program instead of per block step)."""
     isize = _dtype_bytes(cfg.dtype)
+    kv_isize = _kv_store_isize(cfg)
+    scale_isize = _kv_scale_isize(cfg)
     total = 0.0
     for unit, reps in cfg.segments():
         for b in unit:
@@ -162,13 +182,15 @@ def attn_kernel_vmem_bytes(cfg: ModelConfig, context_len: int,
                     context_len=context_len, page_size=page_size,
                     n_heads=cfg.n_heads, kv_heads=cfg.n_kv_heads,
                     head_dim=cfg.hd, isize=isize, n_q=n_q,
-                    pipeline=pipeline)
+                    pipeline=pipeline, kv_isize=kv_isize,
+                    scale_isize=scale_isize)
             elif b.mixer == "mla":
                 total += reps * mla_paged_decode_vmem_bytes(
                     context_len=context_len, page_size=page_size,
                     n_heads=cfg.n_heads, lora_rank=cfg.kv_lora_rank,
                     rope_dim=cfg.rope_head_dim, isize=isize, n_q=n_q,
-                    pipeline=pipeline)
+                    pipeline=pipeline, kv_isize=kv_isize,
+                    scale_isize=scale_isize)
     return total
 
 
@@ -219,12 +241,14 @@ def kv_shard_fraction(cfg: ModelConfig, tp: int) -> float:
     total = kv_line_bytes(cfg)
     if total == 0:
         return 1.0
-    isize = _dtype_bytes(cfg.dtype)
+    isize = _kv_store_isize(cfg)
+    s = _kv_scale_isize(cfg)
     sharded = 0
     for unit, reps in cfg.segments():
         for b in unit:
             if b.mixer == "attn":
-                sharded += 2 * cfg.n_kv_heads * cfg.hd * isize * reps
+                # per-(line, kv_head) scales shard WITH the kv_heads axis
+                sharded += 2 * cfg.n_kv_heads * (cfg.hd * isize + s) * reps
     return (sharded / tp + (total - sharded)) / total
 
 

@@ -231,3 +231,81 @@ def test_prefill_bucketing_disabled_for_recurrent():
     eng.run()
     assert eng.prefill_shapes == set()         # bucketed path never used
     assert len(req.generated) == 2
+
+
+# -- partitioned-threshold filtering (sort-free top-k/top-p) ---------------
+
+def _distinct_logits(B, V, seed):
+    """Tie-free logits: per-row permutations of a strictly increasing
+    grid, so sort and threshold-scan semantics coincide exactly."""
+    base = jnp.arange(V, dtype=jnp.float32) * (1.0 / 64.0)
+    rows = [jax.random.permutation(jax.random.key(seed + b), base)
+            for b in range(B)]
+    return jnp.stack(rows) - float(base[V // 2])
+
+
+def test_threshold_scan_matches_sort_filter():
+    """The partitioned-threshold pass must reproduce the sort-based
+    filter bit for bit on tie-free logits: same kept set, same kept
+    values, across mixed top-k / top-p / temperature rows."""
+    B, V = 8, 4096
+    logits = _distinct_logits(B, V, 200)
+    top_ks = jnp.asarray([0, 1, 7, 64, 0, 3, 512, V], jnp.int32)
+    top_ps = jnp.asarray([0.0, 0.9, 0.0, 0.5, 0.25, 1.0, 0.99, 0.7],
+                         jnp.float32)
+    temps = jnp.asarray([1.0, 0.7, 1.3, 1.0, 0.5, 1.0, 2.0, 1.0],
+                        jnp.float32)
+    want = sampling._filter_logits_sort(logits, top_ks, top_ps, temps)
+    got = sampling._filter_logits_scan(logits, top_ks, top_ps, temps)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # top-k only (no nucleus argument) as the engine passes it
+    want_k = sampling._filter_logits_sort(logits, top_ks)
+    got_k = sampling._filter_logits_scan(logits, top_ks)
+    np.testing.assert_array_equal(np.asarray(got_k), np.asarray(want_k))
+
+
+def test_threshold_scan_token_selection_identity(monkeypatch):
+    """Satellite bar: identical TOKEN selection.  The same rng stream
+    through sample_tokens must pick the same tokens whether the filter
+    runs the O(V log V) sort or the partitioned-threshold scan."""
+    B, V = 8, 4096
+    logits = _distinct_logits(B, V, 300)
+    kd = jnp.asarray(sampling.batch_key_data(jax.random.key(5), B))
+    steps = jnp.arange(B, dtype=jnp.int32)
+    temps = jnp.full((B,), 0.8, jnp.float32)
+    top_ks = jnp.asarray([0, 1, 8, 64, 16, 0, 128, 4], jnp.int32)
+    top_ps = jnp.asarray([0.9, 0.0, 0.5, 0.95, 0.0, 0.3, 0.99, 0.8],
+                         jnp.float32)
+    # max(top_ks) * 8 <= V, so the unpatched call takes the scan branch
+    got = sampling.sample_tokens(logits, kd, steps, temps, top_ks, top_ps)
+    monkeypatch.setattr(sampling, "_filter_logits",
+                        sampling._filter_logits_sort)
+    want = sampling.sample_tokens(logits, kd, steps, temps, top_ks, top_ps)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_threshold_scan_dispatch_small_vocab(monkeypatch):
+    """Below _SCAN_MIN_VOCAB the dispatcher must not even trace the scan
+    (a 32-step bisection is a loss on tiny vocabularies)."""
+    def boom(*a, **k):
+        raise AssertionError("scan traced for a small vocabulary")
+    monkeypatch.setattr(sampling, "_filter_logits_scan", boom)
+    B, V = 4, 256
+    logits = _distinct_logits(B, V, 400)
+    top_ks = jnp.asarray([0, 3, 17, V], jnp.int32)
+    got = sampling._filter_logits(logits, top_ks)
+    want = sampling._filter_logits_sort(logits, top_ks)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_threshold_scan_dispatch_large_k_falls_back():
+    """When any row asks for top-k within 8x of V the kept set is a large
+    slice of the vocabulary and the sort path wins; the runtime switch
+    must still produce the sort result exactly."""
+    B, V = 4, 2048
+    logits = _distinct_logits(B, V, 500)
+    top_ks = jnp.asarray([0, V // 2, 9, 3], jnp.int32)   # V//2 * 8 > V
+    top_ps = jnp.asarray([0.9, 0.5, 0.0, 0.7], jnp.float32)
+    got = sampling._filter_logits(logits, top_ks, top_ps)
+    want = sampling._filter_logits_sort(logits, top_ks, top_ps)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
