@@ -1,11 +1,19 @@
 """§Perf hillclimb comparison table: baseline vs variants vs flash-modeled,
-for the three chosen cells.  Reads results/dryrun/*.json."""
+for the three chosen cells.  Reads results/dryrun/*.json.
+
+``--metrics-diff BASELINE CURRENT`` instead diffs two Prometheus
+snapshots from the serve telemetry leg (obs.metrics exposition, e.g.
+``benchmarks/baselines/smoke_metrics.prom`` vs a fresh
+``results/serve_trace.prom``) and WARNS — never fails — when throughput
+regressed more than 20%%: smoke walls on shared CI runners are too noisy
+for a hard gate, but a printed warning in the log is a free tripwire."""
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.roofline.substitute import substitute_flash
 from repro.models.common import SHAPES
@@ -53,7 +61,81 @@ HEADER = ["variant", "compute_s", "memory_s", "ici_s", "dcn_s", "dominant",
           "t_lower_s", "roofline%"]
 
 
+def parse_prom(path: str) -> Dict[Tuple[str, str], float]:
+    """Parse Prometheus text exposition into {(name, labels): value}.
+    Labels are kept as the raw ``{...}`` string (or ""): exact-match
+    keys are all the diff needs."""
+    out: Dict[Tuple[str, str], float] = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            head, _, val = line.rpartition(" ")
+            if not head:
+                continue
+            if "{" in head:
+                name, _, rest = head.partition("{")
+                labels = "{" + rest
+            else:
+                name, labels = head, ""
+            try:
+                out[(name, labels)] = float(val)
+            except ValueError:
+                continue
+    return out
+
+
+def metrics_diff(baseline_path: str, current_path: str,
+                 threshold: float = 0.20) -> List[str]:
+    """Compare two serve metrics snapshots; return WARN lines for every
+    throughput-class gauge that regressed beyond ``threshold``."""
+    base = parse_prom(baseline_path)
+    cur = parse_prom(current_path)
+    watched = ("serve_tokens_per_s", "serve_attained_flops_per_s")
+    warnings = []
+    for key, b in sorted(base.items()):
+        name, labels = key
+        if name not in watched or b <= 0:
+            continue
+        c = cur.get(key)
+        if c is None:
+            warnings.append(f"WARN {name}{labels}: present in baseline "
+                            f"but missing from {current_path}")
+            continue
+        drop = (b - c) / b
+        if drop > threshold:
+            warnings.append(
+                f"WARN {name}{labels}: {c:.3g} is {drop:.0%} below the "
+                f"baseline {b:.3g} (threshold {threshold:.0%})")
+    return warnings
+
+
+def run_metrics_diff(baseline_path: str, current_path: str) -> None:
+    warnings = metrics_diff(baseline_path, current_path)
+    if warnings:
+        print(f"[perf_table/metrics-diff] {baseline_path} -> "
+              f"{current_path}:")
+        for w in warnings:
+            print("  " + w)
+        print("  (warn-only: smoke throughput on shared runners is "
+              "noisy; investigate if this repeats across runs)")
+    else:
+        print(f"[perf_table/metrics-diff] {current_path} holds the line "
+              f"vs {baseline_path}: no watched metric down >20%")
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--metrics-diff", nargs=2,
+                    metavar=("BASELINE.prom", "CURRENT.prom"),
+                    default=None,
+                    help="diff two serve telemetry snapshots; warn (never "
+                         "fail) on >20%% throughput regression")
+    args = ap.parse_args()
+    if args.metrics_diff:
+        run_metrics_diff(*args.metrics_diff)
+        return
     out_lines = []
     for arch, shape, mesh, variants in CELLS:
         rows = []

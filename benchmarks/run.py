@@ -28,7 +28,8 @@ ALL = {
     "layernorm": bench_layernorm.main,         # paper appendix
     "arch_roofline": bench_arch_roofline.main,  # 40-cell §Roofline table
     "serve": lambda smoke=False, mesh=None, hierarchy=False,
-        overlap=False, pipeline=False, router=False, kv_dtype=None:
+        overlap=False, pipeline=False, router=False, kv_dtype=None,
+        trace=None:
         bench_serve.main(
             (["--smoke"] if smoke else [])
             + (["--mesh", mesh] if mesh else [])
@@ -36,7 +37,8 @@ ALL = {
             + (["--overlap"] if overlap else [])
             + (["--pipeline"] if pipeline else [])
             + (["--router"] if router else [])
-            + (["--kv-dtype", kv_dtype] if kv_dtype else [])),
+            + (["--kv-dtype", kv_dtype] if kv_dtype else [])
+            + (["--trace", trace] if trace else [])),
     # (--smoke also covers the speculative ngram pass and the block-pool
     # shared-prefix capacity assertion; --mesh dp,tp runs the sharded
     # engine against the single-device baseline; --hierarchy runs the
@@ -44,7 +46,9 @@ ALL = {
     # run the serial-vs-overlapped comparison leg; --router runs the
     # multi-replica front door vs single engine with mixed AND
     # disaggregated roles; --kv-dtype int8 runs the bf16-vs-quantized
-    # KV-pool comparison leg; see bench_serve.py)
+    # KV-pool comparison leg; --trace runs the telemetry leg — validated
+    # Chrome trace + Prometheus snapshot, byte-identical traced streams;
+    # see bench_serve.py)
 }
 
 _SMOKEABLE = ("serve",)
@@ -78,6 +82,12 @@ def main() -> None:
                          "comparison leg (bf16 baseline vs quantized "
                          "pages; asserts higher ledger intensity, oracle-"
                          "identical outputs, ledger/HLO bytes within 15%%)")
+    ap.add_argument("--trace", nargs="?", const="results/serve_trace.json",
+                    default=None, metavar="OUT.json",
+                    help="forwarded to the serve bench (with --smoke): "
+                         "telemetry leg — byte-identical traced streams, "
+                         "<=1.25x overhead, validated Chrome trace + "
+                         "Prometheus attainment snapshot")
     args = ap.parse_args()
     failed = []
     names = [args.only] if args.only else list(ALL)
@@ -88,11 +98,11 @@ def main() -> None:
             if name == "serve" and (args.smoke or args.mesh
                                     or args.hierarchy or args.overlap
                                     or args.pipeline or args.router
-                                    or args.kv_dtype):
+                                    or args.kv_dtype or args.trace):
                 ALL[name](smoke=args.smoke, mesh=args.mesh,
                           hierarchy=args.hierarchy, overlap=args.overlap,
                           pipeline=args.pipeline, router=args.router,
-                          kv_dtype=args.kv_dtype)
+                          kv_dtype=args.kv_dtype, trace=args.trace)
             elif args.smoke and name in _SMOKEABLE:
                 ALL[name](smoke=True)
             else:

@@ -210,6 +210,37 @@ def time_budget_rows(phases: Dict[str, PhaseTraffic], betas: LevelBetas,
     return rows
 
 
+ATTAINMENT_HEADER = [
+    "window", "pid", "dt", "tokens", "tok/s", "attained", "roof",
+    "binds", "frac", "per-level",
+]
+
+
+def attainment_rows(windows: Sequence) -> List[List[str]]:
+    """The live-attainment table: one row per closed
+    :class:`repro.obs.attainment.AttainmentWindow` (duck-typed — any
+    object with index/pid/dt_s/tokens/flops_per_s/roofs/binding_roof/
+    attainment/fraction), showing the window's attained FLOP/s against
+    the ceiling that bound it plus the full per-level fraction ladder.
+    This is the EXPERIMENTS.md §Observability emitter and the
+    ``launch/serve.py --metrics-snapshot`` footer."""
+    rows = []
+    for w in windows:
+        ladder = " ".join(
+            f"{lvl}={w.attainment[lvl] * 100:.2g}%"
+            for lvl in sorted(w.attainment))
+        rows.append([
+            str(w.index), str(w.pid), _fmt_s(w.dt_s), str(w.tokens),
+            f"{w.tokens / w.dt_s:.0f}" if w.dt_s > 0 else "-",
+            _fmt_si(w.flops_per_s, "F/s"),
+            _fmt_si(w.roofs[w.binding_roof], "F/s"),
+            w.binding_roof,
+            f"{w.fraction * 100:.2g}%",
+            ladder,
+        ])
+    return rows
+
+
 def markdown_table(rows: Sequence[Sequence[str]], header: Sequence[str]) -> str:
     out = ["| " + " | ".join(header) + " |",
            "|" + "|".join(["---"] * len(header)) + "|"]

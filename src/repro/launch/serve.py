@@ -121,6 +121,13 @@ def main():
     ap.add_argument("--link", choices=["dcn", "ici"], default="dcn",
                     help="wire level the migration snapshots are priced "
                          "on (the 'migration' roofline term)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="enable telemetry (repro.obs) and write the "
+                         "Chrome trace-event timeline here — load it in "
+                         "chrome://tracing or ui.perfetto.dev")
+    ap.add_argument("--metrics-snapshot", default=None, metavar="OUT.prom",
+                    help="enable telemetry and write a Prometheus "
+                         "text-exposition metrics snapshot here")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -143,7 +150,8 @@ def main():
         num_pages=args.num_pages or None,
         watermark=args.watermark, preempt_mode=args.preempt,
         pipeline=args.pipeline, overlap=args.overlap,
-        kv_dtype=args.kv_dtype)
+        kv_dtype=args.kv_dtype,
+        telemetry=bool(args.trace or args.metrics_snapshot))
     scfg = None
     if args.spec != "off":
         if not supports_spec(cfg):
@@ -191,6 +199,7 @@ def main():
         n_new = toks.shape[1] - args.prompt_len
         print(f"[serve/static] {args.batch} seqs x {n_new} new tokens in "
               f"{dt:.2f}s ({args.batch * n_new / dt:.1f} tok/s)")
+        _export_telemetry(args, getattr(engine, "obs", None), engine)
         print("[serve] first sequence:",
               toks[0, args.prompt_len:].tolist())
         return
@@ -243,8 +252,34 @@ def main():
               f"(predicted {s['predicted_tokens_per_pass']:.2f}), "
               f"predicted memory-bound speedup "
               f"x{s['predicted_speedup']:.2f}")
+    _export_telemetry(args, engine.obs, engine)
     first = min(done, key=lambda r: r.request_id)
     print("[serve] first sequence:", first.generated[:16])
+
+
+def _export_telemetry(args, obs, source):
+    """Post-run telemetry export: harvest the source (Engine or Cluster)
+    into the registry, write the requested artifacts, and print the
+    windowed roofline-attainment table."""
+    if obs is None:
+        return
+    obs.harvest(source)
+    if args.trace:
+        obs.export_trace(args.trace)
+        print(f"[serve/obs] trace written to {args.trace} "
+              f"({len(obs.tracer.events)} events) — load in "
+              "chrome://tracing or ui.perfetto.dev")
+    if args.metrics_snapshot:
+        obs.snapshot(args.metrics_snapshot)
+        print(f"[serve/obs] metrics snapshot written to "
+              f"{args.metrics_snapshot}")
+    if obs.attainment.windows:
+        from repro.core.roofline.report import (ATTAINMENT_HEADER,
+                                                attainment_rows,
+                                                text_table)
+        print("[serve/obs] roofline attainment windows:")
+        print(text_table(attainment_rows(obs.attainment.windows),
+                         ATTAINMENT_HEADER))
 
 
 def _run_router(args, cfg, params, ecfg, scfg, mesh_shape, chip):
@@ -311,6 +346,7 @@ def _run_router(args, cfg, params, ecfg, scfg, mesh_shape, chip):
     print(f"[serve/capacity] fleet pages peak={cap['pages_peak']}"
           f"/{cap['pages_total']}, per-replica [{per}], cluster B_max="
           f"{cap['capacity_max_batch']} on {chip.name}")
+    _export_telemetry(args, cluster.obs, cluster)
     first = min(done, key=lambda r: r.request_id)
     print("[serve] first sequence:", first.generated[:16])
 

@@ -1,0 +1,29 @@
+"""The one monotonic clock every serve-stack latency stamp reads.
+
+Before this module existed, ``serve/scheduler.py``, ``serve/engine.py``,
+``serve/spec.py`` and ``serve/router.py`` each called
+``time.perf_counter()`` directly.  That happened to be consistent — but
+only by convention, and nothing enforced it: one stray ``time.time()``
+in a future stamp would silently skew every telescoping latency
+decomposition (``Request.ttft_breakdown`` sums three stamp differences
+and asserts a zero residual).  Routing every stamp through :func:`now`
+makes the clock source a single point of truth, keeps all stamps
+mutually comparable (monotonic, unaffected by wall-clock steps), and
+gives the tracer one epoch to subtract when it renders spans.
+
+``perf_counter`` is monotonic with ns-ish resolution on every platform
+we run on; its absolute value is meaningless, which is exactly right —
+every consumer in this repo only ever takes differences.
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def now() -> float:
+    """Current monotonic time, seconds.  All serve-stack stamps
+    (``submit_time``, ``dispatch_time``, phase walls, token times, trace
+    spans) read this and nothing else, so any pair of stamps anywhere in
+    the stack is directly subtractable."""
+    return time.perf_counter()

@@ -80,6 +80,11 @@ class PoolStats:
     swap_dmas: int = 0           # compacted device->host swap transfers
     swap_transfers_saved: int = 0
 
+    def as_dict(self) -> Dict[str, int]:
+        """Counter-name -> value view, the shape the metrics harvest
+        (``repro.obs.metrics.harvest_serve``) consumes."""
+        return dataclasses.asdict(self)
+
 
 class BlockPool:
     """Ref-counted physical-page allocator with a prefix-hash index.

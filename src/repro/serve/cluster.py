@@ -43,6 +43,7 @@ from typing import Any, List, Optional, Tuple
 import jax
 
 from repro.models.common import ModelConfig
+from repro.obs import Telemetry
 from repro.parallel.mesh import dp_submeshes
 
 from .engine import Engine, EngineConfig
@@ -145,6 +146,19 @@ class Cluster:
                         replica_id=i)
             for i in range(dp)
         ]
+        # one SHARED telemetry bundle for the fleet (replacing the
+        # private per-engine bundles ecfg.telemetry made): every replica
+        # traces into the same timeline (pid = replica index) and the
+        # same registry, so migrations draw flow arrows between replica
+        # processes and attainment windows interleave across the fleet
+        self.obs: Optional[Telemetry] = None
+        if self.ecfg.telemetry:
+            self.obs = Telemetry(window_steps=self.ecfg.telemetry_window)
+            for i, eng in enumerate(self.replicas):
+                eng.attach_telemetry(
+                    self.obs, pid=i,
+                    name=(f"replica {i} [{self.roles.roles[i]}] "
+                          f"{cfg.name} tp={tp}"))
 
     # -- role / capability queries ----------------------------------------
 

@@ -31,7 +31,6 @@ so for MLA archs the static engine matches byte-for-byte when
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -43,6 +42,9 @@ from repro.kernels import quantize
 from repro.models import (decode_step, decode_step_paged, init_cache,
                           prefill, prefill_chunk_paged, prefill_padded)
 from repro.models.common import ModelConfig, model_flops
+from repro.obs import Telemetry
+from repro.obs.clock import now
+from repro.obs.trace import ENGINE_TID, LIFECYCLE_TID, SLOT_TID0
 
 from . import sampling
 from .kv_cache import PagedKVCache, supports_paging
@@ -81,6 +83,12 @@ class EngineConfig:
     # (kernels/quantize.py — quantized pools store int8/fp8 values with
     # per-line f32 scales and dequantize inside the page walk)
     kv_dtype: Optional[str] = None
+    # observability (repro.obs): span tracing + metrics + live roofline
+    # attainment.  Observation-only — every hook is a host-side append
+    # behind ``if obs is not None``; token streams are byte-identical
+    # with telemetry on or off.
+    telemetry: bool = False
+    telemetry_window: int = 4         # engine steps per attainment window
 
 
 def _bucket_len(n: int, floor: int) -> int:
@@ -200,8 +208,39 @@ class Engine:
         self.step_count = 0
         self.decode_steps = 0
         self._dispatch_s: Optional[float] = None
+        self.obs: Optional[Telemetry] = None
+        self._obs_pid = 0
+        if self.ecfg.telemetry:
+            self.attach_telemetry(
+                Telemetry(window_steps=self.ecfg.telemetry_window))
 
     # -- wiring ------------------------------------------------------------
+
+    def attach_telemetry(self, obs: Telemetry, pid: Optional[int] = None,
+                         name: Optional[str] = None) -> None:
+        """Adopt a telemetry bundle (a private one from
+        ``EngineConfig.telemetry``, or a Cluster's shared bundle — then
+        ``pid`` is the replica index so all replicas land on one
+        timeline) and announce this engine's trace tracks."""
+        self.obs = obs
+        if pid is not None:
+            self._obs_pid = pid
+        obs.tracer.process(self._obs_pid,
+                           name or self._obs_process_name())
+        obs.tracer.thread(self._obs_pid, ENGINE_TID, "engine steps")
+        obs.tracer.thread(self._obs_pid, LIFECYCLE_TID, "request lifecycle")
+        if self._sched is not None:
+            self._sched.obs = obs
+            self._sched.obs_pid = self._obs_pid
+            self._announce_slots()
+
+    def _obs_process_name(self) -> str:
+        return f"{self.cfg.name} engine"
+
+    def _announce_slots(self) -> None:
+        for s in range(self.ecfg.num_slots):
+            self.obs.tracer.thread(self._obs_pid, SLOT_TID0 + s,
+                                   f"slot {s}")
 
     def static_engine(self) -> StaticEngine:
         if self._static is None:
@@ -232,6 +271,10 @@ class Engine:
                                 prefill_chunk=e.prefill_chunk,
                                 watermark=e.watermark,
                                 preempt_mode=e.preempt_mode)
+        if self.obs is not None:
+            self._sched.obs = self.obs
+            self._sched.obs_pid = self._obs_pid
+            self._announce_slots()
         self._next_token = np.zeros((e.num_slots,), np.int32)
         self._pos = np.zeros((e.num_slots,), np.int32)
         # per-slot sampling state, consumed by the fused decode+sample step
@@ -316,8 +359,13 @@ class Engine:
         req = Request(prompt=prompt, max_new_tokens=gen.max_new_tokens,
                       temperature=gen.temperature, top_k=gen.top_k,
                       top_p=gen.top_p, stop_token=gen.stop_token, rng=rng,
-                      submit_time=time.perf_counter())
-        return self._sched.submit(req)
+                      submit_time=now())
+        req = self._sched.submit(req)
+        if self.obs is not None:
+            self.obs.tracer.instant("submit", self._obs_pid, LIFECYCLE_TID,
+                                    req.submit_time,
+                                    request=req.request_id)
+        return req
 
     def enqueue(self, req: Request) -> Request:
         """Queue a pre-built :class:`Request` WITHOUT re-numbering it —
@@ -326,9 +374,14 @@ class Engine:
         re-numbering would collide the ids the stream keys on."""
         self._ensure(req.budget)
         if req.submit_time == 0.0:
-            req.submit_time = time.perf_counter()
-        req.dispatch_time = time.perf_counter()
-        return self._sched.submit(req, keep_id=True)
+            req.submit_time = now()
+        req.dispatch_time = now()
+        req = self._sched.submit(req, keep_id=True)
+        if self.obs is not None:
+            self.obs.tracer.instant("enqueue", self._obs_pid,
+                                    LIFECYCLE_TID, req.dispatch_time,
+                                    request=req.request_id)
+        return req
 
     def export_request(self, req: Request, link: str = "dcn") -> Request:
         """Detach a request for migration to another replica
@@ -374,6 +427,8 @@ class Engine:
                 f"(watermark {sched.watermark_pages}), "
                 f"{len(sched.preempted)} preempted waiting to resume")
         self.step_count += 1
+        if self.obs is not None:
+            self.obs.on_step(self)
         return sched.finished[n_done:]
 
     def roofline_terms(self, req: Request):
@@ -450,9 +505,9 @@ class Engine:
         jax.block_until_ready(nk._decode_fn(*args)[0])   # compile untimed
         samples = []
         for _ in range(max(repeats, 1)):
-            t0 = time.perf_counter()
+            t0 = now()
             jax.block_until_ready(nk._decode_fn(*args)[0])
-            samples.append(time.perf_counter() - t0)
+            samples.append(now() - t0)
         self._dispatch_s = float(np.median(samples))
         return self._dispatch_s
 
@@ -514,7 +569,7 @@ class Engine:
         if not self._grow_spans([req], lambda r: (start, end)):
             return                          # req itself was preempted
         whole = start == 0 and end == fill_len
-        t0 = time.perf_counter()
+        t0 = now()
         if whole and self._bucketable and self.ecfg.prefill_bucket > 0:
             # length-bucketed jitted prefill: pad the prompt to the next
             # power of two; causal masking makes the prefix rows (and the
@@ -548,7 +603,12 @@ class Engine:
                 kv.freeze_committed(req.slot, fill, end)
         # fence before stamping (async dispatch; see _run_decode)
         jax.block_until_ready(last_logits)
-        t1 = time.perf_counter()
+        t1 = now()
+        if self.obs is not None:
+            self.obs.tracer.span("prefill_chunk", self._obs_pid,
+                                 SLOT_TID0 + req.slot, t0, t1,
+                                 request=req.request_id, start=start,
+                                 end=end)
         n_new = end - start
         self._sched.phases["prefill"].add(
             flops=(model_flops(cfg, end, 1, "prefill")
@@ -639,14 +699,17 @@ class Engine:
                      jnp.asarray(self._key_data), jnp.asarray(self._steps),
                      jnp.asarray(self._temps), jnp.asarray(self._top_ks),
                      jnp.asarray(self._top_ps))
-        t0 = time.perf_counter()
+        t0 = now()
         next_tok, kv.pools = self._decode_fn(*step_args)
         # fence BEFORE stamping: dispatch is async, so an unfenced stamp
         # records launch time, not completion — every request committed
         # this step shares one post-fence stamp
         jax.block_until_ready(next_tok)
-        t1 = time.perf_counter()
+        t1 = now()
         self.decode_steps += 1
+        if self.obs is not None:
+            self.obs.tracer.span("decode_step", self._obs_pid, ENGINE_TID,
+                                 t0, t1, batch=len(running))
         tok_np = np.asarray(next_tok)
         n_active = len(running)
         ici_share = self._step_collective_bytes(1) / n_active
@@ -670,9 +733,13 @@ class Engine:
     def _commit_token(self, req: Request, tok: int, first: bool = False,
                       t: Optional[float] = None) -> None:
         req.generated.append(tok)
-        req.token_times.append(time.perf_counter() if t is None else t)
+        req.token_times.append(now() if t is None else t)
         if first:
             req.state = RequestState.RUNNING
+            if self.obs is not None:
+                self.obs.tracer.instant(
+                    "first_token", self._obs_pid, LIFECYCLE_TID,
+                    req.token_times[-1], request=req.request_id)
         if self._kv.prefix_cache:
             # pages whose every position is now final become
             # prefix-shareable (content-hash registered); gated here so

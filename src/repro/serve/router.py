@@ -37,7 +37,6 @@ byte-identical to a single-engine run wherever the cut lands.
 from __future__ import annotations
 
 import collections
-import time
 from typing import Dict, Iterator, List, Optional, Tuple
 
 import jax
@@ -46,6 +45,8 @@ import numpy as np
 from repro.core.roofline.hardware import chip_scope
 from repro.core.roofline.model import make_terms
 from repro.models.common import model_flops
+from repro.obs.clock import now
+from repro.obs.trace import ROUTER_PID
 
 from .cluster import Cluster
 from .engine import GenerateConfig
@@ -78,6 +79,12 @@ class Router:
         self._charged: Dict[int, Tuple[int, float]] = {}
         self._load = [0.0] * cluster.dp
         self._streamed: Dict[int, int] = {}      # request_id -> tokens sent
+        # the cluster's shared telemetry bundle (None = telemetry off);
+        # the front door traces as its own process
+        self.obs = getattr(cluster, "obs", None)
+        if self.obs is not None:
+            self.obs.tracer.process(ROUTER_PID, "router front door")
+            self.obs.tracer.thread(ROUTER_PID, 0, "dispatch")
 
     # -- front door --------------------------------------------------------
 
@@ -91,10 +98,14 @@ class Router:
                       temperature=gen.temperature, top_k=gen.top_k,
                       top_p=gen.top_p, stop_token=gen.stop_token, rng=rng,
                       request_id=self._next_id,
-                      submit_time=time.perf_counter())
+                      submit_time=now())
         self._next_id += 1
         self.queue.append(req)
         self.requests[req.request_id] = req
+        if self.obs is not None:
+            self.obs.tracer.instant("submit", ROUTER_PID, 0,
+                                    req.submit_time,
+                                    request=req.request_id)
         return req
 
     def predicted_cost(self, req: Request) -> Dict[str, float]:
@@ -150,6 +161,11 @@ class Router:
             self._charge(req.request_id, i, cost["total_s"])
             self.home[req.request_id] = i
             self.cluster.replicas[i].enqueue(req)
+            if self.obs is not None:
+                self.obs.tracer.instant(
+                    "dispatch", ROUTER_PID, 0, now(),
+                    request=req.request_id, replica=i,
+                    predicted_s=cost["total_s"])
             sent += 1
         return sent
 
@@ -162,6 +178,11 @@ class Router:
         self.cluster.replicas[dst].import_request(req)
         self.migrations += 1
         self.migration_bytes += req.ledger.migration_bytes - mb0
+        if self.obs is not None:
+            self.obs.tracer.instant(
+                "migrate", ROUTER_PID, 0, now(), request=req.request_id,
+                src=src, dst=dst,
+                bytes=int(req.ledger.migration_bytes - mb0))
         self.home[req.request_id] = dst
         self._discharge(req.request_id)
         cost = self._cost.get(req.request_id)

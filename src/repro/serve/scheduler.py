@@ -61,7 +61,6 @@ import dataclasses
 import enum
 import functools
 import math
-import time
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
@@ -73,6 +72,8 @@ from repro.kernels import quantize as kvq
 from repro.kernels.paged_attention import (mla_paged_decode_vmem_bytes,
                                            paged_decode_vmem_bytes)
 from repro.models.common import ModelConfig, model_flops, param_counts
+from repro.obs.clock import now
+from repro.obs.trace import LIFECYCLE_TID, SLOT_TID0
 
 from .kv_cache import PagedKVCache
 
@@ -628,6 +629,10 @@ class Scheduler:
         # charges compute phases; preempt/_resume charge the swap phase.
         self.phases: Dict[str, PhaseTraffic] = collections.defaultdict(
             PhaseTraffic)
+        # telemetry bundle + trace process id, threaded in by the owning
+        # engine (repro.obs.Telemetry, or None = telemetry off)
+        self.obs = None
+        self.obs_pid = 0
 
     def reset_phases(self) -> None:
         """Drop accumulated phase traffic (after warm-up, before a timed
@@ -674,9 +679,13 @@ class Scheduler:
             # first placement into a slot: the TTFT queue-wait segment
             # ends here (kept across preemption round-trips — only the
             # first placement bounds the queue)
-            req.prefill_start_time = time.perf_counter()
+            req.prefill_start_time = now()
         req.ledger.pages_peak = max(req.ledger.pages_peak,
                                     self.kv.slot_pages(slot))
+        if self.obs is not None:
+            self.obs.tracer.instant(
+                "place", self.obs_pid, LIFECYCLE_TID, now(),
+                request=req.request_id, slot=slot, prefilling=prefilling)
 
     def _resume(self, req: Request) -> bool:
         """Bring one preempted request back; False if it does not fit."""
@@ -686,22 +695,36 @@ class Scheduler:
                     or self.kv.swap_in_pages_needed(snap)
                     > self.kv.available_page_count):
                 return False
-            t0 = time.perf_counter()
+            t0 = now()
             slot = self.kv.swap_in(snap)
             if slot is None:
                 return False
             jax.block_until_ready(self.kv.pools)
+            t1 = now()
             if req.migrating:
                 # restore leg of a cross-replica migration: the wire
                 # bytes were charged at detach; the restore DMA is host
                 # traffic on THIS replica, phase "migrate" not "swap"
                 self.phases["migrate"].add(host=float(snap.nbytes),
-                                           wall_s=time.perf_counter() - t0)
+                                           wall_s=t1 - t0)
                 req.migrating = False
+                if self.obs is not None:
+                    self.obs.tracer.span(
+                        "migrate_in", self.obs_pid, SLOT_TID0 + slot,
+                        t0, t1, request=req.request_id,
+                        bytes=int(snap.nbytes))
+                    self.obs.tracer.flow_finish(
+                        "migrate", self.obs_pid, SLOT_TID0 + slot,
+                        req.request_id, t1)
             else:
                 self.phases["swap"].add(host=float(snap.nbytes),
-                                        wall_s=time.perf_counter() - t0)
+                                        wall_s=t1 - t0)
                 req.ledger.swap_bytes += snap.nbytes
+                if self.obs is not None:
+                    self.obs.tracer.span(
+                        "swap_in", self.obs_pid, SLOT_TID0 + slot,
+                        t0, t1, request=req.request_id,
+                        bytes=int(snap.nbytes))
             req.swap_snapshot = None
             self._place(req, slot, prefilling=False)
             return True
@@ -745,12 +768,18 @@ class Scheduler:
         assert req.state in (RequestState.PREFILL, RequestState.RUNNING)
         del self.active[req.slot]
         if self.preempt_mode == "swap" and req.state is RequestState.RUNNING:
-            t0 = time.perf_counter()
+            t0 = now()
             snap = self.kv.swap_out(req.slot)
+            t1 = now()
             self.phases["swap"].add(host=float(snap.nbytes),
-                                    wall_s=time.perf_counter() - t0)
+                                    wall_s=t1 - t0)
             req.swap_snapshot = snap
             req.ledger.swap_bytes += snap.nbytes
+            if self.obs is not None:
+                self.obs.tracer.span(
+                    "swap_out", self.obs_pid, SLOT_TID0 + req.slot,
+                    t0, t1, request=req.request_id,
+                    bytes=int(snap.nbytes))
         else:
             # recompute (or mid-prefill eviction): snapshot the committed
             # context; resume re-prefills it from scratch
@@ -761,6 +790,10 @@ class Scheduler:
         req.ledger.preemptions += 1
         self.preempt_count += 1
         self.preempted.append(req)
+        if self.obs is not None:
+            self.obs.tracer.instant(
+                "preempt", self.obs_pid, LIFECYCLE_TID, now(),
+                request=req.request_id, mode=self.preempt_mode)
 
     def detach(self, req: Request, link: str = "dcn") -> Request:
         """Remove a request from this replica for migration to another
@@ -778,9 +811,14 @@ class Scheduler:
             req.state)
         if req.state is RequestState.RUNNING:
             del self.active[req.slot]
-            t0 = time.perf_counter()
+            t0 = now()
             snap = self.kv.swap_out(req.slot)
-            wall = time.perf_counter() - t0
+            wall = now() - t0
+            if self.obs is not None:
+                self.obs.tracer.span(
+                    "migrate_out", self.obs_pid, SLOT_TID0 + req.slot,
+                    t0, t0 + wall, request=req.request_id,
+                    bytes=int(snap.nbytes))
             req.swap_snapshot = snap
             req.slot = -1
             req.state = RequestState.PREEMPTED
@@ -798,6 +836,10 @@ class Scheduler:
         req.ledger.migration_link = link
         self.phases["migrate"].add(host=float(snap.nbytes), wall_s=wall,
                                    **{link: float(snap.nbytes)})
+        if self.obs is not None:
+            self.obs.tracer.flow_start(
+                "migrate", self.obs_pid, LIFECYCLE_TID, req.request_id,
+                now(), link=link, bytes=int(snap.nbytes))
         return req
 
     def attach(self, req: Request) -> Request:
@@ -848,3 +890,15 @@ class Scheduler:
         del self.active[req.slot]
         req.slot = -1
         self.finished.append(req)
+        if self.obs is not None:
+            # the whole request lifetime as one async slice (emitted as a
+            # balanced pair at completion, so no orphan ids from requests
+            # still in flight at export time)
+            t_end = now()
+            t_begin = req.submit_time if req.submit_time > 0.0 else t_end
+            self.obs.tracer.async_begin(
+                "request", self.obs_pid, LIFECYCLE_TID, req.request_id,
+                t_begin)
+            self.obs.tracer.async_end(
+                "request", self.obs_pid, LIFECYCLE_TID, req.request_id,
+                t_end, tokens=len(req.generated), reason=reason)

@@ -204,8 +204,19 @@ class _ShardedStepMixin:
             self.params,
             jax.tree.map(lambda sp: NamedSharding(self.mesh, sp),
                          self._param_specs))
+        if self.obs is not None:
+            # the private bundle announced the unsharded name before the
+            # mesh existed; re-announce with the tp width (last wins)
+            self.obs.tracer.process(self._obs_pid, self._obs_process_name())
 
     # -- engine overrides --------------------------------------------------
+
+    def _obs_process_name(self) -> str:
+        tp = getattr(self, "tp", 1)
+        if tp > 1:
+            return f"{self.cfg.name} engine tp={tp} (replica " \
+                   f"{self.replica_id})"
+        return super()._obs_process_name()
 
     def reset(self, num_slots: Optional[int] = None,
               max_len: Optional[int] = None) -> None:

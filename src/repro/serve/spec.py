@@ -32,7 +32,6 @@ arithmetic intensity against the non-speculative baseline.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -41,6 +40,8 @@ import numpy as np
 
 from repro.models import decode_step_verify_paged
 from repro.models.common import ModelConfig
+from repro.obs.clock import now
+from repro.obs.trace import ENGINE_TID
 
 from . import sampling
 from .engine import Engine, EngineConfig
@@ -281,10 +282,13 @@ class SpecEngine(Engine):
             for req in running:
                 a = self._accept_ewma.get(req.request_id, 1.0)
                 k_eff[req.slot] = adaptive_k(a, k, s.adapt_floor, s.k_min)
-        td0 = time.perf_counter()
+        td0 = now()
         prop = self.proposer.propose(running, k_eff=k_eff)
-        self._sched.phases["draft"].add(wall_s=time.perf_counter() - td0,
-                                        steps=1)
+        td1 = now()
+        self._sched.phases["draft"].add(wall_s=td1 - td0, steps=1)
+        if self.obs is not None:
+            self.obs.tracer.span("propose", self._obs_pid, ENGINE_TID,
+                                 td0, td1, batch=len(running))
 
         feed = np.zeros((self.ecfg.num_slots, T), np.int32)
         feed[:, 0] = np.where(active, self._next_token, 0)
@@ -300,13 +304,16 @@ class SpecEngine(Engine):
                  jnp.asarray(self._top_ks), jnp.asarray(self._top_ps)]
         # args are converted above, outside the fenced window (the phase
         # wall measures the device step, not host-side staging)
-        t0 = time.perf_counter()
+        t0 = now()
         out_tok, n_out, kv.pools = self._verify_fn(*args)
         # fence before stamping (async dispatch; see Engine._run_decode)
         jax.block_until_ready(out_tok)
-        t1 = time.perf_counter()
+        t1 = now()
         self.decode_steps += 1
         self.verify_steps += 1
+        if self.obs is not None:
+            self.obs.tracer.span("verify", self._obs_pid, ENGINE_TID,
+                                 t0, t1, batch=len(running), k=k)
 
         out_np = np.asarray(out_tok)
         n_np = np.asarray(n_out)

@@ -1,0 +1,330 @@
+"""Serve-stack observability: the tracing/metrics/attainment contract.
+
+The whole package rides on three promises:
+
+* **observation-only** — token streams are byte-identical with telemetry
+  on or off, across the single engine, the speculative engine and the
+  disaggregated router (the same contract the roofline ledger obeys);
+* **loadable** — an exported trace passes ``validate_trace``: well-formed
+  events, per-track call-stack span nesting, every used track named,
+  balanced async request pairs, paired migration flow arrows;
+* **honest projection** — the registry exposes exactly the accounting
+  the stack already keeps (ledger totals, pool stats, latency traces,
+  windowed roofline attainment with the binding roof NAMED), and
+  harvesting twice never double-counts.
+"""
+
+import functools
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke
+from repro.models import init_params
+from repro.obs import Telemetry, clock
+from repro.obs.metrics import Counter, Registry, harvest_serve
+from repro.obs.trace import (ENGINE_TID, LIFECYCLE_TID, Tracer,
+                             validate_trace)
+from repro.serve import (Cluster, Engine, EngineConfig, GenerateConfig,
+                         RoleConfig, Router, SpecConfig, SpecEngine)
+
+
+@functools.lru_cache(maxsize=None)
+def _model():
+    cfg = smoke(get_config("qwen3-0.6b"))
+    return cfg, init_params(cfg, jax.random.key(0))
+
+
+def _prompts(cfg, n=3, seed=700, repetitive=False):
+    out = []
+    for i in range(n):
+        if repetitive:
+            motif = np.asarray(jax.random.randint(
+                jax.random.key(seed + i), (3,), 0, cfg.vocab_size))
+            out.append(np.tile(motif, 4).astype(np.int32))
+        else:
+            out.append(np.asarray(jax.random.randint(
+                jax.random.key(seed + i), (5 + i,), 0, cfg.vocab_size),
+                np.int32))
+    return out
+
+
+def _ecfg(**kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_len", 32)
+    return EngineConfig(**kw)
+
+
+def _run_engine(telemetry, spec=False):
+    cfg, params = _model()
+    ecfg = _ecfg(telemetry=telemetry, telemetry_window=2)
+    if spec:
+        eng = SpecEngine(cfg, params, ecfg,
+                         SpecConfig(k=3, proposer="ngram"))
+    else:
+        eng = Engine(cfg, params, ecfg)
+    gen = GenerateConfig(max_new_tokens=6)
+    reqs = [eng.submit(p, gen)
+            for p in _prompts(cfg, repetitive=spec)]
+    eng.run()
+    return eng, [list(r.generated) for r in reqs]
+
+
+# -- the clock -------------------------------------------------------------
+
+def test_clock_monotone_nondecreasing():
+    stamps = [clock.now() for _ in range(100)]
+    assert all(b >= a for a, b in zip(stamps, stamps[1:]))
+
+
+# -- tracer + validator units ---------------------------------------------
+
+def _toy_tracer():
+    tr = Tracer(epoch=0.0)
+    tr.process(0, "engine")
+    tr.thread(0, ENGINE_TID, "steps")
+    tr.thread(0, LIFECYCLE_TID, "lifecycle")
+    return tr
+
+
+def test_tracer_roundtrip_valid(tmp_path):
+    tr = _toy_tracer()
+    tr.span("outer", 0, ENGINE_TID, 1e-3, 5e-3)
+    tr.span("inner", 0, ENGINE_TID, 2e-3, 3e-3)   # nests: fine
+    tr.instant("submit", 0, LIFECYCLE_TID, 1.5e-3, request=0)
+    tr.counter("pool_pages", 0, 2e-3, {"in_use": 3})
+    tr.async_begin("request", 0, LIFECYCLE_TID, 0, 1e-3)
+    tr.async_end("request", 0, LIFECYCLE_TID, 0, 5e-3)
+    tr.flow_start("migrate", 0, LIFECYCLE_TID, 7, 2e-3)
+    tr.flow_finish("migrate", 0, LIFECYCLE_TID, 7, 4e-3)
+    path = tmp_path / "t.json"
+    doc = tr.export(str(path))
+    assert validate_trace(doc) == []
+    import json
+    assert json.load(open(path)) == doc
+    assert doc["displayTimeUnit"] == "ms"
+
+
+def test_tracer_clamps_pre_epoch_and_backward_spans():
+    tr = _toy_tracer()
+    tr.span("pre", 0, ENGINE_TID, -1.0, -0.5)     # before the epoch
+    tr.span("backward", 0, ENGINE_TID, 9e-3, 8e-3)  # t1 < t0
+    doc = tr.export()
+    assert validate_trace(doc) == []
+    spans = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert all(e["ts"] >= 0 and e["dur"] >= 0 for e in spans)
+
+
+def test_validator_rejects_malformed_documents():
+    assert validate_trace([]) != []
+    assert validate_trace({"traceEvents": []}) != []
+    # missing required keys
+    doc = {"displayTimeUnit": "ms",
+           "traceEvents": [{"ph": "X", "name": "x"}]}
+    assert any("missing keys" in e for e in validate_trace(doc))
+    # negative duration
+    tr = _toy_tracer()
+    doc = tr.export()
+    doc["traceEvents"].append({"ph": "X", "name": "bad", "pid": 0,
+                               "tid": ENGINE_TID, "ts": 1.0, "dur": -2.0})
+    assert any("bad dur" in e for e in validate_trace(doc))
+
+
+def test_validator_rejects_partial_overlap_but_allows_nesting():
+    tr = _toy_tracer()
+    tr.span("a", 0, ENGINE_TID, 1e-3, 3e-3)
+    tr.span("b", 0, ENGINE_TID, 2e-3, 4e-3)       # partial overlap
+    errs = validate_trace(tr.export())
+    assert any("partially overlaps" in e for e in errs)
+    tr2 = _toy_tracer()
+    tr2.span("a", 0, ENGINE_TID, 1e-3, 4e-3)
+    tr2.span("b", 0, ENGINE_TID, 2e-3, 3e-3)      # proper nesting
+    assert validate_trace(tr2.export()) == []
+
+
+def test_validator_rejects_orphans_and_unnamed_tracks():
+    tr = _toy_tracer()
+    tr.async_begin("request", 0, LIFECYCLE_TID, 1, 1e-3)   # no end
+    tr.flow_start("migrate", 0, LIFECYCLE_TID, 2, 1e-3)    # no finish
+    errs = validate_trace(tr.export())
+    assert any("orphan id" in e for e in errs)
+    assert any("flow id 2: orphan" in e for e in errs)
+    tr2 = Tracer(epoch=0.0)                       # no metadata at all
+    tr2.instant("submit", 3, 7, 1e-3)
+    errs2 = validate_trace(tr2.export())
+    assert any("no process_name" in e for e in errs2)
+    assert any("no thread_name" in e for e in errs2)
+
+
+# -- registry units --------------------------------------------------------
+
+def test_counter_set_total_is_monotone_idempotent():
+    c = Counter("x_total", "help")
+    c.set_total(5.0)
+    c.set_total(5.0)
+    c.set_total(3.0)                              # re-harvest never rewinds
+    assert c.values[()] == 5.0
+    with pytest.raises(ValueError):
+        c.inc(-1.0)
+
+
+def test_registry_exposition_format():
+    reg = Registry()
+    reg.counter("serve_x_total", "things", ("kind",)).inc(2.0, kind="a")
+    reg.gauge("serve_g", "a gauge").set(1.5)
+    h = reg.histogram("serve_lat_seconds", "latency", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    text = reg.expose()
+    assert "# HELP serve_x_total things" in text
+    assert "# TYPE serve_x_total counter" in text
+    assert 'serve_x_total{kind="a"} 2.0' in text
+    assert "# TYPE serve_lat_seconds histogram" in text
+    assert 'serve_lat_seconds_bucket{le="0.1"} 1' in text
+    assert 'serve_lat_seconds_bucket{le="1.0"} 2' in text     # cumulative
+    assert 'serve_lat_seconds_bucket{le="+Inf"} 2' in text
+    assert "serve_lat_seconds_count 2" in text
+    assert text.endswith("\n")
+    # same family, different type: refused
+    with pytest.raises(TypeError):
+        reg.gauge("serve_x_total")
+
+
+# -- observation-only: byte identity on/off --------------------------------
+
+def test_engine_byte_identity_telemetry_on_off():
+    _, base = _run_engine(telemetry=False)
+    eng, traced = _run_engine(telemetry=True)
+    assert traced == base
+    assert eng.obs is not None
+    doc = eng.obs.export_trace()
+    assert validate_trace(doc) == []
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert {"prefill_chunk", "decode_step", "submit", "place",
+            "first_token", "request"} <= names
+
+
+def test_spec_engine_byte_identity_and_spans():
+    _, base = _run_engine(telemetry=False, spec=True)
+    eng, traced = _run_engine(telemetry=True, spec=True)
+    assert traced == base
+    doc = eng.obs.export_trace()
+    assert validate_trace(doc) == []
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert {"propose", "verify"} <= names
+
+
+def test_router_byte_identity_and_migration_trace():
+    cfg, params = _model()
+    prompts = _prompts(cfg)
+    gen = GenerateConfig(max_new_tokens=6)
+
+    def run(telemetry):
+        ecfg = _ecfg(telemetry=telemetry, telemetry_window=2)
+        cluster = Cluster(cfg, params, ecfg, mesh_shape=(2, 1),
+                          roles=RoleConfig.disaggregated(1, 1))
+        router = Router(cluster)
+        reqs = [router.submit(p, gen) for p in prompts]
+        router.run()
+        return cluster, router, [list(r.generated) for r in reqs]
+
+    _, _, base = run(False)
+    cluster, router, traced = run(True)
+    assert traced == base
+    assert router.migrations >= len(prompts)
+    obs = cluster.obs
+    assert obs is not None and all(
+        eng.obs is obs for eng in cluster.replicas)
+    obs.harvest(cluster)
+    doc = obs.export_trace()
+    assert validate_trace(doc) == []
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert {"dispatch", "migrate", "migrate_out", "migrate_in",
+            "prefill_chunk", "decode_step"} <= names
+    # every migration draws one complete flow arrow between replicas
+    flows = [e for e in doc["traceEvents"] if e["ph"] in ("s", "f")]
+    starts = {e["id"] for e in flows if e["ph"] == "s"}
+    finishes = {e["id"] for e in flows if e["ph"] == "f"}
+    assert starts and starts == finishes
+    # and the two replicas + the router each trace as their own process
+    pids = {e["pid"] for e in doc["traceEvents"]}
+    assert {0, 1, 999} <= pids
+    snap = obs.snapshot()
+    assert "serve_migrations_total" in snap
+    assert 'serve_migration_bytes_total{link="dcn"}' in snap
+
+
+# -- harvest / attainment --------------------------------------------------
+
+def test_harvest_exposes_ledger_pool_and_latency():
+    eng, _ = _run_engine(telemetry=True)
+    eng.obs.harvest(eng)
+    text = eng.obs.snapshot()
+    assert "serve_decode_tokens_total" in text
+    assert 'serve_flops_total{phase="decode"}' in text
+    assert 'serve_level_bytes_total{level="hbm"}' in text
+    assert "serve_pool_pages_in_use" in text
+    for seg in ("queue_wait", "prefill", "first_decode", "total"):
+        assert f'serve_ttft_seconds_bucket{{segment="{seg}"' in text
+    assert "serve_itl_seconds_count" in text
+    # harvesting again must not double-count anything
+    eng.obs.harvest(eng)
+    assert eng.obs.snapshot() == text
+
+
+def test_attainment_windows_name_the_binding_roof():
+    eng, _ = _run_engine(telemetry=True)
+    eng.obs.harvest(eng)
+    windows = eng.obs.attainment.windows
+    assert windows, "a 6-token run must close at least one window"
+    for w in windows:
+        assert w.binding_roof in w.roofs
+        assert w.dt_s > 0 and w.tokens > 0
+        assert w.flops_per_s > 0
+        # attainment is flops over the per-level roof, so the binding
+        # (lowest) roof carries the HIGHEST attainment fraction
+        assert w.fraction == pytest.approx(
+            max(v for v in w.attainment.values()))
+        assert w.fraction == pytest.approx(
+            w.flops_per_s / w.roofs[w.binding_roof])
+    text = eng.obs.snapshot()
+    assert "serve_roofline_attainment{level=" in text
+    assert "serve_roofline_binding{roof=" in text
+    assert "serve_attained_flops_per_s" in text
+
+
+def test_telemetry_default_off_leaves_no_hooks():
+    cfg, params = _model()
+    eng = Engine(cfg, params, _ecfg())
+    assert eng.obs is None
+    gen = GenerateConfig(max_new_tokens=4)
+    eng.submit(_prompts(cfg, n=1)[0], gen)
+    eng.run()
+    assert eng._sched.obs is None
+
+
+# -- overhead --------------------------------------------------------------
+
+def test_tracing_overhead_within_bar():
+    """Traced wall within 1.25x of untraced (min-of-3 each side; smoke
+    walls on shared runners are noisy, so the estimator is the standard
+    min-latency one and the whole check retries)."""
+    _run_engine(telemetry=False)                  # compile warm-up
+    _run_engine(telemetry=True)
+
+    def wall(telemetry):
+        t0 = time.perf_counter()
+        _run_engine(telemetry=telemetry)
+        return time.perf_counter() - t0
+
+    for attempt in range(3):
+        base = min(wall(False) for _ in range(3))
+        traced = min(wall(True) for _ in range(3))
+        if traced / base <= 1.25:
+            return
+    raise AssertionError(
+        f"traced wall {traced * 1e3:.1f}ms exceeds 1.25x the untraced "
+        f"{base * 1e3:.1f}ms on every attempt")
